@@ -1,0 +1,94 @@
+"""Fig. 3 reproduction: multi-tenant co-location.
+
+(a) co-running two models raises throughput 25%+ while each model's
+    latency degrades only 5-10%;
+(b) across ~250 co-location combinations, ~90% of pairs show < 17%
+    latency degradation.
+
+Demand vectors come from the cost model over the assigned archs at small-
+query serving operating points (the survey's premise: a lone query cannot
+saturate the accelerator — ResNet's 4 GFLOPs vs 130 TFLOPS — so each
+stream carries a sub-1.0 occupancy; see costmodel.stream_occupancy).
+Fig. 3a is measured arrival-limited, as in the survey: the offered load
+modestly exceeds single-tenant capacity and co-location absorbs it.
+"""
+from __future__ import annotations
+
+import copy
+import itertools
+
+import numpy as np
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.costmodel import estimate_decode, estimate_prefill, stream_occupancy
+from repro.core.misd import Job, pairwise_degradation
+from repro.core.sisd import run_multi_tenant, run_single_tenant
+
+N_CHIPS = 8
+
+
+def tenant_profiles():
+    """(name, demand, service_s) small-query operating points."""
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if cfg.param_count() > 100e9:
+            continue  # giants need SIMD scale-out, not an 8-chip meshlet
+        points = []
+        if cfg.supports_decode:
+            points += [("decode-b4", estimate_decode(cfg, 4, 4096,
+                                                     n_chips=N_CHIPS), 4),
+                       ("decode-b8", estimate_decode(cfg, 8, 8192,
+                                                     n_chips=N_CHIPS), 8),
+                       ("decode-b16", estimate_decode(cfg, 16, 8192,
+                                                      n_chips=N_CHIPS), 16)]
+        points += [("prefill-b1", estimate_prefill(cfg, 1, 2048,
+                                                   n_chips=N_CHIPS), 1)]
+        for kind, est, b in points:
+            occ = stream_occupancy(b)
+            out.append((f"{arch}:{kind}", est.demand_at(occ), est.latency_s))
+    return out
+
+
+def run(report):
+    tenants = tenant_profiles()
+
+    # --- (b): pairwise degradation across all combinations -----------------
+    degs = []
+    for (n1, d1, s1), (n2, d2, s2) in itertools.product(tenants, tenants):
+        degs.append(pairwise_degradation(d1, d2))
+    degs = np.asarray(degs)
+    frac_under_17 = float((degs < 1.17).mean())
+    p90 = float(np.percentile(degs, 90))
+    report("fig3b_pairs", len(degs), "co-location pairs evaluated")
+    report("fig3b_frac_under_17pct", round(frac_under_17, 3),
+           "survey: ~0.9 of 250 combos < 17% degradation")
+    report("fig3b_p90_degradation", round(p90, 3),
+           "90th-percentile latency inflation")
+
+    # --- (a): arrival-limited throughput for a representative mixed pair ---
+    # pick a compute-leaning and a memory-leaning tenant (GoogLeNet+ResNet
+    # analogue), offer 1.5x single-tenant capacity
+    comp = max(tenants, key=lambda t: t[1][0] - t[1][1])
+    memb = max(tenants, key=lambda t: t[1][1] - t[1][0])
+    (n1, d1, s1), (n2, d2, s2) = comp, memb
+    mean_s = (s1 + s2) / 2
+    gap = mean_s / 1.5  # offered load = 1.5x serial capacity
+    jobs = []
+    for i in range(300):
+        name, dem, svc = (n1, d1, s1) if i % 2 else (n2, d2, s2)
+        jobs.append(Job(i, name, dem, svc, arrival=i * gap))
+    single = run_single_tenant(copy.deepcopy(jobs))
+    multi = run_multi_tenant(copy.deepcopy(jobs), max_tenants=2)
+    tput_gain = multi.qps / single.qps - 1.0
+    lat_deg = multi.mean_slowdown() - 1.0
+    report("fig3a_pair", f"{n1}|{n2}", "compute-bound + memory-bound pair")
+    report("fig3a_throughput_gain", round(tput_gain, 3),
+           "survey: >= +25% QPS from co-location")
+    report("fig3a_latency_degradation", round(lat_deg, 3),
+           "survey: 5-10% per-model latency cost")
+    return {
+        "frac_under_17": frac_under_17,
+        "tput_gain": tput_gain,
+        "lat_deg": lat_deg,
+    }

@@ -1,0 +1,66 @@
+"""Fig. 7 reproduction: capacity-driven DLRM scale-out ([26] Lui et al.).
+
+A TB-scale DLRM cannot fit one host; sharding embedding tables across N
+nodes adds lookup fan-out traffic (the survey's RPC pattern; all_to_all
+under pjit here). We sweep N and report fit, per-query latency, and the
+communication share — reproducing the paper's observation that scale-out
+is capacity-driven (you pay latency for memory capacity).
+
+Also includes the heterogeneous-memory alternative ([47][49]): HBM+host
+tiering on fewer nodes at Zipf access locality.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.dlrm import CONFIG as DLRM
+from repro.core.costmodel import WorkEstimate
+from repro.core.hardware import TPU_V5E
+from repro.core.simd.embedding import lookup_traffic_bytes
+from repro.core.simd.offload import plan_offload
+
+BATCH = 256
+
+
+def scale_out_estimate(n_nodes: int) -> dict:
+    table_bytes = DLRM.embedding_params() * 4.0
+    per_node = table_bytes / n_nodes
+    fits = per_node <= 0.8 * TPU_V5E.hbm_bytes
+    mlp_flops = 2.0 * DLRM.mlp_params() * BATCH
+    # each node scans its shard of lookups; traffic = gathered rows
+    traffic = lookup_traffic_bytes(DLRM, BATCH) * (n_nodes - 1) / max(n_nodes, 1)
+    est = WorkEstimate(
+        flops=mlp_flops,
+        hbm_bytes=per_node + BATCH * DLRM.num_tables * DLRM.multi_hot
+        * DLRM.embed_dim * 4.0 / n_nodes,
+        collective_bytes=traffic,
+        n_chips=n_nodes,
+    )
+    return {"fits": fits, "latency_s": est.latency_s,
+            "comm_share": est.collective_s / est.latency_s if est.latency_s else 0}
+
+
+def run(report):
+    table_gb = DLRM.embedding_params() * 4 / 2 ** 30
+    report("fig7_table_size_gb", round(table_gb, 1),
+           f"{DLRM.num_tables} tables x {DLRM.rows_per_table} rows")
+    first_fit = None
+    for n in (1, 2, 4, 8, 16, 32, 64):
+        r = scale_out_estimate(n)
+        if r["fits"] and first_fit is None:
+            first_fit = n
+        report(f"fig7_nodes_{n}",
+               "fits" if r["fits"] else "OOM",
+               f"latency={r['latency_s']*1e6:.1f}us comm_share={r['comm_share']:.2f}")
+    report("fig7_min_nodes", first_fit, "capacity-driven scale-out point")
+
+    # heterogeneous-memory alternative on ONE node
+    # production CTR traffic is strongly skewed; alpha ~1.05 ([47] Fig. 4)
+    plan = plan_offload(
+        DLRM.num_tables * DLRM.rows_per_table, DLRM.embed_dim * 4,
+        hbm_budget_bytes=0.5 * TPU_V5E.hbm_bytes, alpha=1.05)
+    report("fig7_offload_hit_rate", round(plan.hit_rate, 3),
+           "[47][49]: hot-row HBM cache over Zipf accesses")
+    report("fig7_offload_slowdown", round(plan.slowdown_vs_hbm, 2),
+           "effective slowdown vs all-HBM (raw PCIe gap ~25x)")
+    return {"min_nodes": first_fit, "offload_slowdown": plan.slowdown_vs_hbm}

@@ -1,0 +1,69 @@
+"""Wall-clock microbenchmarks of the real jitted steps (reduced models on
+the CPU container): us_per_call for prefill/decode/train across the block
+families, plus the MISD simulator's own scheduling overhead."""
+from __future__ import annotations
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import prefill_step, serve_step
+from repro.models import init_cache
+from repro.training import init_adamw, train_step
+
+
+def _time(fn, *args, iters=10, warmup=2):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def run(report):
+    for arch in ("granite-8b", "mamba2-1.3b", "recurrentgemma-9b",
+                 "grok-1-314b"):
+        cfg = get_config(arch).reduced()
+        params = init_params(cfg, jax.random.key(0))
+        b, s, w = 4, 64, 128
+        rng = np.random.default_rng(0)
+        batch = {"tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+
+        pf = jax.jit(partial(prefill_step, cfg, window=w))
+        us = _time(pf, params, batch)
+        report(f"micro_prefill_{arch}", round(us, 1),
+               f"b={b} s={s} tok/s={b*s/(us/1e6):,.0f}")
+
+        _, cache = pf(params, batch)
+        dec = jax.jit(partial(serve_step, cfg))
+        dbatch = {"tokens": jnp.zeros((b, 1), jnp.int32)}
+        us = _time(dec, params, cache, dbatch)
+        report(f"micro_decode_{arch}", round(us, 1),
+               f"b={b} tok/s={b/(us/1e6):,.0f}")
+
+        opt = init_adamw(params)
+        tbatch = dict(batch, labels=batch["tokens"])
+        ts = jax.jit(partial(train_step, cfg))
+        us = _time(ts, params, opt, tbatch, iters=3)
+        report(f"micro_train_{arch}", round(us, 1),
+               f"b={b} s={s} tok/s={b*s/(us/1e6):,.0f}")
+
+    # scheduler overhead: events/sec of the MISD simulator
+    from repro.core.misd import Device, FIFOScheduler, Job, MISDSimulator
+
+    jobs = [Job(i, "m", (0.5, 0.5), 0.01, arrival=i * 0.001)
+            for i in range(2000)]
+    t0 = time.perf_counter()
+    MISDSimulator([Device("d", 4)], FIFOScheduler()).run(jobs)
+    dt = time.perf_counter() - t0
+    report("micro_sim_jobs_per_s", round(2000 / dt, 0),
+           "MISD event-driven simulator throughput")

@@ -1,0 +1,57 @@
+"""Generate the data-driven sections of EXPERIMENTS.md (§Dry-run table,
+§Roofline table) from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report > results/report.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import analyze, load_records
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def dryrun_table() -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL | — | — | — |")
+            continue
+        mem = r.get("memory_analysis") or {}
+        arg_gb = r["arg_bytes_per_device"] / 2 ** 30
+        coll = r["collective_total_per_device"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok "
+            f"({r['compile_s']:.0f}s) | {arg_gb:.2f} | "
+            f"{r['flops']:.2e} | {coll:.2e} |")
+    hdr = ("| arch | shape | mesh | compile | args GiB/dev | "
+           "HLO FLOPs/dev | collective B/dev |\n|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def roofline_table() -> str:
+    from benchmarks.roofline import markdown_table
+
+    rows = [analyze(r) for r in load_records("single")]
+    return markdown_table(rows)
+
+
+def main():
+    print("## Generated: §Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Generated: §Roofline table (single pod, 256 chips)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one function per survey table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig4,...]
+
+Prints ``name,value,derived`` CSV rows; each module reproduces one of the
+survey's quantitative artifacts over our own serving stack (DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def report(name, value, derived=""):
+    print(f"{name},{value},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig3,fig4,table1,fig7,roofline,micro")
+    args = ap.parse_args()
+    want = set(args.only.split(",")) if args.only else None
+
+    def on(key):
+        return want is None or key in want
+
+    print("name,value,derived")
+    if on("fig3"):
+        from benchmarks import fig3_colocation
+
+        fig3_colocation.run(report)
+    if on("fig4"):
+        from benchmarks import fig4_power
+
+        fig4_power.run(report)
+    if on("table1"):
+        from benchmarks import table1_schedulers
+
+        table1_schedulers.run(report)
+    if on("fig7"):
+        from benchmarks import fig7_dlrm
+
+        fig7_dlrm.run(report)
+    if on("roofline"):
+        from benchmarks import roofline
+
+        roofline.run(report)
+    if on("micro"):
+        from benchmarks import microbench
+
+        microbench.run(report)
+
+
+if __name__ == "__main__":
+    main()

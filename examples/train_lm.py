@@ -1,0 +1,75 @@
+"""End-to-end training driver example: train a ~100M-param member of an
+assigned family for a few hundred steps on synthetic structured data and
+watch the loss drop, with checkpoint/restore.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+(This drives the same repro.launch.train entry the cluster launcher uses;
+~100M params keeps a CPU run tractable. On real hardware drop --reduced
+and add the production mesh.)
+"""
+import argparse
+import dataclasses
+import functools
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.training import TokenPipeline, init_adamw, train_step
+from repro.training.checkpoint import latest_step, restore_into, save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M-param member of the granite (llama-arch) family
+    cfg = dataclasses.replace(
+        get_config("granite-8b"),
+        num_layers=6, d_model=512, num_heads=8, num_kv_heads=4, head_dim=64,
+        d_ff=1536, vocab_size=8192, dtype="float32")
+    print(f"training {cfg.param_count()/1e6:.1f}M-param {cfg.arch_type} model "
+          f"for {args.steps} steps")
+
+    params = init_params(cfg, jax.random.key(0))
+    opt = init_adamw(params)
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=0)
+    step_fn = jax.jit(functools.partial(
+        train_step, cfg, peak_lr=6e-4, total_steps=args.steps))
+
+    t0 = time.time()
+    losses = []
+    for step, batch in enumerate(pipe.batches()):
+        if step >= args.steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["ce"]))
+        if step % 25 == 0:
+            tok_s = (step + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {step:4d}  ce={losses[-1]:.4f}  tok/s={tok_s:,.0f}")
+    save_checkpoint(args.ckpt, args.steps, params)
+    print(f"ce {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}  "
+          f"(checkpoint at {args.ckpt})")
+    # restore sanity
+    r = restore_into(args.ckpt, latest_step(args.ckpt),
+                     jax.eval_shape(lambda: params))
+    assert all(np.allclose(a, b) for a, b in
+               zip(jax.tree.leaves(r), jax.tree.leaves(params)))
+    print("checkpoint restore verified")
+
+
+if __name__ == "__main__":
+    main()

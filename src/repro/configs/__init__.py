@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    ASSIGNED_ARCHS,
+    INPUT_SHAPES,
+    ArchConfig,
+    ShapeConfig,
+    all_configs,
+    applicable_shapes,
+    get_config,
+    get_shape,
+)
+
+__all__ = [
+    "ASSIGNED_ARCHS",
+    "INPUT_SHAPES",
+    "ArchConfig",
+    "ShapeConfig",
+    "all_configs",
+    "applicable_shapes",
+    "get_config",
+    "get_shape",
+]

@@ -1,0 +1,23 @@
+"""HuBERT X-Large — encoder-only audio transformer (w2v2 arch)
+[arXiv:2106.07447]. Conv feature extractor is a stubbed frontend:
+input_specs() provides precomputed 1280-d frame embeddings."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    arch_type="audio",
+    num_layers=48,
+    d_model=1280,
+    num_heads=16,
+    num_kv_heads=16,  # full MHA
+    d_ff=5120,
+    vocab_size=504,  # masked-unit prediction codebook
+    is_encoder=True,
+    causal=False,
+    modality="audio",
+    rope_variant="none",
+    mlp_variant="gelu",
+    norm="layernorm",
+    sliding_window_decode=0,
+    citation="arXiv:2106.07447",
+)

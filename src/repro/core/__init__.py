@@ -1,0 +1,13 @@
+"""The survey's contribution — the SISD/MISD/SIMD/MIMD taxonomy — as a
+composable system: cost model + hardware constants at the root, one
+subpackage per quadrant (misd/, simd/, mimd/) and the SISD baseline."""
+from repro.core.costmodel import (
+    WorkEstimate,
+    estimate,
+    estimate_decode,
+    estimate_prefill,
+    estimate_train,
+    model_flops,
+)
+from repro.core.hardware import CHIPS, TPU_V5E
+from repro.core.paradigm import Deployment, Paradigm, classify, executor_for

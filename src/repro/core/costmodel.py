@@ -1,0 +1,164 @@
+"""Analytic latency/resource model for inference and training work.
+
+Every scheduling layer of the taxonomy consumes this model:
+  * MISD: per-job demand vectors (compute vs memory) -> interference
+  * MIMD: per-(model, shape) latency estimates -> routing
+  * SIMD: collective traffic per sharding layout -> scale-out efficiency
+  * benchmarks: Fig. 3 / Fig. 4 reproductions
+
+The model is the standard three-term roofline over the chip constants in
+``repro.core.hardware``; the container has no TPU, so the simulator's
+"wall clock" is this model's output (trends are the reproduction target —
+DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.hardware import Chip, DISPATCH_OVERHEAD_S, TPU_V5E
+
+
+@dataclass(frozen=True)
+class WorkEstimate:
+    """Roofline terms for one step of work on a device (group)."""
+
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float = 0.0
+    chip: Chip = TPU_V5E
+    n_chips: int = 1
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / (self.chip.peak_flops * self.n_chips)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / (self.chip.hbm_bw * self.n_chips)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.chip.link_bw * self.n_chips)
+
+    @property
+    def latency_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s) + DISPATCH_OVERHEAD_S
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def demand(self) -> tuple:
+        """(compute, memory) demand fractions in [0,1] — how much of the
+        device each resource class is busy during this job's latency.
+        Input to the MISD interference model."""
+        lat = self.latency_s
+        return (min(1.0, self.compute_s / lat), min(1.0, self.memory_s / lat))
+
+    def demand_at(self, occupancy: float) -> tuple:
+        """Demand scaled by single-stream occupancy: a lone small query
+        cannot saturate a large accelerator (the survey's §3 premise —
+        ResNet's 4 GFLOPs vs 130 TFLOPS). Dependency stalls and dispatch
+        gaps leave the device idle `1-occupancy` of the time; co-tenants
+        fill those gaps."""
+        c, m = self.demand
+        return (c * occupancy, m * occupancy)
+
+
+def stream_occupancy(batch: int, *, half_sat: float = 16.0,
+                     floor: float = 0.30, cap: float = 0.95) -> float:
+    """Occupancy of a single inference stream as a function of batch size:
+    rises toward `cap` as batching amortizes dispatch/dependency stalls."""
+    return min(cap, floor + (1.0 - floor) * batch / (batch + half_sat))
+
+
+def _dtype_bytes(cfg) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def _attn_flops(cfg, batch: int, s_q: int, s_kv: int) -> float:
+    if not cfg.has_attention:
+        return 0.0
+    hd = cfg.resolved_head_dim
+    # score + value matmuls, causal halves the pair count for s_q == s_kv
+    pairs = s_q * s_kv * (0.5 if (cfg.causal and s_q == s_kv) else 1.0)
+    n_attn = cfg.num_layers
+    if cfg.arch_type == "hybrid":
+        pat = cfg.block_pattern or ("rglru", "rglru", "local_attn")
+        n_attn = cfg.num_layers * sum(b == "local_attn" for b in pat) // len(pat)
+        pairs = min(pairs, s_q * cfg.local_window)
+    return 4.0 * batch * n_attn * cfg.num_heads * pairs * hd
+
+
+def estimate_prefill(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
+                     n_chips: int = 1, collective_bytes: float = 0.0) -> WorkEstimate:
+    n_active = cfg.active_param_count()
+    flops = 2.0 * n_active * batch * seq + _attn_flops(cfg, batch, seq, seq)
+    wb = _dtype_bytes(cfg)
+    act_bytes = 12.0 * batch * seq * cfg.d_model * wb  # residual traffic
+    hbm = cfg.param_count() * wb + act_bytes
+    return WorkEstimate(flops, hbm, collective_bytes, chip, n_chips)
+
+
+def estimate_decode(cfg, batch: int, context: int, *, chip: Chip = TPU_V5E,
+                    n_chips: int = 1, window: int = 0,
+                    collective_bytes: float = 0.0) -> WorkEstimate:
+    n_active = cfg.active_param_count()
+    wb = _dtype_bytes(cfg)
+    kv_len = min(context, window) if window else context
+    flops = 2.0 * n_active * batch + _attn_flops(cfg, batch, 1, kv_len)
+    kv_bytes = 0.0
+    if cfg.has_attention:
+        n_attn = cfg.num_layers
+        if cfg.arch_type == "hybrid":
+            pat = cfg.block_pattern or ("rglru", "rglru", "local_attn")
+            n_attn = cfg.num_layers * sum(b == "local_attn" for b in pat) // len(pat)
+            kv_len = min(kv_len, cfg.local_window)
+        kv_bytes = (2.0 * batch * n_attn * kv_len * cfg.num_kv_heads
+                    * cfg.resolved_head_dim * wb)
+    if cfg.arch_type in ("ssm", "hybrid"):
+        # recurrent state read+write
+        state = batch * cfg.num_layers * cfg.d_model * 4 * 4.0
+        kv_bytes += state
+    hbm = cfg.param_count() * wb + kv_bytes
+    return WorkEstimate(flops, hbm, collective_bytes, chip, n_chips)
+
+
+def estimate_train(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
+                   n_chips: int = 1, collective_bytes: float = 0.0) -> WorkEstimate:
+    n_active = cfg.active_param_count()
+    flops = 6.0 * n_active * batch * seq + 3.0 * _attn_flops(cfg, batch, seq, seq)
+    wb = _dtype_bytes(cfg)
+    hbm = 3.0 * cfg.param_count() * (wb + 12) + 24.0 * batch * seq * cfg.d_model * wb
+    if collective_bytes == 0.0 and n_chips > 1:
+        collective_bytes = 2.0 * cfg.param_count() * 4  # grad all-reduce
+    return WorkEstimate(flops, hbm, collective_bytes, chip, n_chips)
+
+
+def estimate(cfg, shape, *, chip: Chip = TPU_V5E, n_chips: int = 1) -> WorkEstimate:
+    """Estimate for an assigned ShapeConfig."""
+    if shape.kind == "train":
+        return estimate_train(cfg, shape.global_batch, shape.seq_len,
+                              chip=chip, n_chips=n_chips)
+    if shape.kind == "prefill":
+        return estimate_prefill(cfg, shape.global_batch, shape.seq_len,
+                                chip=chip, n_chips=n_chips)
+    window = cfg.sliding_window_decode if shape.seq_len > 100_000 else 0
+    return estimate_decode(cfg, shape.global_batch, shape.seq_len,
+                           chip=chip, n_chips=n_chips, window=window)
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS for the roofline report: 6·N·D train, 2·N·D inference
+    (N = active params, D = tokens processed)."""
+    mult = 6.0 if shape.kind == "train" else 2.0
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    return mult * cfg.active_param_count() * tokens

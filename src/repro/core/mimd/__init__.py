@@ -1,0 +1,1 @@
+from repro.core.mimd.router import Instance, ServiceRouter

@@ -1,0 +1,84 @@
+"""MIMD service routing (survey §2, DLIS [42]): route inference queries
+across a cluster of model instances deployed on meshlets/pods.
+
+The router "understands different models' requirements and places one or
+multiple queries intelligently onto hardware": each model has an instance
+pool (replicas on meshlets); routing is least-loaded / power-of-two-choices
+over predicted completion time from the cost model. Autoscaling hooks
+grow/shrink pools from queue pressure — the data-center management layer
+the survey notes is underexplored for inference.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.costmodel import WorkEstimate
+from repro.core.misd.scheduler import Device, Job
+
+
+@dataclass
+class Instance:
+    """One deployed replica of a model on a meshlet."""
+
+    name: str
+    model: str
+    device: Device
+    queue_s: float = 0.0  # predicted backlog seconds
+
+    def predicted_completion(self, job: Job) -> float:
+        concurrency = len(self.device.running) + 1
+        return self.queue_s + job.service_s * concurrency / self.device.speed
+
+
+class ServiceRouter:
+    """Cluster-level query router over per-model instance pools."""
+
+    def __init__(self, policy: str = "least-loaded", seed: int = 0):
+        assert policy in ("least-loaded", "p2c", "round-robin")
+        self.policy = policy
+        self.pools: Dict[str, List[Instance]] = {}
+        self._rr: Dict[str, int] = {}
+        self._rng = random.Random(seed)
+
+    def register(self, inst: Instance):
+        self.pools.setdefault(inst.model, []).append(inst)
+
+    def route(self, job: Job) -> Optional[Instance]:
+        pool = self.pools.get(job.model)
+        if not pool:
+            return None
+        if self.policy == "round-robin":
+            i = self._rr.get(job.model, 0) % len(pool)
+            self._rr[job.model] = i + 1
+            chosen = pool[i]
+        elif self.policy == "p2c":
+            a, b = self._rng.sample(pool, k=min(2, len(pool)))
+            chosen = min((a, b), key=lambda x: x.predicted_completion(job))
+        else:  # least-loaded (random tie-break so equal loads spread out)
+            order = list(pool)
+            self._rng.shuffle(order)
+            chosen = min(order, key=lambda x: x.predicted_completion(job))
+        chosen.queue_s += job.service_s / chosen.device.speed
+        return chosen
+
+    def drain(self, inst: Instance, seconds: float):
+        inst.queue_s = max(0.0, inst.queue_s - seconds)
+
+    # -- autoscaling ---------------------------------------------------
+    def pressure(self, model: str) -> float:
+        pool = self.pools.get(model, [])
+        if not pool:
+            return float("inf")
+        return sum(i.queue_s for i in pool) / len(pool)
+
+    def want_scale(self, model: str, *, high_s: float = 1.0,
+                   low_s: float = 0.05) -> int:
+        """+1 = scale out, -1 = scale in, 0 = hold."""
+        p = self.pressure(model)
+        if p > high_s:
+            return 1
+        if p < low_s and len(self.pools.get(model, [])) > 1:
+            return -1
+        return 0

@@ -1,0 +1,18 @@
+from repro.core.misd.batching import BatchAccumulator, adaptive_batch_size
+from repro.core.misd.interference import (
+    InterferencePredictor,
+    pairwise_degradation,
+    progress_rates,
+)
+from repro.core.misd.partition import MeshPartitioner, Meshlet, PartitionPlan
+from repro.core.misd.scheduler import (
+    SCHEDULERS,
+    Device,
+    FIFOScheduler,
+    InterferenceAwareScheduler,
+    Job,
+    MISDSimulator,
+    PremaScheduler,
+    SJFScheduler,
+    SimResult,
+)

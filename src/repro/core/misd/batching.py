@@ -1,0 +1,62 @@
+"""Adaptive batching under SLA (survey §3.3.2, [8][4]).
+
+Batching raises device utilization (throughput) but inflates per-query
+latency; the right batch size depends on the model's roofline position and
+the SLA. ``adaptive_batch_size`` searches the batch dimension with the cost
+model; ``BatchAccumulator`` is the runtime piece: accumulate queries until
+either the target batch or the SLA-derived deadline is hit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.core.costmodel import estimate_decode, estimate_prefill
+
+
+def adaptive_batch_size(cfg, *, context: int, sla_s: float,
+                        kind: str = "decode", n_chips: int = 1,
+                        max_batch: int = 512) -> Tuple[int, float]:
+    """Largest batch whose step latency stays within the SLA budget.
+    Returns (batch, latency_s). Batch 1 is returned even if it misses."""
+    best, best_lat = 1, None
+    b = 1
+    while b <= max_batch:
+        est = (estimate_decode(cfg, b, context, n_chips=n_chips)
+               if kind == "decode"
+               else estimate_prefill(cfg, b, context, n_chips=n_chips))
+        if best_lat is None:
+            best, best_lat = b, est.latency_s
+        if est.latency_s <= sla_s:
+            best, best_lat = b, est.latency_s
+        else:
+            break
+        b *= 2
+    return best, best_lat
+
+
+@dataclass
+class BatchAccumulator:
+    """Deadline-bounded query accumulator."""
+
+    target_batch: int
+    deadline_s: float
+    pending: List = field(default_factory=list)
+    window_open: float = -1.0
+
+    def add(self, query, now: float) -> Optional[List]:
+        if not self.pending:
+            self.window_open = now
+        self.pending.append(query)
+        if len(self.pending) >= self.target_batch:
+            return self.flush()
+        return None
+
+    def poll(self, now: float) -> Optional[List]:
+        if self.pending and now - self.window_open >= self.deadline_s:
+            return self.flush()
+        return None
+
+    def flush(self) -> List:
+        out, self.pending = self.pending, []
+        return out

@@ -1,0 +1,116 @@
+"""MISD spatial resource management: meshlets (survey §3.3.2).
+
+GPU-side mechanisms (MPS SM-partitioning, MIG slices, gpulets [4]) map on
+TPU to partitioning the pod mesh into disjoint submeshes. A ``Meshlet`` is
+a rectangular slice of the device grid serving one tenant class in
+isolation (no interference across meshlets — that is the point of spatial
+partitioning). Reconfiguration carries a real cost (recompile + weight
+resharding), modelled after the survey's "several seconds" observation.
+
+``MeshPartitioner`` implements gpulet-style best-fit sizing: pick for each
+model the smallest meshlet whose predicted latency meets the SLA, then pack
+meshlets into the pod.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.costmodel import WorkEstimate, estimate_decode, estimate_prefill
+from repro.core.hardware import RECONFIG_COST_S, TPU_V5E
+from repro.core.misd.scheduler import Device
+
+
+@dataclass(frozen=True)
+class Meshlet:
+    """A rectangular submesh slice: (rows, cols) within the pod grid."""
+
+    name: str
+    shape: Tuple[int, int]
+    origin: Tuple[int, int] = (0, 0)
+
+    @property
+    def n_chips(self) -> int:
+        return self.shape[0] * self.shape[1]
+
+    def as_device(self, max_tenants: int = 4) -> Device:
+        # speed scales with chips (model-parallel within the meshlet)
+        return Device(self.name, max_tenants=max_tenants,
+                      speed=self.n_chips / 1.0)
+
+
+def _splits(pod_shape: Tuple[int, int], sizes: Sequence[int]) -> List[Meshlet]:
+    """Greedy guillotine packing of power-of-two meshlets into the pod."""
+    total = pod_shape[0] * pod_shape[1]
+    assert sum(sizes) <= total, (sizes, pod_shape)
+    out = []
+    row, col = 0, 0
+    for i, n in enumerate(sorted(sizes, reverse=True)):
+        rows = 2 ** (int(math.log2(n)) // 2)
+        cols = n // rows
+        if col + cols > pod_shape[1]:
+            row += rows
+            col = 0
+        assert row + rows <= pod_shape[0], "packing overflow"
+        out.append(Meshlet(f"meshlet{i}", (rows, cols), (row, col)))
+        col += cols
+    return out
+
+
+@dataclass
+class PartitionPlan:
+    meshlets: List[Meshlet]
+    assignment: Dict[str, str]  # model name -> meshlet name
+    reconfig_cost_s: float = 0.0
+
+
+class MeshPartitioner:
+    """gpulet-style spatial partitioner for a pod."""
+
+    def __init__(self, pod_shape: Tuple[int, int] = (16, 16)):
+        self.pod_shape = pod_shape
+        self.current: Optional[PartitionPlan] = None
+
+    def size_for_sla(self, cfg, *, batch: int, context: int,
+                     sla_s: float, kind: str = "decode") -> int:
+        """Smallest power-of-two chip count meeting the SLA (cost model)."""
+        n = 1
+        total = self.pod_shape[0] * self.pod_shape[1]
+        while n <= total:
+            est = (estimate_decode(cfg, batch, context, n_chips=n)
+                   if kind == "decode"
+                   else estimate_prefill(cfg, batch, context, n_chips=n))
+            # weights must also fit
+            wb = 2 if cfg.dtype == "bfloat16" else 4
+            fits = cfg.param_count() * wb <= n * TPU_V5E.hbm_bytes * 0.8
+            if est.latency_s <= sla_s and fits:
+                return n
+            n *= 2
+        return total
+
+    def plan(self, tenants: List[dict]) -> PartitionPlan:
+        """tenants: [{"name", "cfg", "batch", "context", "sla_s", "kind"}]"""
+        sizes, names = [], []
+        for t in tenants:
+            n = self.size_for_sla(
+                t["cfg"], batch=t["batch"], context=t["context"],
+                sla_s=t["sla_s"], kind=t.get("kind", "decode"))
+            sizes.append(n)
+            names.append(t["name"])
+        total = self.pod_shape[0] * self.pod_shape[1]
+        while sum(sizes) > total:  # shrink the largest ask until it packs
+            k = sizes.index(max(sizes))
+            sizes[k] //= 2
+        meshlets = _splits(self.pod_shape, sizes)
+        order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
+        assignment = {names[i]: meshlets[rank].name
+                      for rank, i in enumerate(order)}
+        cost = RECONFIG_COST_S if self.current is not None else 0.0
+        plan = PartitionPlan(meshlets, assignment, cost)
+        self.current = plan
+        return plan
+
+    def devices(self, max_tenants: int = 4) -> List[Device]:
+        assert self.current is not None
+        return [m.as_device(max_tenants) for m in self.current.meshlets]

@@ -1,0 +1,17 @@
+from repro.core.simd.embedding import (
+    batch_specs,
+    dlrm_forward,
+    init_dlrm,
+    lookup_traffic_bytes,
+    shard_specs,
+)
+from repro.core.simd.offload import OffloadPlan, effective_bandwidth, plan_offload, zipf_hit_rate
+from repro.core.simd.sharding import (
+    ShardingPolicy,
+    batch_pspecs,
+    cache_pspecs,
+    make_policy,
+    opt_pspecs,
+    param_pspecs,
+    to_shardings,
+)

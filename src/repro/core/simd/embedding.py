@@ -1,0 +1,109 @@
+"""Distributed DLRM inference (survey §4.3.1 Fig. 7, [26] Lui et al.).
+
+The survey's flagship SIMD workload: embedding tables dominate weights
+(80–95%) with almost no FLOPs. The paper's torch-RPC fan-out becomes a
+sharded table + collectives inside one pjit program here: tables live
+row-sharded on the `model` axis; lookups become a GSPMD gather whose data
+motion is exactly the RPC pattern of Fig. 7 (request ids out, embedding
+rows back).
+
+`dlrm_forward` is the full model (bottom MLP -> sparse lookups ->
+pairwise-interaction -> top MLP); `shard_specs` gives the deployment
+layout. The fig7 benchmark compares single-host (replicated) vs scale-out
+(sharded) rooflines with the cost model.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+F32 = jnp.float32
+
+
+def init_dlrm(cfg, key):
+    assert cfg.bottom_mlp[-1] == cfg.embed_dim, (
+        "bottom MLP must project dense features to embed_dim")
+    ks = jax.random.split(key, 4)
+    emb = jax.random.normal(
+        ks[0], (cfg.num_tables, cfg.rows_per_table, cfg.embed_dim), F32
+    ) * 0.01
+
+    def mlp(key, dims):
+        keys = jax.random.split(key, len(dims) - 1)
+        return [
+            {
+                "w": jax.random.normal(k, (a, b), F32) * (a ** -0.5),
+                "b": jnp.zeros((b,), F32),
+            }
+            for k, a, b in zip(keys, dims[:-1], dims[1:])
+        ]
+
+    bot_dims = (cfg.num_dense_features,) + cfg.bottom_mlp
+    num_int = (cfg.num_tables + 1) * cfg.num_tables // 2
+    top_dims = (num_int + cfg.embed_dim,) + cfg.top_mlp
+    return {
+        "tables": emb,
+        "bottom": mlp(ks[1], bot_dims),
+        "top": mlp(ks[2], top_dims),
+    }
+
+
+def _mlp_apply(layers, x, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def dlrm_forward(cfg, params, batch):
+    """batch: dense (B, 13) float; sparse (B, T, multi_hot) int32 row ids.
+    Returns CTR logit (B,)."""
+    dense, sparse = batch["dense"], batch["sparse"]
+    b = dense.shape[0]
+    bot = _mlp_apply(params["bottom"], dense, final_act=True)  # (B, E)
+
+    # sparse lookups: gather rows from each (sharded) table, sum multi-hot
+    # tables: (T, R, E); sparse: (B, T, M)
+    def lookup(table, ids):  # (R, E), (B, M)
+        return jnp.take(table, ids, axis=0).sum(axis=1)  # (B, E)
+
+    emb = jax.vmap(lookup, in_axes=(0, 1), out_axes=1)(
+        params["tables"], sparse)  # (B, T, E)
+
+    # pairwise dot interaction over [bottom] + T embeddings
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # (B, T+1, E)
+    inter = jnp.einsum("bte,bse->bts", z, z)  # (B, T+1, T+1)
+    iu, ju = np.triu_indices(z.shape[1], k=1)
+    inter_flat = inter[:, iu, ju]  # (B, T(T+1)/2)
+
+    top_in = jnp.concatenate([bot, inter_flat], axis=-1)
+    out = _mlp_apply(params["top"], top_in)
+    return out[:, 0]
+
+
+def shard_specs(cfg) -> Dict:
+    """Deployment layout: tables row-sharded over `model` (the scale-out
+    dimension of [26]); MLPs replicated (they are tiny)."""
+    return {
+        "tables": P(None, "model", None),
+        "bottom": [{"w": P(None, None), "b": P(None)} for _ in
+                   range(len(cfg.bottom_mlp))],
+        "top": [{"w": P(None, None), "b": P(None)} for _ in
+                range(len(cfg.top_mlp))],
+    }
+
+
+def batch_specs(cfg) -> Dict:
+    return {"dense": P("data", None), "sparse": P("data", None, None)}
+
+
+def lookup_traffic_bytes(cfg, batch: int) -> float:
+    """Collective traffic per query batch for the sharded layout — the
+    'RPC fan-out' volume of Fig. 7: each lookup returns one embed_dim row."""
+    rows = batch * cfg.num_tables * cfg.multi_hot
+    return rows * cfg.embed_dim * 4.0

@@ -1,0 +1,69 @@
+"""Heterogeneous-memory inference (survey §4.3.2, [25][47][49]).
+
+TPU analogue of the DRAM/SSD embedding tier: HBM <-> host-DRAM offload.
+Hot embedding rows are cached in HBM; cold rows stream from host memory
+over PCIe-class links. The policy question ([47] FlashEmbedding, [49]
+RecSSD) is placement + caching; with Zipf-distributed accesses a small HBM
+cache yields near-DRAM average latency — reproduced by
+``effective_bandwidth``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+HBM_BW = 819e9
+HOST_BW = 32e9  # PCIe-class host link
+SSD_BW = 3e9
+
+
+@dataclass
+class TierSpec:
+    name: str
+    bandwidth: float
+    capacity_bytes: float
+
+
+def zipf_hit_rate(cache_rows: int, total_rows: int, alpha: float = 0.8) -> float:
+    """P(access hits the `cache_rows` hottest rows) under Zipf(alpha)."""
+    if cache_rows >= total_rows:
+        return 1.0
+    # harmonic approximations
+    def h(n):
+        if alpha == 1.0:
+            return math.log(n) + 0.5772
+        return (n ** (1 - alpha) - 1) / (1 - alpha) + 1
+    return h(cache_rows) / h(total_rows)
+
+
+def effective_bandwidth(hbm_frac: float, total_rows: int,
+                        alpha: float = 0.8, cold_bw: float = HOST_BW) -> float:
+    """Average row-fetch bandwidth with the hottest `hbm_frac` rows in HBM."""
+    hit = zipf_hit_rate(int(hbm_frac * total_rows), total_rows, alpha)
+    # harmonic mean of tier bandwidths weighted by miss ratio
+    return 1.0 / (hit / HBM_BW + (1 - hit) / cold_bw)
+
+
+@dataclass
+class OffloadPlan:
+    hbm_rows: int
+    host_rows: int
+    hit_rate: float
+    effective_bw: float
+    slowdown_vs_hbm: float
+
+
+def plan_offload(table_rows: int, row_bytes: int, hbm_budget_bytes: float,
+                 alpha: float = 0.8, cold_bw: float = HOST_BW) -> OffloadPlan:
+    hbm_rows = min(table_rows, int(hbm_budget_bytes // row_bytes))
+    hit = zipf_hit_rate(hbm_rows, table_rows, alpha)
+    eff = 1.0 / (hit / HBM_BW + (1 - hit) / cold_bw)
+    return OffloadPlan(
+        hbm_rows=hbm_rows,
+        host_rows=table_rows - hbm_rows,
+        hit_rate=hit,
+        effective_bw=eff,
+        slowdown_vs_hbm=HBM_BW / eff,
+    )

@@ -1,0 +1,245 @@
+"""SIMD model-parallel sharding rules (survey §4: "efficient model
+sharding" is the crux of distributed inference).
+
+Maps every param/cache/batch leaf to a ``PartitionSpec`` over the
+production mesh axes:
+
+  * `model`  — tensor-parallel axis: FFN hidden, attention projections,
+    vocab, expert hidden (or the expert axis under expert-parallel).
+  * `data`   — batch for activations; FSDP-style second weight axis for
+    models too large for 1-D sharding (grok-1, llama4: params/16 > HBM).
+  * `pod`    — outer data-parallel axis (multi-pod); params replicated
+    across pods.
+
+Dims are sharded only when divisible by the axis size — the fallback is
+replication, which keeps every (arch x shape x mesh) combination lowering;
+the roofline pass then shows where replication hurts (hillclimb targets).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hardware import TPU_V5E
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    model_axis: str = "model"
+    data_axis: str = "data"
+    batch_axes: Tuple[str, ...] = ("data",)  # ("pod","data") multi-pod
+    fsdp: bool = False  # 2-D weight sharding (data x model)
+    expert_parallel: bool = False
+    model_size: int = 16
+    data_size: int = 16
+    kv_shard: str = "hd"  # "hd" | "seq" (flash-decoding length-parallel)
+
+
+def make_policy(cfg, mesh: Mesh, *, fsdp: Optional[bool] = None) -> ShardingPolicy:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = axes.get("model", 1)
+    data_n = axes.get("data", 1)
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    if fsdp is None:
+        wb = 2 if cfg.dtype == "bfloat16" else 4
+        per_dev = cfg.param_count() * wb / max(model_n, 1)
+        fsdp = per_dev > 0.5 * TPU_V5E.hbm_bytes
+    return ShardingPolicy(
+        batch_axes=batch_axes,
+        fsdp=fsdp,
+        expert_parallel=cfg.moe_expert_parallel,
+        model_size=model_n,
+        data_size=data_n,
+    )
+
+
+def _div(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def _key_path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(f"[{p.idx}]")
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+# weight-name classes
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_gate_branch",
+        "w_lin_branch", "w_a", "w_x", "lm_head"}  # (in, OUT) -> model on -1
+_ROW = {"wo", "w_down", "out_proj", "w_out"}  # (IN, out) -> model on -2
+_VEC_MODEL = {"Lambda", "b_a", "b_x", "norm_scale"}  # sharded feature vecs
+
+
+def _param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
+                pol: ShardingPolicy, stacked: bool):
+    name = names[-1]
+    nd = len(shape)
+    lead = ("layer",) if stacked else ()  # placeholder, replaced by None
+    m, d = pol.model_size, pol.data_size
+
+    def out(*spec):
+        spec = (None,) * len(lead) + spec
+        spec = spec + (None,) * (nd - len(spec))
+        assert len(spec) == nd, (names, shape, spec)
+        return P(*spec)
+
+    core = shape[len(lead):]
+
+    if name == "embed":
+        v, dm = core
+        sv = "model" if _div(v, m) else None
+        sd = "data" if (pol.fsdp and _div(dm, d)) else None
+        return out(sv, sd)
+    if name == "router":
+        return out(None, None)
+    if name in ("conv_w",):
+        c = core[-1]
+        return out(None, "model" if _div(c, m) else None)
+    if name in _VEC_MODEL and len(core) == 1:
+        return out("model" if _div(core[0], m) else None)
+    if name in ("A_log", "D", "dt_bias", "scale", "bias"):
+        return out(*([None] * len(core)))
+    if name in _COL or name in _ROW:
+        if len(core) == 3:  # MoE expert weights (E, d, ff) / (E, ff, d)
+            e = core[0]
+            if pol.expert_parallel and _div(e, m):
+                se = "model"
+                sd = ("data" if (pol.fsdp and _div(core[1], d)) else None)
+                return out(se, sd, None)
+            # ff-sharded experts (+ FSDP second axis on d)
+            ff_ax = 2 if name in _COL else 1
+            d_ax = 1 if name in _COL else 2
+            spec3 = [None, None, None]
+            if _div(core[ff_ax], m):
+                spec3[ff_ax] = "model"
+            if pol.fsdp and _div(core[d_ax], d):
+                spec3[d_ax] = "data"
+            return out(*spec3)
+        if len(core) == 2:
+            o_ax = 1 if name in _COL else 0
+            i_ax = 1 - o_ax
+            spec2 = [None, None]
+            if _div(core[o_ax], m):
+                spec2[o_ax] = "model"
+            if pol.fsdp and _div(core[i_ax], d):
+                spec2[i_ax] = "data"
+            return out(*spec2)
+    return out(*([None] * len(core)))
+
+
+def param_pspecs(cfg, param_tree, pol: ShardingPolicy):
+    """PartitionSpec tree matching ``param_tree`` (arrays or SDS)."""
+
+    def spec_for(path, leaf):
+        names = _key_path_names(path)
+        stacked = "body" in names  # scanned stacks carry a leading layer dim
+        return _param_spec(names, tuple(leaf.shape), pol, stacked)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(param_tree)
+    return tdef.unflatten([spec_for(p, l) for p, l in flat])
+
+
+def opt_pspecs(cfg, opt_tree, pol: ShardingPolicy):
+    """Optimizer state: ZeRO-style — force 2-D (fsdp) sharding so fp32
+    master/m/v never exceed per-device HBM."""
+    import dataclasses as _dc
+
+    pol2 = _dc.replace(pol, fsdp=True)
+
+    def spec_for(path, leaf):
+        names = _key_path_names(path)
+        if len(leaf.shape) == 0:  # step counter
+            return P()
+        stacked = "body" in names
+        return _param_spec(names, tuple(leaf.shape), pol2, stacked)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(opt_tree)
+    return tdef.unflatten([spec_for(p, l) for p, l in flat])
+
+
+def _batch_dim_spec(b: int, pol: ShardingPolicy, mesh_axes: dict):
+    n = 1
+    for a in pol.batch_axes:
+        n *= mesh_axes.get(a, 1)
+    if _div(b, n):
+        return pol.batch_axes if len(pol.batch_axes) > 1 else pol.batch_axes[0]
+    if _div(b, mesh_axes.get("data", 1)):
+        return "data"
+    return None
+
+
+def batch_pspecs(cfg, batch_tree, pol: ShardingPolicy, mesh: Mesh):
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_for(path, leaf):
+        names = _key_path_names(path)
+        name = names[-1]
+        shape = tuple(leaf.shape)
+        if name == "positions":  # (3, B, S)
+            bs = _batch_dim_spec(shape[1], pol, axes)
+            return P(None, bs, *([None] * (len(shape) - 2)))
+        if name == "pos":
+            return P(*([None] * len(shape)))
+        bs = _batch_dim_spec(shape[0], pol, axes)
+        return P(bs, *([None] * (len(shape) - 1)))
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(batch_tree)
+    return tdef.unflatten([spec_for(p, l) for p, l in flat])
+
+
+def cache_pspecs(cfg, cache_tree, pol: ShardingPolicy, mesh: Mesh):
+    """KV/state caches: batch dim -> batch axes; head_dim / feature dim ->
+    model axis (always divisible: hd in {64,80,128,256})."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = pol.model_size
+
+    def spec_for(path, leaf):
+        names = _key_path_names(path)
+        name = names[-1]
+        shape = tuple(leaf.shape)
+        stacked = "body" in names
+        off = 1 if stacked else 0
+        if name == "pos":
+            return P(*([None] * len(shape)))
+        core = shape[off:]
+        bs = _batch_dim_spec(core[0], pol, axes)
+        spec = [None] * off + [bs] + [None] * (len(core) - 1)
+        if name in ("k", "v"):
+            # (B, W, kv, hd): shard hd on model — or the sequence dim under
+            # the flash-decoding layout (perf lever "kv_seq")
+            if pol.kv_shard == "seq" and _div(core[1], m):
+                spec[off + 1] = "model"
+            elif _div(core[3], m):
+                spec[off + 3] = "model"
+        elif name in ("k_scale", "v_scale"):
+            # (B, W, kv): scales follow the W-dim layout of the int8 cache
+            if pol.kv_shard == "seq" and _div(core[1], m):
+                spec[off + 1] = "model"
+        elif name == "conv":
+            if _div(core[-1], m):
+                spec[off + len(core) - 1] = "model"
+        elif name == "state":
+            if len(core) == 4 and _div(core[1], m):  # ssd (B, H, P, N)
+                spec[off + 1] = "model"
+            elif len(core) == 2 and _div(core[1], m):  # rglru (B, L)
+                spec[off + 1] = "model"
+        return P(*spec)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return tdef.unflatten([spec_for(p, l) for p, l in flat])
+
+
+def to_shardings(mesh: Mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

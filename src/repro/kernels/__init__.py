@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the serving hot-spots (see DESIGN.md §7):
+flash_attention (prefill), decode_attention (memory-bound decode),
+rglru_scan (recurrent hybrid), int8_matmul (weight-only quantization).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec) with its jit wrapper in
+ops.py and pure-jnp oracle in ref.py.
+"""

@@ -1,0 +1,85 @@
+"""Pallas TPU decode attention (the memory-bound serving hot-spot).
+
+Single-query attention against a (rolling) KV cache: the decode step is
+bandwidth-bound (survey §3: the memory-intensive tenant class), so the
+kernel's job is streaming K/V through VMEM exactly once per step at full
+HBM bandwidth. Grid (batch*heads, kv_blocks): online softmax over kv
+blocks; invalid cache slots (slot >= n_valid) are masked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _decode_kernel(nvalid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, block_kv: int, scale: float):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(F32)  # (1, d)
+    k = k_ref[0].astype(F32)  # (bkv, d)
+    v = v_ref[0].astype(F32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=F32) * scale  # (1, bkv)
+    slot = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (1, block_kv), 1)
+    s = jnp.where(slot < nvalid_ref[0], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=F32))
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, n_valid, *, block_kv: int = 256,
+                     interpret: bool = False):
+    """q: (BH, 1, D); k/v: (BH, W, D); n_valid: (BH,) int32 — number of
+    valid cache slots per row. Returns (BH, 1, D)."""
+    bh, w, d = k.shape
+    block_kv = min(block_kv, w)
+    assert w % block_kv == 0, (w, block_kv)
+    scale = d ** -0.5
+    grid = (bh, w // block_kv)
+    kernel = functools.partial(_decode_kernel, block_kv=block_kv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, j: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), F32),
+            pltpu.VMEM((1,), F32),
+            pltpu.VMEM((1, d), F32),
+        ],
+        interpret=interpret,
+    )(n_valid, q, k, v)

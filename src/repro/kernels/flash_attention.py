@@ -1,0 +1,103 @@
+"""Pallas TPU flash attention (prefill hot-spot).
+
+Grid (batch*heads, q_blocks, kv_blocks), kv innermost. Online softmax
+statistics (m, l) and the output accumulator live in VMEM scratch and are
+carried across kv blocks; causal block skipping uses pl.when so skipped
+blocks cost nothing (contrast with the masked jnp path's full compute).
+BlockSpecs tile q/k/v into (block, head_dim) VMEM tiles; block sizes are
+multiples of 128 to keep MXU matmul dims hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, block_q: int, block_kv: int, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _body():
+        q = q_ref[0].astype(F32)  # (bq, d)
+        k = k_ref[0].astype(F32)  # (bkv, d)
+        v = v_ref[0].astype(F32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=F32) * scale  # (bq, bkv)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            kpos = ki * block_kv + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=F32))
+        m_scr[...] = m_new
+
+    if causal:
+        # skip fully-masked blocks: only run when the block intersects the
+        # causal lower triangle
+        @pl.when(qi * block_q + block_q - 1 >= ki * block_kv)
+        def _run():
+            _body()
+    else:
+        _body()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_kv: int = 128, interpret: bool = False):
+    """q/k/v: (BH, S, D) with matching head counts (GQA expansion happens in
+    ops.py). Returns (BH, S, D)."""
+    bh, s, d = q.shape
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    scale = d ** -0.5
+    grid = (bh, s // block_q, s // block_kv)
+    kernel = functools.partial(
+        _flash_kernel, causal=causal, block_q=block_q, block_kv=block_kv,
+        scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q, d), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

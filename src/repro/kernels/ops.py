@@ -1,0 +1,76 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernels run natively; on the CPU dry-run container
+``interpret=True`` executes the kernel bodies in Python for correctness
+validation (the models' default compute path stays pure-jnp — see
+DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import int8_matmul as _im
+from repro.kernels import rglru_scan as _rs
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    interpret: bool = None):
+    """q: (B, S, H, D); k/v: (B, S, Hkv, D) — GQA heads expanded here."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, s, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    o = _fa.flash_attention(qf, kf, vf, causal=causal, interpret=interpret)
+    return o.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def decode_attention(q, k_cache, v_cache, pos, *, interpret: bool = None):
+    """q: (B, 1, H, D); caches: (B, W, Hkv, D); pos: (B,) tokens written."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, _, h, d = q.shape
+    w, hkv = k_cache.shape[1], k_cache.shape[2]
+    rep = h // hkv
+    k = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
+    v = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    nv = jnp.repeat(jnp.minimum(pos, w).astype(jnp.int32), h)
+    o = _da.decode_attention(qf, kf, vf, nv, interpret=interpret)
+    return o.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rglru_scan(a, x, h0, *, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rs.rglru_scan_kernel(a, x, h0, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def int8_matmul(x, w_q, scales, *, interpret: bool = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _im.int8_matmul(x, w_q, scales, interpret=interpret)
+
+
+quantize_int8 = _im.quantize_int8

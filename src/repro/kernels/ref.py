@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ref_attention(q, k, v, *, causal: bool = True):
+    """q/k/v: (BH, S, D)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(F32), k.astype(F32)) * scale
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        mask = jnp.tril(jnp.ones((sq, sk), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(F32)).astype(q.dtype)
+
+
+def ref_decode_attention(q, k, v, n_valid):
+    """q: (BH, 1, D); k/v: (BH, W, D); n_valid: (BH,)."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(F32), k.astype(F32)) * scale
+    w = k.shape[1]
+    valid = jnp.arange(w)[None, None, :] < n_valid[:, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(F32)).astype(q.dtype)
+
+
+def ref_rglru_scan(a, x, h0):
+    """h_t = a_t h_{t-1} + x_t via associative scan. a/x: (B,S,L)."""
+    af, xf = a.astype(F32), x.astype(F32)
+    xf = xf.at[:, 0].add(af[:, 0] * h0.astype(F32))
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    _, h = jax.lax.associative_scan(combine, (af, xf), axis=1)
+    return h.astype(a.dtype), h[:, -1].astype(h0.dtype)
+
+
+def ref_int8_matmul(x, w_q, scales):
+    w = w_q.astype(F32) * scales[None, :].astype(F32)
+    return (x.astype(F32) @ w).astype(x.dtype)

@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks device count on first init).
+# Set only here — smoke tests and benches see the real single device.
+# Extra flags append (e.g. the bf16-all-reduce perf lever passes
+# XLA_FLAGS=--xla_allow_excess_precision=false; EXPERIMENTS.md §Perf).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh with ShapeDtypeStruct inputs (no
+allocation), then record memory/cost/collective analysis for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape decode_32k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Results land in results/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, applicable_shapes, get_config, get_shape
+from repro.core.simd.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    make_policy,
+    opt_pspecs,
+    param_pspecs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    decode_cache_specs,
+    decode_window,
+    input_specs,
+    opt_state_specs,
+)
+from repro.models import param_specs
+from repro.serving.engine import prefill_step, serve_step
+from repro.training.train import train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}\s/#_.-]+\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+# ring-algorithm traffic multiplier per collective kind
+_COLL_MULT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic (bytes) by op kind, from result buffer
+    sizes of every collective op in the SPMD module (methodology in
+    EXPERIMENTS.md §Dry-run)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        result_types, kind = m.group(1), m.group(2).lower()
+        if m.group(3):  # -start; the matching bare op was already skipped
+            pass
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(result_types):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + nbytes * _COLL_MULT[kind]
+    return out
+
+
+def sharded_bytes(sds_tree, pspec_tree, mesh) -> float:
+    """Analytic per-device bytes of a sharded pytree."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0.0
+    for sds, spec in zip(jax.tree.leaves(sds_tree),
+                         jax.tree.leaves(pspec_tree, is_leaf=lambda x: isinstance(x, P))):
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                denom *= axes.get(a, 1)
+        total += sds.size * sds.dtype.itemsize / denom
+    return total
+
+
+def build(cfg, shape, mesh, *, accum: int = 8, fsdp=None,
+          opts: frozenset = frozenset()):
+    """Returns (jitted_fn, example_args_SDS, arg_bytes_per_device)."""
+    import dataclasses as _dc
+
+    pol = make_policy(cfg, mesh, fsdp=fsdp)
+    if "kv_seq" in opts:
+        pol = _dc.replace(pol, kv_shard="seq")
+    params_sds = param_specs(cfg)
+    p_spec = param_pspecs(cfg, params_sds, pol)
+    sh = lambda spec_tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    batch_sds = input_specs(cfg, shape)
+    b_spec = batch_pspecs(cfg, batch_sds, pol, mesh)
+
+    if shape.kind == "train":
+        opt_sds = opt_state_specs(cfg, params_sds)
+        o_spec = opt_pspecs(cfg, opt_sds, pol)
+        fn = jax.jit(
+            partial(train_step, cfg, accum=accum),
+            in_shardings=(sh(p_spec), sh(o_spec), sh(b_spec)),
+            out_shardings=(sh(p_spec), sh(o_spec), None),
+            donate_argnums=(0, 1),
+        )
+        args = (params_sds, opt_sds, batch_sds)
+        arg_bytes = (sharded_bytes(params_sds, p_spec, mesh)
+                     + sharded_bytes(opt_sds, o_spec, mesh)
+                     + sharded_bytes(batch_sds, b_spec, mesh))
+    elif shape.kind == "prefill":
+        bdim = _batch_axis_entry(cfg, shape, pol, mesh)
+        vax = _vocab_axis(cfg, mesh)
+        if cfg.is_encoder:
+            # encoder-only: whole-utterance inference, no KV cache
+            from repro.models import forward
+
+            def encode_step(params, batch):
+                logits, _, _ = forward(cfg, params, batch, mode="prefill")
+                return logits
+
+            fn = jax.jit(
+                encode_step,
+                in_shardings=(sh(p_spec), sh(b_spec)),
+                out_shardings=sh(P(bdim, None, vax)),
+            )
+            args = (params_sds, batch_sds)
+            arg_bytes = (sharded_bytes(params_sds, p_spec, mesh)
+                         + sharded_bytes(batch_sds, b_spec, mesh))
+            return fn, args, arg_bytes
+        w = shape.seq_len
+        cache_sds = decode_cache_specs(
+            cfg, type(shape)(shape.name, shape.seq_len, shape.global_batch,
+                             "decode"))
+        c_spec = cache_pspecs(cfg, cache_sds, pol, mesh)
+        logits_spec = P(bdim, vax)
+        fn = jax.jit(
+            partial(prefill_step, cfg, window=w),
+            in_shardings=(sh(p_spec), sh(b_spec)),
+            out_shardings=(sh(logits_spec), sh(c_spec)),
+        )
+        args = (params_sds, batch_sds)
+        arg_bytes = (sharded_bytes(params_sds, p_spec, mesh)
+                     + sharded_bytes(batch_sds, b_spec, mesh))
+    else:  # decode
+        cache_sds = decode_cache_specs(
+            cfg, shape, kv_dtype="int8" if "kv_int8" in opts else "")
+        c_spec = cache_pspecs(cfg, cache_sds, pol, mesh)
+        bdim = _batch_axis_entry(cfg, shape, pol, mesh)
+        vax = _vocab_axis(cfg, mesh)
+        fn = jax.jit(
+            partial(serve_step, cfg),
+            in_shardings=(sh(p_spec), sh(c_spec), sh(b_spec)),
+            out_shardings=(sh(P(bdim)), sh(P(bdim, vax)), sh(c_spec)),
+            donate_argnums=(1,),
+        )
+        args = (params_sds, cache_sds, batch_sds)
+        arg_bytes = (sharded_bytes(params_sds, p_spec, mesh)
+                     + sharded_bytes(cache_sds, c_spec, mesh)
+                     + sharded_bytes(batch_sds, b_spec, mesh))
+    return fn, args, arg_bytes
+
+
+def _vocab_axis(cfg, mesh):
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return "model" if cfg.vocab_size % axes.get("model", 1) == 0 else None
+
+
+def _batch_axis_entry(cfg, shape, pol, mesh):
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in pol.batch_axes:
+        n *= axes.get(a, 1)
+    if shape.global_batch % n == 0:
+        return pol.batch_axes if len(pol.batch_axes) > 1 else pol.batch_axes[0]
+    if shape.global_batch % axes.get("data", 1) == 0:
+        return "data"
+    return None
+
+
+def _hints_ctx(mesh, opts):
+    from repro.util import sharding_hints
+
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    batch_axes = tuple(a for a in ("pod", "data") if a in axes)
+    div = 1
+    for a in batch_axes:
+        div *= axes[a]
+    return sharding_hints(batch_axes=batch_axes, model_axis="model",
+                          opts=opts, batch_div=div)
+
+
+def _count_compile(cfg, shape, mesh, fsdp, opts=frozenset()):
+    """Compile the fully-unrolled variant; return (flops, bytes, coll_dict)."""
+    from repro.util import unrolled_scans
+
+    with unrolled_scans(), _hints_ctx(mesh, opts):
+        fn, args, _ = build(cfg, shape, mesh, accum=1, fsdp=fsdp, opts=opts)
+        compiled = fn.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", -1)),
+            float(cost.get("bytes accessed", -1)), coll)
+
+
+def run_count(cfg, shape, mesh, opts=frozenset()):
+    """Exact count-mode statistics.
+
+    Full-sequence shapes (train/prefill) of deep stacks are measured by the
+    AFFINE-PROBE method: compile unrolled variants at 2 and 4 pattern
+    repeats; every cost statistic is affine in the repeat count (embed/head
+    outside the stack, identical blocks inside), so the full-depth value is
+    an exact linear extrapolation. Decode shapes unroll directly (cheap).
+    """
+    import dataclasses
+
+    from repro.models import block_program
+
+    fsdp = make_policy(cfg, mesh).fsdp
+    pattern, n_repeat, tail = block_program(cfg)
+    if shape.kind in ("train", "prefill") and n_repeat > 4:
+        r1, r2 = 2, 4
+        probes = []
+        for r in (r1, r2):
+            cfg_r = dataclasses.replace(
+                cfg, num_layers=len(pattern) * r + len(tail))
+            probes.append(_count_compile(cfg_r, shape, mesh, fsdp, opts))
+        (f1, b1, c1), (f2, b2, c2) = probes
+
+        def extra(v1, v2):
+            slope = (v2 - v1) / (r2 - r1)
+            return v2 + slope * (n_repeat - r2)
+
+        coll = {k: extra(c1.get(k, 0.0), c2.get(k, 0.0))
+                for k in set(c1) | set(c2)}
+        cost = {"flops": extra(f1, f2), "bytes accessed": extra(b1, b2)}
+        return cost, coll, f"affine-probe(r={r1},{r2}->{n_repeat})"
+    f, b, coll = _count_compile(cfg, shape, mesh, fsdp, opts)
+    return {"flops": f, "bytes accessed": b}, coll, "unrolled"
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            accum: int = 8, save: bool = True, count_mode: bool = True,
+            opts: frozenset = frozenset(), tag: str = "") -> dict:
+    """Two compiles per combo:
+      exec pass  — production form (rolled scans, grad accumulation):
+                   proves lowering/compilation + memory fit.
+      count pass — every scan fully unrolled (util.unrolled_scans): XLA
+                   cost_analysis counts while-loop bodies ONCE, so only the
+                   unrolled module yields exact FLOPs/bytes/collectives.
+    """
+    from repro.util import unrolled_scans
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "multi" if multi_pod else "single"
+    t0 = time.time()
+    with mesh:
+        fn, args, arg_bytes = build(cfg, shape, mesh, accum=accum, opts=opts)
+        with _hints_ctx(mesh, opts):
+            lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception as e:  # pragma: no cover
+            mem_d = {"error": str(e)}
+        del compiled, lowered
+        # --- count pass ---
+        t1 = time.time()
+        if count_mode:
+            cost, coll, count_meta = run_count(cfg, shape, mesh, opts)
+        else:
+            fn_c, args_c, _ = build(cfg, shape, mesh, accum=accum)
+            compiled_c = fn_c.lower(*args_c).compile()
+            cost = compiled_c.cost_analysis() or {}
+            coll = collective_bytes(compiled_c.as_text())
+            count_meta = "rolled"
+            del compiled_c
+        t_count = time.time() - t1
+    n_chips = int(np.prod(mesh.devices.shape))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_chips": n_chips,
+        "ok": True,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "count_pass_s": round(t_count, 2),
+        "count_mode": count_meta if count_mode else "rolled",
+        "flops": float(cost.get("flops", -1)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1)),
+        "collective_bytes_per_device": coll,
+        "collective_total_per_device": float(sum(coll.values())),
+        "arg_bytes_per_device": arg_bytes,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory_analysis": mem_d,
+        "opts": sorted(opts),
+    }
+    if save:
+        out_dir = RESULTS_DIR if not tag else os.path.join(
+            RESULTS_DIR, "..", "perf")
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--accum", type=int, default=8)
+    ap.add_argument("--opt", default="",
+                    help="comma list of perf levers: kv_seq,attn_carry,...")
+    ap.add_argument("--tag", default="",
+                    help="label; tagged runs save under results/perf/")
+    args = ap.parse_args()
+    opts = frozenset(x for x in args.opt.split(",") if x)
+
+    combos = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for arch in ASSIGNED_ARCHS:
+            cfg = get_config(arch)
+            for shape in applicable_shapes(cfg):
+                for m in meshes:
+                    combos.append((arch, shape.name, m))
+    else:
+        assert args.arch and args.shape
+        combos = [(args.arch, args.shape, m) for m in meshes]
+
+    failures = 0
+    for arch, shape_name, m in combos:
+        path = os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{m}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {arch} {shape_name} {m}")
+            continue
+        try:
+            # count-mode (unrolled, slow) only for the single-pod mesh: the
+            # roofline table is single-pod; multi-pod proves lowering only.
+            rec = run_one(arch, shape_name, m == "multi", accum=args.accum,
+                          count_mode=(m == "single"), opts=opts,
+                          tag=args.tag)
+            print(f"[ok]   {arch:24s} {shape_name:12s} {m:6s} "
+                  f"flops={rec['flops']:.3e} "
+                  f"coll/dev={rec['collective_total_per_device']:.3e}B "
+                  f"compile={rec['compile_s']:.1f}s")
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {arch} {shape_name} {m}: {type(e).__name__}: {e}")
+            os.makedirs(RESULTS_DIR, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump({"arch": arch, "shape": shape_name, "mesh": m,
+                           "ok": False, "error": str(e)[:2000]}, f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run: weak-type
+correct, shardable, no device allocation).
+
+``input_specs(cfg, shape)`` returns the *batch* inputs; decode shapes also
+need ``decode_cache_specs``. VLM/audio frontends are stubbed here: the
+specs carry precomputed patch/frame embeddings of the right shape (the one
+allowed carve-out, DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache_specs
+from repro.training.optimizer import init_adamw
+
+VLM_PATCHES = 1024  # early-fusion vision prefix length (stub frontend)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def decode_window(cfg, seq_len: int) -> int:
+    """KV window for a decode shape: full context at 32k; the sub-quadratic
+    sliding window for 500k (full-attention archs); SSM/hybrid archs carry
+    O(1) state regardless."""
+    if seq_len > 100_000 and cfg.sliding_window_decode:
+        return cfg.sliding_window_decode
+    if cfg.arch_type == "ssm":
+        return 1  # no attention blocks; window is vestigial
+    return seq_len
+
+
+def input_specs(cfg, shape) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    model_dtype = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.modality == "audio":
+            batch = {"frames": _sds((b, s, cfg.d_model), model_dtype)}
+            if shape.kind == "train":
+                batch["labels"] = _sds((b, s), jnp.int32)
+            return batch
+        if cfg.modality == "vision_text":
+            p = min(VLM_PATCHES, s // 2)
+            batch = {
+                "tokens": _sds((b, s - p), jnp.int32),
+                "patches": _sds((b, p, cfg.d_model), model_dtype),
+                "positions": _sds((3, b, s), jnp.int32),
+            }
+            if shape.kind == "train":
+                batch["labels"] = _sds((b, s - p), jnp.int32)
+            return batch
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s), jnp.int32)
+        return batch
+    # decode: ONE new token against the KV cache
+    batch = {"tokens": _sds((b, 1), jnp.int32)}
+    if cfg.rope_variant == "mrope":
+        batch["positions"] = _sds((3, b, 1), jnp.int32)
+    return batch
+
+
+def decode_cache_specs(cfg, shape, kv_dtype: str = ""):
+    assert shape.kind == "decode"
+    w = decode_window(cfg, shape.seq_len)
+    return cache_specs(cfg, shape.global_batch, w, kv_dtype)
+
+
+def opt_state_specs(cfg, params_sds):
+    return jax.eval_shape(init_adamw, params_sds)

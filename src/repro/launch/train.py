@@ -1,0 +1,95 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b \
+        --steps 200 --batch 8 --seq 256 --reduced
+
+On the CPU container use ``--reduced`` (the smoke-scale family variant);
+on a real pod drop it and pass ``--mesh single|multi`` to engage the
+production sharding rules from repro.core.simd.sharding.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import init_params
+from repro.training import TokenPipeline, init_adamw, train_step
+from repro.training.checkpoint import latest_step, restore_into, save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params will be "
+          f"{cfg.param_count()/1e6:.1f}M ({cfg.arch_type})")
+
+    params = init_params(cfg, jax.random.key(args.seed))
+    opt = init_adamw(params)
+    n_par = sum(x.size for x in jax.tree.leaves(params))
+    print(f"materialized {n_par/1e6:.2f}M params")
+
+    pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    step_fn = jax.jit(partial(
+        train_step, cfg, accum=args.accum, peak_lr=args.lr,
+        total_steps=args.steps))
+
+    start = 0
+    if args.ckpt:
+        s = latest_step(args.ckpt)
+        if s >= 0:
+            params = restore_into(args.ckpt, s, jax.eval_shape(lambda: params))
+            params = jax.tree.map(jnp.asarray, params)
+            start = s
+            print(f"restored step {s}")
+
+    t0 = time.time()
+    losses = []
+    for step, batch in enumerate(pipe.batches(start), start=start):
+        if step >= args.steps:
+            break
+        if cfg.modality == "vision_text":
+            b, s = batch["tokens"].shape
+            batch["positions"] = np.broadcast_to(
+                np.arange(s, dtype=np.int32), (3, b, s)).copy()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        losses.append(float(metrics["ce"]))
+        if step % args.log_every == 0:
+            dt = time.time() - t0
+            tok_s = (step - start + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {step:5d}  ce={losses[-1]:.4f}  "
+                  f"gnorm={float(metrics['grad_norm']):.3f}  tok/s={tok_s:,.0f}")
+        if args.ckpt and step and step % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, step, params)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, args.steps, params)
+    first = np.mean(losses[:10]) if len(losses) >= 10 else losses[0]
+    last = np.mean(losses[-10:])
+    print(f"done: ce {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+from repro.models.model import (
+    block_program,
+    cache_specs,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    param_count_tree,
+    param_specs,
+)
+
+__all__ = [
+    "block_program",
+    "cache_specs",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "param_count_tree",
+    "param_specs",
+]

@@ -1,0 +1,243 @@
+"""Transformer/SSM/recurrent blocks with a unified apply interface.
+
+Block types:
+  dense      — GQA attention + MLP (pre-norm residual)
+  moe        — GQA attention + MoE MLP
+  encoder    — bidirectional attention + MLP (audio encoder)
+  local_attn — sliding-window attention + MLP (recurrentgemma)
+  rglru      — RG-LRU temporal mixing + MLP
+  ssd        — Mamba-2 SSD mixing (no separate MLP)
+
+``apply_block(cfg, btype, p, x, rope_pos, mode, cache)`` returns
+``(x, new_cache, aux_loss)``. Caches are dict pytrees; ``None`` cache means
+train/prefill-from-scratch. Position bookkeeping (`pos` scalar) lives in the
+model-level cache, passed down here.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.moe import apply_moe, init_moe
+from repro.models.rglru import apply_rglru_block, init_rglru, init_rglru_cache
+from repro.models.ssm import apply_ssd, init_ssd, init_ssd_cache
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_attn(cfg, key, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    q_dim, kv_dim = cfg.num_heads * hd, cfg.num_kv_heads * hd
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (d, q_dim), dtype) * std,
+        "wk": jax.random.normal(ks[1], (d, kv_dim), dtype) * std,
+        "wv": jax.random.normal(ks[2], (d, kv_dim), dtype) * std,
+        "wo": jax.random.normal(ks[3], (q_dim, d), dtype) * (q_dim ** -0.5),
+    }
+
+
+def init_block(cfg, btype: str, key, dtype):
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"norm1": L.init_norm(cfg, d, dtype)}
+    if btype in ("dense", "encoder", "local_attn"):
+        p["attn"] = init_attn(cfg, k1, dtype)
+        p["norm2"] = L.init_norm(cfg, d, dtype)
+        ff = cfg.dense_d_ff or cfg.d_ff
+        p["mlp"] = L.init_mlp(cfg, k2, d, ff, dtype)
+    elif btype == "moe":
+        p["attn"] = init_attn(cfg, k1, dtype)
+        p["norm2"] = L.init_norm(cfg, d, dtype)
+        p["moe"] = init_moe(cfg, k2, dtype)
+    elif btype == "rglru":
+        p["mixer"] = init_rglru(cfg, k1, dtype)
+        p["norm2"] = L.init_norm(cfg, d, dtype)
+        p["mlp"] = L.init_mlp(cfg, k2, d, cfg.d_ff, dtype)
+    elif btype == "ssd":
+        p["mixer"] = init_ssd(cfg, k1, dtype)
+    else:
+        raise ValueError(btype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def attn_cache_window(cfg, btype: str, seq_len: int) -> int:
+    """KV window for decode: local blocks use their native window; full
+    attention uses the full seq unless the model-level sliding window is
+    engaged (long_500k)."""
+    if btype == "local_attn":
+        return min(cfg.local_window, seq_len)
+    return seq_len
+
+
+def init_block_cache(cfg, btype: str, batch: int, window: int, dtype,
+                     kv_dtype: str = ""):
+    hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+    if btype in ("dense", "moe", "encoder", "local_attn"):
+        w = min(window, cfg.local_window) if btype == "local_attn" else window
+        if kv_dtype == "int8":
+            # quantized serving cache: per-(token, kv-head) symmetric scale
+            return {
+                "k": jnp.zeros((batch, w, kv, hd), jnp.int8),
+                "v": jnp.zeros((batch, w, kv, hd), jnp.int8),
+                "k_scale": jnp.zeros((batch, w, kv), jnp.float32),
+                "v_scale": jnp.zeros((batch, w, kv), jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((batch, w, kv, hd), dtype),
+            "v": jnp.zeros((batch, w, kv, hd), dtype),
+        }
+    if btype == "rglru":
+        return init_rglru_cache(cfg, batch, dtype)
+    if btype == "ssd":
+        return init_ssd_cache(cfg, batch, dtype)
+    raise ValueError(btype)
+
+
+# ---------------------------------------------------------------------------
+# attention block body
+# ---------------------------------------------------------------------------
+
+
+def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
+                causal: bool, project: bool = True):
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kv, hd)
+    q = L.apply_rope(cfg, q, rope_pos)
+    k = L.apply_rope(cfg, k, rope_pos)
+
+    quantized = cache is not None and cache["k"].dtype == jnp.int8
+
+    def _quant(t):  # (..., hd) -> int8 values + per-vector scale
+        scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        q8 = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                      -127, 127).astype(jnp.int8)
+        return q8, scale
+
+    def _dequant(q8, scale, dtype):
+        return (q8.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+    new_cache = cache
+    if mode == "decode":
+        assert s == 1 and cache is not None
+        w = cache["k"].shape[1]
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        slot = jax.lax.rem(pos_b, w)  # per-slot rolling write index
+        rows = jnp.arange(b)
+        if quantized:
+            kq, ks = _quant(k[:, 0])
+            vq, vs = _quant(v[:, 0])
+            new_cache = {
+                "k": cache["k"].at[rows, slot].set(kq),
+                "v": cache["v"].at[rows, slot].set(vq),
+                "k_scale": cache["k_scale"].at[rows, slot].set(ks),
+                "v_scale": cache["v_scale"].at[rows, slot].set(vs),
+            }
+            kc = _dequant(new_cache["k"], new_cache["k_scale"], k.dtype)
+            vc = _dequant(new_cache["v"], new_cache["v_scale"], v.dtype)
+        else:
+            kc = cache["k"].at[rows, slot].set(k[:, 0])
+            vc = cache["v"].at[rows, slot].set(v[:, 0])
+            new_cache = {"k": kc, "v": vc}
+        out = L.decode_attention(q, kc, vc, pos_b + 1, window=window)
+    else:
+        out = L.attention(q, k, v, causal=causal, window=window)
+        if cache is not None:  # prefill: fill the cache with the last W keys
+            w = cache["k"].shape[1]
+            k_w, v_w = (k[:, -w:], v[:, -w:]) if s >= w else (k, v)
+            if quantized:
+                kq, ks = _quant(k_w)
+                vq, vs = _quant(v_w)
+                writes = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+            else:
+                writes = {"k": k_w, "v": v_w}
+            if s >= w:
+                new_cache = writes
+            else:
+                new_cache = {
+                    name: jax.lax.dynamic_update_slice_in_dim(
+                        cache[name], val, 0, 1)
+                    for name, val in writes.items()
+                }
+    out = out.reshape(b, s, h * hd)
+    if not project:
+        return out, new_cache
+    return L._ar_barrier(jnp.einsum("bse,ed->bsd", out, p["wo"])), new_cache
+
+
+def apply_block(cfg, btype: str, p, x, rope_pos, *, mode: str, cache=None,
+                pos=None):
+    """Returns (x, new_cache, aux_loss)."""
+    from repro.util import hint_opt
+
+    aux = jnp.zeros((), F32)
+    if btype in ("dense", "moe", "encoder", "local_attn"):
+        causal = cfg.causal and btype != "encoder"
+        window = cfg.local_window if btype == "local_attn" else 0
+        if hint_opt("parallel_block") and btype != "moe":
+            # PaLM-style parallel attention+MLP with FUSED output
+            # projection: concat the attention context and the MLP hidden
+            # along the (model-sharded) contraction dim and project with
+            # one dot — one partial sum, hence ONE tensor-parallel
+            # all-reduce per layer instead of two. (Perf lever; a serving
+            # variant for models trained with parallel blocks.)
+            h = L.apply_norm(cfg, p["norm1"], x)
+            a_ctx, new_attn_cache = _attn_apply(
+                cfg, p["attn"], h, rope_pos, mode=mode, cache=cache,
+                pos=pos, window=window, causal=causal, project=False)
+            h2 = L.apply_norm(cfg, p["norm2"], x)
+            if cfg.mlp_variant in ("swiglu", "geglu"):
+                act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
+                hid = act(jnp.einsum("...d,df->...f", h2, p["mlp"]["w_gate"])) \
+                    * jnp.einsum("...d,df->...f", h2, p["mlp"]["w_up"])
+            else:
+                hid = jax.nn.gelu(
+                    jnp.einsum("...d,df->...f", h2, p["mlp"]["w_up"]))
+            z = jnp.concatenate([a_ctx, hid], axis=-1)
+            w_cat = jnp.concatenate([p["attn"]["wo"], p["mlp"]["w_down"]],
+                                    axis=0)
+            out = jnp.einsum("bsz,zd->bsd", z, w_cat)
+            return x + out, new_attn_cache, aux
+        h = L.apply_norm(cfg, p["norm1"], x)
+        a, new_attn_cache = _attn_apply(
+            cfg, p["attn"], h, rope_pos, mode=mode, cache=cache, pos=pos,
+            window=window, causal=causal)
+        x = x + a
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if btype == "moe":
+            m, aux = apply_moe(cfg, p["moe"], h)
+        else:
+            m = L.apply_mlp(cfg, p["mlp"], h)
+        x = x + m
+        return x, new_attn_cache, aux
+    if btype == "rglru":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        m, new_cache = apply_rglru_block(cfg, p["mixer"], h, cache=cache)
+        x = x + m
+        h = L.apply_norm(cfg, p["norm2"], x)
+        x = x + L.apply_mlp(cfg, p["mlp"], h)
+        return x, new_cache, aux
+    if btype == "ssd":
+        h = L.apply_norm(cfg, p["norm1"], x)
+        m, new_cache = apply_ssd(cfg, p["mixer"], h, cache=cache)
+        return x + m, new_cache, aux
+    raise ValueError(btype)

@@ -1,0 +1,148 @@
+"""Mixture-of-Experts layer: grouped capacity-based top-k dispatch.
+
+GShard/Switch-style einsum dispatch: tokens are partitioned into groups
+(groups shard across the `data` mesh axis), each group routes its tokens to
+experts with a per-group capacity C = ceil(g * k * capacity_factor / E);
+overflow tokens are dropped (residual passes through untouched, standard
+for serving). Compiled FLOPs are O(active experts), not O(all experts) —
+this keeps the roofline's MODEL_FLOPS/HLO_FLOPs ratio honest for MoE archs.
+
+Two sharding layouts (the survey §4.2's "efficient model sharding" space):
+  * ff-sharded (default): expert ff dim on `model` axis — works for any
+    expert count (grok-1's 8 experts < 16-way axis).
+  * expert-parallel (`moe_expert_parallel`): expert dim on `model` axis —
+    all-to-all dispatch, used by llama4 (128 experts).
+
+Router uses fp32 logits + softmax; aux load-balance loss (Switch) returned
+for training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.util import hint_opt, hints, wsc
+
+F32 = jnp.float32
+
+
+def init_moe(cfg, key, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    std_in, std_out = d ** -0.5, ff ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), F32) * std_in,
+        "w_gate": jax.random.normal(ks[1], (e, d, ff), dtype) * std_in,
+        "w_up": jax.random.normal(ks[2], (e, d, ff), dtype) * std_in,
+        "w_down": jax.random.normal(ks[3], (e, ff, d), dtype) * std_out,
+    }
+    if cfg.mlp_variant == "gelu":
+        del p["w_gate"]
+    if cfg.moe_shared_expert:
+        from repro.models.layers import init_mlp
+
+        p["shared"] = init_mlp(cfg, ks[4], d, ff, dtype)
+    return p
+
+
+def _capacity(cfg, g: int) -> int:
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = int(g * k * cfg.moe_capacity_factor / e) + 1
+    return max(c, k)
+
+
+def apply_moe(cfg, p, x, *, group_size: int = 2048):
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar fp32)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    t = b * s
+    g = min(group_size, t)
+    while t % g:
+        g //= 2
+    n_groups = t // g
+    c = _capacity(cfg, g)
+
+    # Perf lever "moe_pin" (EXPERIMENTS.md §Perf): GSPMD cannot propagate a
+    # sharding through the cumsum/one_hot dispatch construction and
+    # replicates the (N,g,E,C) combine tensor on every device, then
+    # all-reduces it — tens of TB per step at grok-1 scale. Pinning the
+    # group dim (N) to the batch axes keeps routing fully local.
+    pin = hint_opt("moe_pin")
+    bspec = None
+    if pin:
+        h_ = hints()
+        ba = h_["batch_axes"]
+        bspec = ba if len(ba) > 1 else ba[0]
+
+    from jax.sharding import PartitionSpec as _P
+
+    UNC = _P.UNCONSTRAINED
+
+    def pin_tokens(t, *rest):
+        """Pin the group dim N to the batch axes; other dims stay
+        UNCONSTRAINED (None would force replication — an earlier iteration
+        accidentally all-gathered the ff dim this way, see §Perf log)."""
+        if not pin or n_groups % max(hints()["batch_div"], 1):
+            return t
+        spec = rest if rest else (UNC,) * (t.ndim - 1)
+        return wsc(t, bspec, *spec)
+
+    xg = pin_tokens(x.reshape(n_groups, g, d))
+    logits = pin_tokens(
+        jnp.einsum("Ngd,de->Nge", xg.astype(F32), p["router"]))
+    probs = pin_tokens(jax.nn.softmax(logits, axis=-1))  # (N, g, E)
+
+    # --- top-k routing with per-expert capacity positions ---
+    combine = jnp.zeros((n_groups, g, e, c), F32)
+    gates_so_far = probs
+    position_base = jnp.zeros((n_groups, e), jnp.int32)
+    aux_me = probs.mean(axis=1)  # (N, E) mean router prob per expert
+    aux_ce_acc = jnp.zeros((n_groups, e), F32)
+    for _ in range(k):
+        idx = jnp.argmax(gates_so_far, axis=-1)  # (N, g)
+        onehot = jax.nn.one_hot(idx, e, dtype=F32)  # (N, g, E)
+        gate = (gates_so_far * onehot).sum(-1)  # (N, g)
+        # position of each token within its expert's capacity buffer
+        pos_in_e = (jnp.cumsum(onehot, axis=1) - onehot) + position_base[:, None, :]
+        pos = (pos_in_e * onehot).sum(-1).astype(jnp.int32)  # (N, g)
+        keep = pos < c
+        pos_oh = jax.nn.one_hot(pos, c, dtype=F32) * keep[..., None]
+        combine = combine + gate[..., None, None] * onehot[..., None] * pos_oh[:, :, None, :]
+        combine = pin_tokens(combine)
+        position_base = position_base + onehot.sum(axis=1).astype(jnp.int32)
+        aux_ce_acc = aux_ce_acc + onehot.mean(axis=1)
+        gates_so_far = gates_so_far * (1.0 - onehot)
+
+    combine = combine.astype(x.dtype)  # bf16 combine: gate precision is ample
+    dispatch = pin_tokens((combine > 0.0).astype(x.dtype))  # (N, g, E, C)
+
+    # --- expert computation ---
+    xe = pin_tokens(jnp.einsum("NgEC,Ngd->NECd", dispatch, xg))
+    hints_ = hints() if pin else None
+    ma = hints_["model_axis"] if pin else None
+    if pin and not cfg.moe_expert_parallel and cfg.d_ff % 16 == 0:
+        f_spec = (None, None, ma)  # ff-sharded experts: keep f on model
+    else:
+        f_spec = (UNC, UNC, UNC)  # expert-parallel: GSPMD places E on model
+    if cfg.mlp_variant in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
+        gt = jnp.einsum("NECd,Edf->NECf", xe, p["w_gate"])
+        up = jnp.einsum("NECd,Edf->NECf", xe, p["w_up"])
+        h = pin_tokens(act(gt) * up, *f_spec)
+    else:
+        h = pin_tokens(
+            jax.nn.gelu(jnp.einsum("NECd,Edf->NECf", xe, p["w_up"])),
+            *f_spec)
+    ye = pin_tokens(jnp.einsum("NECf,Efd->NECd", h, p["w_down"]))
+
+    y = jnp.einsum("NgEC,NECd->Ngd", combine, ye)
+    y = y.reshape(b, s, d)
+
+    if cfg.moe_shared_expert:
+        from repro.models.layers import apply_mlp
+
+        y = y + apply_mlp(cfg, p["shared"], x)
+
+    # Switch aux load-balance loss: E * sum_e (frac_tokens_e * mean_prob_e)
+    aux = (e * (aux_ce_acc / k) * aux_me).sum(-1).mean()
+    return y, aux

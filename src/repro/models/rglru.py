@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+y = out_proj( GeLU(gate_branch(x)) * RGLRU(conv1d(lin_branch(x))) )
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a u_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x u_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Full-sequence path uses ``jax.lax.associative_scan`` (log-depth — the right
+shape for 32k/500k sequences on TPU); decode is a single recurrence step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+_C = 8.0
+
+
+def init_rglru(cfg, key, dtype):
+    d, lw = cfg.d_model, cfg.resolved_lru_width
+    ck = cfg.conv_kernel
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    # Lambda init so that a ~ uniform(0.9, 0.999) at r=1 (paper init)
+    u = jax.random.uniform(ks[5], (lw,), F32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # inverse softplus
+    return {
+        "w_gate_branch": jax.random.normal(ks[0], (d, lw), dtype) * std,
+        "w_lin_branch": jax.random.normal(ks[1], (d, lw), dtype) * std,
+        "w_out": jax.random.normal(ks[2], (lw, d), dtype) * (lw ** -0.5),
+        "conv_w": jax.random.normal(ks[3], (ck, lw), dtype) * 0.2,
+        "w_a": jax.random.normal(ks[4], (lw, lw), dtype) * (lw ** -0.5),
+        "b_a": jnp.zeros((lw,), F32),
+        "w_x": jax.random.normal(ks[6], (lw, lw), dtype) * (lw ** -0.5),
+        "b_x": jnp.zeros((lw,), F32),
+        "Lambda": lam,
+    }
+
+
+def _rglru_gates(p, u):
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsl,lm->bsm", u, p["w_a"]).astype(F32) + p["b_a"])
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsl,lm->bsm", u, p["w_x"]).astype(F32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["Lambda"])[None, None, :] * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * u.astype(F32))
+    return a, gated_in
+
+
+def rglru_scan(p, u, h0=None):
+    """u (B,S,L) -> (y (B,S,L), h_last (B,L)). Associative scan over S."""
+    a, x = _rglru_gates(p, u)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + x_1
+        x = x.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a1 * a2, a2 * x1 + x2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, x), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_step(p, u, h_prev):
+    """Single decode step. u (B,1,L), h_prev (B,L) -> (y (B,1,L), h)."""
+    a, x = _rglru_gates(p, u)
+    h = a[:, 0] * h_prev + x[:, 0]
+    return h[:, None].astype(u.dtype), h
+
+
+def apply_rglru_block(cfg, p, x, *, cache=None):
+    """Temporal-mixing block. x (B,S,d) -> (y, new_cache).
+
+    cache: {"conv": (B,K-1,L), "state": (B,L)} or None (train/prefill start).
+    """
+    from repro.models.ssm import _causal_conv
+
+    b, s, _ = x.shape
+    gate = jax.nn.gelu(jnp.einsum("bsd,dl->bsl", x, p["w_gate_branch"]))
+    u = jnp.einsum("bsd,dl->bsl", x, p["w_lin_branch"])
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv_w"], conv_state, activation=None)
+    if s == 1 and cache is not None:
+        y, h = rglru_step(p, u, cache["state"])
+    else:
+        h0 = cache["state"] if cache is not None else None
+        y, h = rglru_scan(p, u, h0)
+    y = y * gate
+    out = jnp.einsum("bsl,ld->bsd", y, p["w_out"])
+    return out, {"conv": new_conv, "state": h}
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    lw, k = cfg.resolved_lru_width, cfg.conv_kernel
+    return {
+        "conv": jnp.zeros((batch, k - 1, lw), dtype),
+        "state": jnp.zeros((batch, lw), F32),
+    }

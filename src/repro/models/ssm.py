@@ -1,0 +1,183 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: within each chunk a quadratic (attention-like)
+intra-chunk term; chunk-to-chunk states propagate through a linear scan.
+Decode carries O(1) state: (conv window, per-head SSM state (H, P, N)).
+
+Shapes follow the paper: d_inner = expand*d_model, heads = d_inner/head_dim,
+scalar A per head, shared B/C of state size N across heads (multi-value).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.util import scan as uscan
+
+F32 = jnp.float32
+
+
+def init_ssd(cfg, key, dtype):
+    d = cfg.d_model
+    di, ns, nh = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    ck = cfg.conv_kernel
+    ks = jax.random.split(key, 4)
+    std = d ** -0.5
+    in_dim = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, in_dim), dtype) * std,
+        "out_proj": jax.random.normal(ks[1], (di, d), dtype) * (di ** -0.5),
+        "conv_w": jax.random.normal(ks[2], (ck, di + 2 * ns), dtype) * 0.2,
+        "A_log": jnp.zeros((nh,), F32),  # A = -exp(A_log) in (-inf, 0)
+        "D": jnp.ones((nh,), F32),
+        "dt_bias": jnp.zeros((nh,), F32),
+        "norm_scale": jnp.zeros((di,), dtype),
+    }
+
+
+def _split_proj(cfg, xz):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads
+    z = xz[..., :di]
+    xbc = xz[..., di : 2 * di + 2 * ns]
+    dt = xz[..., 2 * di + 2 * ns :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_state=None, activation=jax.nn.silu):
+    """Depthwise causal conv over time. xbc (B, S, C); conv_w (K, C).
+    If conv_state (B, K-1, C) given, prepend it (decode/streaming)."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    out = sum(
+        xp[:, i : i + xbc.shape[1]] * conv_w[i][None, None] for i in range(k)
+    )
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    if activation is not None:
+        out = activation(out)
+    return out, new_state
+
+
+def ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD. x (b,S,H,P); dt (b,S,H) >=0; A (H) <0; B,C (b,S,N).
+
+    Returns y (b,S,H,P) and final state (b,H,P,N).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    s_orig = s
+    if s % chunk:
+        # pad to a chunk multiple: dt=0 on padded steps => decay 1, zero
+        # input => state and real outputs are unaffected.
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    dA = dtc * A[None, None, None, :]  # (b,nc,c,h) log-decay per step (<0)
+    cums = jnp.cumsum(dA, axis=2)  # cumulative within chunk
+
+    # --- intra-chunk (quadratic) ---
+    # L[i,j] = exp(cums_i - cums_j) for j<=i  (segment decay)
+    seg = cums[:, :, :, None, :] - cums[:, :, None, :, :]  # (b,nc,c,c,h)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc.astype(F32), Bc.astype(F32))
+    # weight each source token by dt
+    xin = xc.astype(F32) * dtc[..., None]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", CB, L, xin)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)  # (b,nc,c,h)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc.astype(F32),
+                     decay_to_end, xin)  # state contribution per chunk
+
+    # --- inter-chunk scan ---
+    chunk_decay = jnp.exp(cums[:, :, -1, :])  # (b,nc,h) total chunk decay
+
+    def scan_fn(hstate, inp):
+        s_c, dec = inp  # (b,h,p,n), (b,h)
+        h_new = hstate * dec[..., None, None] + s_c
+        return h_new, hstate  # emit state *entering* the chunk
+
+    h0 = jnp.zeros((b, h, p, n), F32)
+    hT, h_enter = uscan(
+        scan_fn,
+        h0,
+        (S_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # --- inter-chunk output: y += C_i * decay(0..i) * h_enter ---
+    decay_from_start = jnp.exp(cums)  # (b,nc,c,h)
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cc.astype(F32),
+                         decay_from_start, h_enter)
+
+    y = y_intra + y_inter + D[None, None, None, :, None] * xc.astype(F32)
+    y = y.reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), hT
+
+
+def apply_ssd(cfg, p, x, *, cache=None):
+    """Full-sequence SSD block. x (B,S,d) -> (y, new_cache).
+
+    cache (decode/streaming): {"conv": (B,K-1,C), "state": (B,H,P,N)}.
+    For S>1 with cache=None this is train/prefill; the returned cache makes
+    the block resumable for decode.
+    """
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads, cfg.ssm_head_dim
+    b, s, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, xz)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], conv_state)
+    xs = xbc[..., :di].reshape(b, s, nh, hd)
+    B = xbc[..., di : di + ns]
+    C = xbc[..., di + ns :]
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if s == 1 and cache is not None:
+        # --- single-step decode ---
+        h_prev = cache["state"]  # (B,H,P,N)
+        dA = jnp.exp(dt[:, 0] * A[None])  # (B,H)
+        xin = xs[:, 0].astype(F32) * dt[:, 0][..., None]  # (B,H,P)
+        h_new = h_prev * dA[..., None, None] + jnp.einsum(
+            "bn,bhp->bhpn", B[:, 0].astype(F32), xin)
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(F32), h_new)
+        y = y + p["D"][None, :, None] * xs[:, 0].astype(F32)
+        y = y.reshape(b, 1, di)
+        new_cache = {"conv": new_conv, "state": h_new}
+    else:
+        y4, hT = ssd_chunked(xs, dt, A, B, C, p["D"], cfg.ssm_chunk)
+        y = y4.reshape(b, s, di)
+        new_cache = {"conv": new_conv, "state": hT}
+
+    from repro.models.layers import rmsnorm
+
+    y = rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, new_cache
+
+
+def init_ssd_cache(cfg, batch: int, dtype):
+    di, ns, nh, hd = cfg.d_inner, cfg.ssm_state_dim, cfg.ssm_num_heads, cfg.ssm_head_dim
+    k = cfg.conv_kernel
+    return {
+        "conv": jnp.zeros((batch, k - 1, di + 2 * ns), dtype),
+        "state": jnp.zeros((batch, nh, hd, ns), F32),
+    }

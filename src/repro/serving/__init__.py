@@ -1,0 +1,11 @@
+from repro.serving.engine import ServingEngine, generate, prefill_step, serve_step
+from repro.serving.request import Request, ServeMetrics
+
+__all__ = [
+    "ServingEngine",
+    "generate",
+    "prefill_step",
+    "serve_step",
+    "Request",
+    "ServeMetrics",
+]

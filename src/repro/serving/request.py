@@ -1,0 +1,64 @@
+"""Inference request/response types for the serving stack.
+
+These are the schedulable units of the survey's taxonomy: the MISD/MIMD
+schedulers (repro.core) operate on ``Request`` metadata; the engine
+(repro.serving.engine) executes the token work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    priority: int = 0  # higher = more urgent
+    sla_ms: float = 0.0  # latency SLA; 0 = best-effort
+    # --- filled during serving ---
+    output: List[int] = field(default_factory=list)
+    prefill_done: float = -1.0
+    finish_time: float = -1.0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+@dataclass
+class ServeMetrics:
+    """Aggregated server-side + client-side metrics (survey §3.2.3)."""
+
+    completed: int = 0
+    total_tokens: int = 0
+    total_time: float = 0.0
+    latencies: List[float] = field(default_factory=list)
+    jcts: List[float] = field(default_factory=list)  # job completion times
+    sla_violations: int = 0
+
+    @property
+    def qps(self) -> float:
+        return self.completed / self.total_time if self.total_time else 0.0
+
+    @property
+    def throughput_tps(self) -> float:
+        return self.total_tokens / self.total_time if self.total_time else 0.0
+
+    def p(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies), q))
+
+    @property
+    def mean_jct(self) -> float:
+        return float(np.mean(self.jcts)) if self.jcts else 0.0

@@ -1,0 +1,18 @@
+from repro.training.checkpoint import latest_step, restore_into, save_checkpoint
+from repro.training.data import TokenPipeline, synthetic_batch
+from repro.training.optimizer import AdamWState, adamw_update, init_adamw
+from repro.training.train import grads_fn, loss_fn, train_step
+
+__all__ = [
+    "AdamWState",
+    "TokenPipeline",
+    "adamw_update",
+    "grads_fn",
+    "init_adamw",
+    "latest_step",
+    "loss_fn",
+    "restore_into",
+    "save_checkpoint",
+    "synthetic_batch",
+    "train_step",
+]

@@ -1,0 +1,61 @@
+"""Checkpointing: flat-key npz save/restore of arbitrary pytrees.
+
+No external deps (no orbax in this container): pytrees are flattened to
+``path/to/leaf`` keys. Shardings are reapplied by the caller on restore
+(device_put with the launcher's NamedShardings).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None,
+                    extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, f"params_{step}.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, f"opt_{step}.npz"), **_flatten(opt_state))
+    meta = {"step": step, **(extra or {})}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def latest_step(path: str) -> int:
+    if not os.path.isdir(path):
+        return -1
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(path)
+        if (m := re.match(r"params_(\d+)\.npz", f))
+    ]
+    return max(steps) if steps else -1
+
+
+def restore_into(path: str, step: int, template):
+    """Restore a checkpoint into the structure of `template` (a pytree of
+    arrays or ShapeDtypeStructs). Returns the restored pytree."""
+    data = np.load(os.path.join(path, f"params_{step}.npz"))
+    paths, tdef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_k, leaf in paths:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(tdef, leaves)

@@ -1,0 +1,79 @@
+"""AdamW with fp32 master weights + cosine LR schedule.
+
+Optimizer state is a pytree mirroring the params; in the distributed
+launcher the m/v/master leaves are sharded over (data, model) — ZeRO-style
+state partitioning (see repro.core.simd.sharding.opt_state_specs).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    master: dict  # fp32 master copy of params
+    m: dict
+    v: dict
+
+
+def init_adamw(params) -> AdamWState:
+    master = jax.tree.map(lambda p: p.astype(F32), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), master, zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = step.astype(F32)
+    warm = peak_lr * step / max(warmup, 1)
+    frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(math.pi * frac)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(state: AdamWState, grads, *, peak_lr: float = 3e-4,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, warmup: int = 100,
+                 total: int = 10_000, grad_clip: float = 1.0):
+    """Returns (new_params_in_model_dtype, new_state)."""
+    step = state.step + 1
+    lr = cosine_schedule(step, peak_lr=peak_lr, warmup=warmup, total=total)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1t = 1 - b1 ** step.astype(F32)
+    b2t = 1 - b2 ** step.astype(F32)
+
+    def upd(master, m, v, g):
+        g = g.astype(F32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m_new / b1t) / (jnp.sqrt(v_new / b2t) + eps)
+        master_new = master - lr * (update + weight_decay * master)
+        return master_new, m_new, v_new
+
+    flat_master, tdef = jax.tree.flatten(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    flat_g = jax.tree.leaves(grads)
+    out = [upd(mm, m, v, g) for mm, m, v, g in zip(flat_master, flat_m, flat_v, flat_g)]
+    master = tdef.unflatten([o[0] for o in out])
+    m = tdef.unflatten([o[1] for o in out])
+    v = tdef.unflatten([o[2] for o in out])
+    new_state = AdamWState(step, master, m, v)
+    return new_state, gnorm
+
+
+def cast_params(state: AdamWState, like_params):
+    return jax.tree.map(lambda mw, p: mw.astype(p.dtype), state.master,
+                        like_params)

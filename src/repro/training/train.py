@@ -1,0 +1,81 @@
+"""Train step: loss, grads, microbatch gradient accumulation, update.
+
+``train_step`` is the unit the dry-run lowers for the ``train_4k`` shape.
+Microbatch accumulation runs as a scan over the leading accumulation axis —
+per-device activation memory is O(microbatch), independent of global batch.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import forward
+from repro.util import scan as uscan
+from repro.training.optimizer import AdamWState, adamw_update, cast_params
+
+F32 = jnp.float32
+
+
+def loss_fn(cfg, params, batch, *, aux_weight: float = 0.01):
+    """Next-token (or frame-label) cross entropy. labels==-100 are masked."""
+    logits, aux, _ = forward(cfg, params, batch, mode="train")
+    labels = batch["labels"]
+    if not cfg.is_encoder and cfg.modality == "text":
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    elif cfg.modality == "vision_text":
+        # early-fusion prefix has no labels; logits cover [patches + text]
+        p = logits.shape[1] - labels.shape[1]
+        logits = logits[:, p:]
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    mask = labels != -100
+    labels = jnp.where(mask, labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(F32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    n = jnp.maximum(mask.sum(), 1)
+    ce = -(ll * mask).sum() / n
+    return ce + aux_weight * aux, (ce, aux)
+
+
+def grads_fn(cfg, params, batch, *, accum: int = 1):
+    """Gradients with optional microbatch accumulation (scan over accum)."""
+    vg = jax.value_and_grad(lambda p, b: loss_fn(cfg, p, b), has_aux=True)
+    if accum <= 1:
+        (loss, (ce, aux)), grads = vg(params, batch)
+        return loss, ce, grads
+
+    def split(x):
+        b = x.shape[0] if x.ndim else 0
+        # positions for mrope carry a leading 3-axis; split on axis 1
+        if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % accum == 0:
+            return x.reshape((3, accum, x.shape[1] // accum) + x.shape[2:]).transpose(1, 0, *range(2, x.ndim + 1))
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    mb = jax.tree.map(split, batch)
+
+    def body(carry, microbatch):
+        loss_acc, ce_acc, g_acc = carry
+        (loss, (ce, aux)), grads = vg(params, microbatch)
+        g_acc = jax.tree.map(lambda a, g: a + g.astype(F32), g_acc, grads)
+        return (loss_acc + loss, ce_acc + ce, g_acc), None
+
+    g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    (loss, ce, grads), _ = uscan(
+        body, (jnp.zeros((), F32), jnp.zeros((), F32), g0), mb)
+    inv = 1.0 / accum
+    grads = jax.tree.map(lambda g: g * inv, grads)
+    return loss * inv, ce * inv, grads
+
+
+def train_step(cfg, params, opt_state: AdamWState, batch, *, accum: int = 1,
+               peak_lr: float = 3e-4, total_steps: int = 10_000):
+    """One optimizer step. Returns (params, opt_state, metrics)."""
+    loss, ce, grads = grads_fn(cfg, params, batch, accum=accum)
+    opt_state, gnorm = adamw_update(
+        opt_state, grads, peak_lr=peak_lr, total=total_steps)
+    params = cast_params(opt_state, params)
+    return params, opt_state, {"loss": loss, "ce": ce, "grad_norm": gnorm}

@@ -1,0 +1,95 @@
+"""Runtime flags + scan wrapper.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE, so any FLOPs/bytes/
+collectives inside ``lax.scan`` are undercounted by the trip count. The
+dry-run's count-mode therefore lowers the model with every scan fully
+unrolled (``unrolled_scans()``), which makes the compiled HLO's cost and
+collective statistics exact; the rolled variant remains the
+compile/memory-fit proof (EXPERIMENTS.md §Dry-run methodology).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_UNROLL = contextvars.ContextVar("unroll_scans", default=False)
+_ATTN_CHUNK = contextvars.ContextVar("attn_chunk", default=1024)
+
+
+@contextlib.contextmanager
+def unrolled_scans(attn_chunk: int = 4096):
+    """Fully unroll every framework scan (dry-run count-mode). Larger
+    attention chunks keep the unrolled block-pair count manageable; the
+    enumerated FLOPs are chunk-invariant up to diagonal-block masking."""
+    t1 = _UNROLL.set(True)
+    t2 = _ATTN_CHUNK.set(attn_chunk)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(t1)
+        _ATTN_CHUNK.reset(t2)
+
+
+def scans_unrolled() -> bool:
+    return _UNROLL.get()
+
+
+def attn_chunk_default() -> int:
+    return _ATTN_CHUNK.get()
+
+
+def scan(f, init, xs, length=None):
+    """lax.scan honoring the unroll flag."""
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if _UNROLL.get() else 1)
+
+
+# ---------------------------------------------------------------------------
+# sharding hints (perf-iteration levers; see EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+_HINTS = contextvars.ContextVar("sharding_hints", default=None)
+
+
+@contextlib.contextmanager
+def sharding_hints(*, batch_axes=("data",), model_axis="model",
+                    opts=frozenset(), **kwargs):
+    """Make mesh-axis names + enabled optimizations visible to model code
+    so it can place jax.lax.with_sharding_constraint on internal tensors.
+
+    opts (beyond-paper hillclimb levers):
+      "attn_carry"  — pin the block-attention scan carry/output sharding
+                      (kills GSPMD's involuntary resharding collectives)
+      "kv_seq"      — shard the decode KV cache along the sequence dim
+                      (flash-decoding style length-parallel decode)
+      "decode_pin"  — pin decode-attention intermediates (scores/probs)
+    """
+    tok = _HINTS.set({"batch_axes": tuple(batch_axes),
+                      "model_axis": model_axis, "opts": frozenset(opts),
+                      "batch_div": int(kwargs.get("batch_div", 1))})
+    try:
+        yield
+    finally:
+        _HINTS.reset(tok)
+
+
+def hints():
+    return _HINTS.get()
+
+
+def hint_opt(name: str) -> bool:
+    h = _HINTS.get()
+    return bool(h) and name in h["opts"]
+
+
+def wsc(x, *spec):
+    """with_sharding_constraint using the hinted axis names; no-op when no
+    hints are active (keeps unit tests mesh-free)."""
+    h = _HINTS.get()
+    if h is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    return jax.lax.with_sharding_constraint(x, P(*spec))

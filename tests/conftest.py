@@ -1,0 +1,37 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+
+
+def make_batch(cfg, b, s, *, labels=False, key=0):
+    """Batch matching cfg's modality at (b, s)."""
+    rng = np.random.default_rng(key)
+    if cfg.modality == "audio":
+        batch = {"frames": jnp.asarray(
+            rng.standard_normal((b, s, cfg.d_model)), jnp.float32)}
+        if labels:
+            batch["labels"] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+        return batch
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.rope_variant == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32), (3, b, s))
+    if labels:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)
+    return batch
+
+
+@pytest.fixture(params=ASSIGNED_ARCHS)
+def arch_cfg(request):
+    return get_config(request.param)

@@ -1,0 +1,89 @@
+"""Config registry: exact assigned numbers + analytic param counts match
+materialized pytrees."""
+import jax
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
+from repro.models import init_params, param_count_tree
+
+EXPECT = {
+    # name -> (layers, d_model, heads, kv, d_ff, vocab)
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+    "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+}
+
+BILLION_EXPECT = {  # model-card park: (total_B, tolerance_frac)
+    "starcoder2-15b": (15.5, 0.1),
+    "grok-1-314b": (314, 0.05),
+    "granite-8b": (8.1, 0.1),
+    "chatglm3-6b": (6.2, 0.1),
+    "mamba2-1.3b": (1.3, 0.1),
+    "recurrentgemma-9b": (9.0, 0.12),
+    "phi3-medium-14b": (14.0, 0.1),
+    "llama4-maverick-400b-a17b": (400, 0.05),
+    "hubert-xlarge": (0.96, 0.1),
+    "qwen2-vl-7b": (7.6, 0.1),
+}
+
+
+def test_all_assigned_archs_present():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len({get_config(a).arch_type for a in ASSIGNED_ARCHS}) == 6
+
+
+@pytest.mark.parametrize("name", list(EXPECT))
+def test_assigned_numbers(name):
+    cfg = get_config(name)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == EXPECT[name]
+
+
+@pytest.mark.parametrize("name", list(BILLION_EXPECT))
+def test_param_count_matches_model_card(name):
+    target, tol = BILLION_EXPECT[name]
+    got = get_config(name).param_count() / 1e9
+    assert abs(got - target) / target < tol, (name, got, target)
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+def test_analytic_count_matches_materialized(arch_cfg):
+    """param_count() formula agrees with the real reduced pytree."""
+    cfg = arch_cfg.reduced()
+    sds = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+    got = sum(x.size for x in jax.tree.leaves(sds))
+    want = cfg.param_count()
+    assert abs(got - want) / want < 0.02, (cfg.name, got, want)
+
+
+def test_sharding_divisibility():
+    """d_ff/d_model/head_dim divisible by the 16-way model axis."""
+    for name in ASSIGNED_ARCHS:
+        cfg = get_config(name)
+        assert cfg.d_model % 16 == 0
+        if cfg.d_ff:
+            assert cfg.d_ff % 16 == 0
+        if cfg.has_attention:
+            assert cfg.resolved_head_dim % 16 == 0
+
+
+def test_moe_actives():
+    grok = get_config("grok-1-314b")
+    l4 = get_config("llama4-maverick-400b-a17b")
+    assert grok.active_param_count() < grok.param_count()
+    assert abs(l4.active_param_count() / 1e9 - 17) < 3  # "A17B"

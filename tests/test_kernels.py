@@ -1,0 +1,109 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles,
+executed with interpret=True (kernel bodies run on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk(key, shape, dtype):
+    x = jax.random.normal(jax.random.key(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("s", [128, 256, 512])
+@pytest.mark.parametrize("d", [64, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(s, d, dtype, causal):
+    b, h, kv = 2, 4, 2
+    q = _mk(1, (b, s, h, d), dtype)
+    k = _mk(2, (b, s, kv, d), dtype)
+    v = _mk(3, (b, s, kv, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    kk = jnp.repeat(k, h // kv, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vv = jnp.repeat(v, h // kv, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    qq = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    want = ref.ref_attention(qq, kk, vv, causal=causal)
+    want = want.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("w", [128, 512])
+@pytest.mark.parametrize("d", [64, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(w, d, dtype):
+    b, h, kv = 2, 4, 2
+    q = _mk(4, (b, 1, h, d), dtype)
+    kc = _mk(5, (b, w, kv, d), dtype)
+    vc = _mk(6, (b, w, kv, d), dtype)
+    pos = jnp.asarray([w // 3, w], jnp.int32)  # one partial, one full cache
+    out = ops.decode_attention(q, kc, vc, pos, interpret=True)
+    kk = jnp.repeat(kc, h // kv, axis=2).transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    vv = jnp.repeat(vc, h // kv, axis=2).transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    qq = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+    nv = jnp.repeat(jnp.minimum(pos, w), h)
+    want = ref.ref_decode_attention(qq, kk, vv, nv)
+    want = want.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("s", [128, 384])
+@pytest.mark.parametrize("l", [128, 256])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_rglru_scan(s, l, dtype):
+    b = 2
+    a = jax.random.uniform(jax.random.key(7), (b, s, l), minval=0.7,
+                           maxval=0.999).astype(dtype)
+    x = (_mk(8, (b, s, l), dtype) * 0.1).astype(dtype)
+    h0 = _mk(9, (b, l), dtype)
+    y, hT = ops.rglru_scan(a, x, h0, interpret=True)
+    ry, rhT = ref.ref_rglru_scan(a, x, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ry), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(rhT), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_rglru_scan_matches_naive_loop():
+    b, s, l = 1, 64, 128
+    a = jax.random.uniform(jax.random.key(1), (b, s, l), minval=0.5, maxval=1.0)
+    x = jax.random.normal(jax.random.key(2), (b, s, l)) * 0.2
+    h0 = jnp.zeros((b, l))
+    y, hT = ops.rglru_scan(a, x, h0, interpret=True)
+    h = np.zeros((b, l), np.float32)
+    an, xn = np.asarray(a), np.asarray(x)
+    for t in range(s):
+        h = an[:, t] * h + xn[:, t]
+        np.testing.assert_allclose(np.asarray(y[:, t]), h, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hT), h, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul(m, k, n, dtype):
+    x = _mk(10, (m, k), dtype)
+    w = _mk(11, (k, n), jnp.float32)
+    wq, sc = ops.quantize_int8(w)
+    out = ops.int8_matmul(x, wq, sc, interpret=True)
+    want = ref.ref_int8_matmul(x, wq, sc)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=5e-2, rtol=5e-2)
+
+
+def test_int8_quantization_error_bounded():
+    w = jax.random.normal(jax.random.key(3), (256, 256))
+    wq, sc = ops.quantize_int8(w)
+    deq = np.asarray(wq, np.float32) * np.asarray(sc)[None, :]
+    rel = np.abs(deq - np.asarray(w)).max() / np.abs(np.asarray(w)).max()
+    assert rel < 0.01  # <1% of max magnitude per channel

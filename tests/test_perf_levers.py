@@ -1,0 +1,80 @@
+"""Perf levers (EXPERIMENTS.md §Perf) must not change model numerics:
+sharding constraints are layout-only; parallel_block is the documented
+PaLM-style math variant and is checked against its explicit formulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_batch
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.util import sharding_hints
+
+B, S = 2, 32
+
+
+def _fwd(cfg, params, batch, opts):
+    mesh = make_local_mesh()
+    with mesh, sharding_hints(batch_axes=("data",), model_axis="model",
+                              opts=opts, batch_div=1):
+        logits, aux, _ = forward(cfg, params, batch, mode="train",
+                                 remat=False)
+    return logits
+
+
+@pytest.mark.parametrize("arch,opts", [
+    ("grok-1-314b", {"moe_pin"}),
+    ("granite-8b", {"attn_carry"}),
+    ("granite-8b", {"bf16_ar"}),
+])
+def test_constraint_levers_preserve_numerics(arch, opts):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, B, S)
+    base = forward(cfg, params, batch, mode="train", remat=False)[0]
+    opt = _fwd(cfg, params, batch, frozenset(opts))
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(base),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_kv_seq_preserves_decode():
+    cfg = get_config("granite-8b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    batch = make_batch(cfg, B, S)
+    cache = init_cache(cfg, B, S + 4)
+    _, _, cache0 = forward(cfg, params, batch, mode="prefill", cache=cache)
+    tok = {"tokens": batch["tokens"][:, -1:]}
+    base, _ = decode_step(cfg, params, cache0, tok)
+    mesh = make_local_mesh()
+    with mesh, sharding_hints(opts=frozenset({"kv_seq"}), batch_div=1):
+        opt, _ = decode_step(cfg, params, cache0, tok)
+    np.testing.assert_allclose(np.asarray(opt), np.asarray(base),
+                               atol=1e-5, rtol=1e-4)
+
+
+def test_parallel_block_matches_explicit_formulation():
+    """parallel_block's fused projection == x + attn(n1(x)) + mlp(n2(x))."""
+    from repro.models import layers as L
+    from repro.models.blocks import _attn_apply, apply_block, init_block
+
+    cfg = get_config("granite-8b").reduced()
+    p = init_block(cfg, "dense", jax.random.key(3), jnp.float32)
+    x = jax.random.normal(jax.random.key(4), (B, S, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    mesh = make_local_mesh()
+    with mesh, sharding_hints(opts=frozenset({"parallel_block"}),
+                              batch_div=1):
+        fused, _, _ = apply_block(cfg, "dense", p, x, pos, mode="train",
+                                  cache=None, pos=jnp.zeros((), jnp.int32))
+
+    h1 = L.apply_norm(cfg, p["norm1"], x)
+    a, _ = _attn_apply(cfg, p["attn"], h1, pos, mode="train", cache=None,
+                       pos=jnp.zeros((), jnp.int32), window=0, causal=True)
+    h2 = L.apply_norm(cfg, p["norm2"], x)
+    m = L.apply_mlp(cfg, p["mlp"], h2)
+    want = x + a + m
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)

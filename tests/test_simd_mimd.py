@@ -1,0 +1,182 @@
+"""SIMD + MIMD quadrants: sharding specs, DLRM distributed embedding,
+heterogeneous-memory offload, service router."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.dlrm import CONFIG as DLRM_CFG
+from repro.core.misd.scheduler import Device, Job
+from repro.core.mimd import Instance, ServiceRouter
+from repro.core.simd import (
+    dlrm_forward,
+    init_dlrm,
+    lookup_traffic_bytes,
+    plan_offload,
+    shard_specs,
+    zipf_hit_rate,
+)
+from repro.core.simd.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    make_policy,
+    param_pspecs,
+)
+from repro.models import cache_specs, param_specs
+
+
+def _mesh11():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_structurally_match(arch):
+    cfg = get_config(arch)
+    mesh = _mesh11()
+    pol = dataclasses.replace(make_policy(cfg, mesh), model_size=16,
+                              data_size=16)
+    sds = param_specs(cfg)
+    specs = param_pspecs(cfg, sds, pol)
+    # same tree structure, every spec rank-matching and divisible
+    jax.tree.map(
+        lambda s, x: _check(s, x),
+        specs, sds,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _check(spec, sds):
+    assert len(spec) == len(sds.shape), (spec, sds.shape)
+    for dim, entry in zip(sds.shape, spec):
+        if entry is None:
+            continue
+        n = {"model": 16, "data": 16, "pod": 2}[entry] if isinstance(entry, str) else np.prod(
+            [{"model": 16, "data": 16, "pod": 2}[a] for a in entry])
+        assert dim % n == 0, (spec, sds.shape)
+
+
+def test_fsdp_engages_only_for_giants():
+    mesh = _mesh11()
+    big = dataclasses.replace(
+        make_policy(get_config("grok-1-314b"), mesh), model_size=16)
+    # recompute with true axis sizes
+    from repro.core.simd.sharding import make_policy as mp
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    assert mp(get_config("grok-1-314b"), FakeMesh()).fsdp
+    assert mp(get_config("llama4-maverick-400b-a17b"), FakeMesh()).fsdp
+    assert not mp(get_config("granite-8b"), FakeMesh()).fsdp
+    assert not mp(get_config("starcoder2-15b"), FakeMesh()).fsdp
+
+
+def test_cache_specs_shard_every_kv_leaf():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    cfg = get_config("phi3-medium-14b")
+    pol = make_policy(cfg, FakeMesh())
+    cs = cache_specs(cfg, 128, 32768)
+    specs = cache_pspecs(cfg, cs, pol, FakeMesh())
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    kv = [s for p, s in flat if str(p[-1]) in ("['k']", "['v']") or
+          getattr(p[-1], "key", "") in ("k", "v")]
+    assert kv and all("model" in [e for e in s if e] for s in kv)
+
+
+# --- DLRM (survey Fig. 7) ----------------------------------------------------
+
+
+def _tiny_dlrm():
+    return dataclasses.replace(
+        DLRM_CFG, num_tables=4, rows_per_table=64, embed_dim=16,
+        bottom_mlp=(32, 16), top_mlp=(32, 1))
+
+
+def test_dlrm_forward_shape_and_grad():
+    cfg = _tiny_dlrm()
+    params = init_dlrm(cfg, jax.random.key(0))
+    b = 8
+    batch = {
+        "dense": jnp.ones((b, cfg.num_dense_features)),
+        "sparse": jnp.zeros((b, cfg.num_tables, cfg.multi_hot), jnp.int32),
+    }
+    out = dlrm_forward(cfg, params, batch)
+    assert out.shape == (b,)
+    assert not jnp.isnan(out).any()
+
+
+def test_dlrm_embedding_dominates():
+    """Survey: embedding tables are 80–95%+ of DLRM weights."""
+    frac = DLRM_CFG.embedding_params() / DLRM_CFG.param_count()
+    assert frac > 0.8
+
+
+def test_dlrm_lookup_traffic_scales_with_batch():
+    assert lookup_traffic_bytes(DLRM_CFG, 64) == 2 * lookup_traffic_bytes(
+        DLRM_CFG, 32)
+
+
+def test_dlrm_shard_specs_cover_tables():
+    specs = shard_specs(DLRM_CFG)
+    assert specs["tables"] == P(None, "model", None)
+
+
+# --- heterogeneous memory (survey §4.3.2) ------------------------------------
+
+
+def test_zipf_hit_rate_monotone():
+    hs = [zipf_hit_rate(int(f * 1e6), int(1e6)) for f in (0.01, 0.1, 0.5, 1.0)]
+    assert all(a < b or b == 1.0 for a, b in zip(hs, hs[1:]))
+    assert hs[-1] == 1.0
+
+
+def test_offload_near_hbm_with_small_hot_set():
+    """[47][49]: a small HBM cache over Zipf accesses ~ on-par with DRAM."""
+    rows, row_bytes = 10_000_000, 512
+    plan = plan_offload(rows, row_bytes, hbm_budget_bytes=0.2 * rows * row_bytes)
+    assert plan.hit_rate > 0.6
+    assert plan.slowdown_vs_hbm < 12  # vs 25x raw HBM/PCIe gap
+    none = plan_offload(rows, row_bytes, hbm_budget_bytes=0)
+    assert none.slowdown_vs_hbm > plan.slowdown_vs_hbm
+
+
+# --- MIMD router -------------------------------------------------------------
+
+
+def _router(policy):
+    r = ServiceRouter(policy=policy)
+    for i in range(4):
+        r.register(Instance(f"i{i}", "m", Device(f"d{i}", 4)))
+    return r
+
+
+@pytest.mark.parametrize("policy", ["least-loaded", "p2c", "round-robin"])
+def test_router_balances(policy):
+    r = _router(policy)
+    counts = {}
+    for i in range(400):
+        inst = r.route(Job(i, "m", (0.5, 0.5), 0.01))
+        counts[inst.name] = counts.get(inst.name, 0) + 1
+        for pool in r.pools.values():
+            for it in pool:
+                r.drain(it, 0.01)
+    assert len(counts) == 4
+    assert max(counts.values()) < 3 * min(counts.values())
+
+
+def test_router_autoscale_signals():
+    r = _router("least-loaded")
+    assert r.want_scale("m") in (-1, 0)
+    for i in range(200):
+        r.route(Job(i, "m", (0.5, 0.5), 0.5))
+    assert r.want_scale("m") == 1  # pressure built up
+    assert r.route(Job(0, "unknown", (0.5, 0.5), 0.01)) is None
