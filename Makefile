@@ -1,0 +1,16 @@
+# One-word entry points for the repo's verify + bench loops.
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test bench serve-bench micro
+
+# tier-1 verify (ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# serving perf trajectory: engine vs pre-refactor baseline -> BENCH_serving.json
+bench:
+	$(PY) benchmarks/serving_bench.py
+
+# wall-clock microbenchmarks of the jitted steps
+micro:
+	$(PY) -m benchmarks.run --only micro

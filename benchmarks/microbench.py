@@ -15,17 +15,11 @@ from repro.models import init_params
 from repro.serving.engine import prefill_step, serve_step
 from repro.models import init_cache
 from repro.training import init_adamw, train_step
+from repro.util import timeit
 
 
 def _time(fn, *args, iters=10, warmup=2):
-    for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    return timeit(fn, *args, iters=iters, warmup=warmup) * 1e6  # us
 
 
 def run(report):

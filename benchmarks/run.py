@@ -22,7 +22,7 @@ def report(name, value, derived=""):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig3,fig4,table1,fig7,roofline,micro")
+                    help="comma list: fig3,fig4,table1,fig7,roofline,micro,serving")
     args = ap.parse_args()
     want = set(args.only.split(",")) if args.only else None
 
@@ -54,6 +54,10 @@ def main() -> None:
         from benchmarks import microbench
 
         microbench.run(report)
+    if on("serving"):
+        from benchmarks import serving_bench
+
+        serving_bench.run(report)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,284 @@
+"""Serving-engine benchmark: decode tokens/s, TTFT, and per-token latency
+percentiles at several slot counts, comparing the zero-copy engine against
+a faithful port of the pre-refactor hot path (per-tick host syncs, no
+donation, eager full-cache-copy slot insert, per-prompt-length retrace).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--arch granite-8b]
+        [--slot-counts 2,4,8] [--ticks 192] [--out BENCH_serving.json]
+
+Both variants run in the same process on the same reduced model, so the
+speedup column isolates the engine changes (donation + deferred sync +
+jit'd scatter), not machine noise. Results land in ``BENCH_serving.json``
+to start the serving perf trajectory.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from functools import partial
+from typing import List, Optional
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_cache, init_params
+from repro.serving import Request, ServingEngine
+from repro.serving.engine import cache_insert, prefill_step, serve_step
+
+
+# ---------------------------------------------------------------------------
+# pre-refactor baseline (faithful port of the seed ServingEngine hot path)
+# ---------------------------------------------------------------------------
+
+
+class BaselineEngine:
+    """The seed engine's steady-state loop: host-built batch every tick,
+    ``np.asarray`` round-trip every tick, non-donated decode jit, and an
+    eager (copying) cache scatter on admission."""
+
+    def __init__(self, cfg, params, *, slots: int, window: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.window = window
+        self.cache = init_cache(cfg, slots, window)
+        self.active: List[Optional[Request]] = [None] * slots
+        self._prefill = jax.jit(partial(prefill_step, cfg, window=window))
+        self._decode = jax.jit(partial(serve_step, cfg))
+
+    def try_admit(self, req: Request, now: float) -> bool:
+        for i, slot in enumerate(self.active):
+            if slot is None:
+                batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+                logits, cache1 = self._prefill(self.params, batch)
+                self.cache = cache_insert(self.cache, cache1, i, self.slots)
+                req.output.append(int(jnp.argmax(logits[0])))
+                req.prefill_done = now
+                self.active[i] = req
+                return True
+        return False
+
+    decode_ticks = 0
+
+    def step(self, now: float) -> List[Request]:
+        if not any(r is not None for r in self.active):
+            return []
+        self.decode_ticks += 1
+        last = [(r.output[-1] if r is not None and r.output else 0)
+                for r in self.active]
+        batch = {"tokens": jnp.asarray(last, jnp.int32)[:, None]}
+        nxt, _, self.cache = self._decode(self.params, self.cache, batch)
+        nxt = np.asarray(nxt)
+        finished = []
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.output.append(int(nxt[i]))
+            if r.done:
+                r.finish_time = now
+                finished.append(r)
+                self.active[i] = None
+        return finished
+
+
+# ---------------------------------------------------------------------------
+# measurements
+# ---------------------------------------------------------------------------
+
+
+def _prime(eng, slots: int, prompt_len: int, vocab: int):
+    """Admit ``slots`` never-finishing requests and warm up the jit cache."""
+    rng = np.random.default_rng(0)
+    for i in range(slots):
+        req = Request(rid=i,
+                      prompt=rng.integers(0, vocab, prompt_len).astype(np.int32),
+                      max_new_tokens=10 ** 9)
+        assert eng.try_admit(req, now=0.0)
+    for _ in range(8):
+        eng.step(0.0)
+    jax.block_until_ready(eng.cache)
+
+
+def _tick_count(eng) -> int:
+    m = getattr(eng, "metrics", None)
+    return m.decode_ticks if m is not None else eng.decode_ticks
+
+
+def _measure_round(eng, slots: int, ticks: int):
+    """Time ~``ticks`` decode ticks on a primed engine. One engine step may
+    fuse several ticks (the scanned deferred-sync window), so tokens are
+    counted from the engine's tick counter, and per-token latencies divide
+    each step's wall time by the ticks it produced. Returns
+    (tokens_per_s, per-token seconds list)."""
+    tok_s = []
+    done = 0
+    t0 = time.perf_counter()
+    while done < ticks:
+        c0 = _tick_count(eng)
+        s0 = time.perf_counter()
+        eng.step(0.0)
+        dt = time.perf_counter() - s0
+        n = _tick_count(eng) - c0
+        done += n
+        tok_s.extend([dt / n] * n if n else [])
+    if hasattr(eng, "drain"):
+        eng.drain(0.0)
+    jax.block_until_ready(eng.cache)
+    wall = time.perf_counter() - t0
+    return done * slots / wall, tok_s
+
+
+def _ab_rounds(base, eng, slots: int, ticks: int, rounds: int):
+    """Interleave baseline/engine measurement rounds (A/B/A/B...) so slow
+    drift in machine load hits both variants equally; report the median
+    round. Returns (base_tps, base_ticks, eng_tps, eng_ticks)."""
+    base_tps, eng_tps = [], []
+    base_ticks, eng_ticks = [], []
+    for _ in range(rounds):
+        tps, ts = _measure_round(base, slots, ticks)
+        base_tps.append(tps)
+        base_ticks.extend(ts)
+        tps, ts = _measure_round(eng, slots, ticks)
+        eng_tps.append(tps)
+        eng_ticks.extend(ts)
+    return (float(np.median(base_tps)), base_ticks,
+            float(np.median(eng_tps)), eng_ticks)
+
+
+def _ttft_sweep(make_engine, lengths, vocab: int):
+    """Admission wall time per prompt length on a fresh engine. The first
+    admission is the cold (compile-inclusive) TTFT; the rest show whether
+    new prompt lengths retrace (baseline) or hit the bucket cache (engine)."""
+    eng = make_engine()
+    rng = np.random.default_rng(1)
+    times = []
+    for i, plen in enumerate(lengths):
+        req = Request(rid=100 + i,
+                      prompt=rng.integers(0, vocab, plen).astype(np.int32),
+                      max_new_tokens=10 ** 9)
+        t0 = time.perf_counter()
+        assert eng.try_admit(req, now=0.0)
+        jax.block_until_ready(eng.cache)
+        times.append(time.perf_counter() - t0)
+        # free the slot so the sweep never exhausts capacity
+        for j, r in enumerate(eng.active):
+            if r is req:
+                eng.active[j] = None
+                if hasattr(eng, "decoding"):
+                    eng.decoding[j] = False
+    traces = getattr(eng, "prefill_traces", len(lengths))
+    return times, traces
+
+
+def run(report, *, arch: str = "granite-8b", slot_counts=(2, 4, 8),
+        ticks: int = 64, rounds: int = 5, sync_every: int = 16, out: str = ""):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(0))
+    window, prompt_len = 256, 32
+    results = {"arch": arch, "window": window, "ticks": ticks,
+               "rounds": rounds, "sync_every": sync_every,
+               "slot_counts": list(slot_counts),
+               "baseline": {}, "engine": {}, "speedup": {}}
+
+    for slots in slot_counts:
+        base = BaselineEngine(cfg, params, slots=slots, window=window)
+        _prime(base, slots, prompt_len, cfg.vocab_size)
+        eng = ServingEngine(cfg, params, slots=slots, window=window,
+                            sync_every=sync_every)
+        _prime(eng, slots, prompt_len, cfg.vocab_size)
+        base_tps, base_ticks, eng_tps, eng_ticks = _ab_rounds(
+            base, eng, slots, ticks, rounds)
+        speedup = eng_tps / base_tps
+        results["baseline"][slots] = {
+            "decode_tps": base_tps,
+            "tok_p50_us": float(np.percentile(base_ticks, 50) * 1e6),
+            "tok_p95_us": float(np.percentile(base_ticks, 95) * 1e6),
+        }
+        results["engine"][slots] = {
+            "decode_tps": eng_tps,
+            "tok_p50_us": float(np.percentile(eng_ticks, 50) * 1e6),
+            "tok_p95_us": float(np.percentile(eng_ticks, 95) * 1e6),
+            "host_syncs": eng.metrics.host_syncs,
+            "decode_ticks": eng.metrics.decode_ticks,
+        }
+        results["speedup"][slots] = speedup
+        report(f"serving_decode_tps_b{slots}_baseline", round(base_tps, 1),
+               f"p50={np.percentile(base_ticks,50)*1e6:.0f}us "
+               f"p95={np.percentile(base_ticks,95)*1e6:.0f}us")
+        report(f"serving_decode_tps_b{slots}_engine", round(eng_tps, 1),
+               f"p50={np.percentile(eng_ticks,50)*1e6:.0f}us "
+               f"p95={np.percentile(eng_ticks,95)*1e6:.0f}us "
+               f"syncs={eng.metrics.host_syncs}/{eng.metrics.decode_ticks}")
+        report(f"serving_decode_speedup_b{slots}", round(speedup, 2),
+               "engine vs pre-refactor baseline, same run")
+
+    geomean = float(np.exp(np.mean(np.log(list(results["speedup"].values())))))
+    results["speedup_geomean"] = geomean
+    report("serving_decode_speedup_geomean", round(geomean, 2),
+           f"across slot counts {list(slot_counts)} (small batches are "
+           f"host-bound: the hot-path rebuild's target regime)")
+
+    # TTFT: varying prompt lengths inside one power-of-two bucket
+    lengths = [17, 21, 25, 29, 31, 32]
+    base_ttft, base_traces = _ttft_sweep(
+        lambda: BaselineEngine(cfg, params, slots=2, window=window),
+        lengths, cfg.vocab_size)
+    eng_ttft, eng_traces = _ttft_sweep(
+        lambda: ServingEngine(cfg, params, slots=2, window=window,
+                              chunk_prefill=0),
+        lengths, cfg.vocab_size)
+    results["ttft"] = {
+        "prompt_lengths": lengths,
+        "baseline_ms": [t * 1e3 for t in base_ttft],
+        "engine_ms": [t * 1e3 for t in eng_ttft],
+        "baseline_warm_p50_ms": float(np.percentile(base_ttft[1:], 50) * 1e3),
+        "engine_warm_p50_ms": float(np.percentile(eng_ttft[1:], 50) * 1e3),
+        "engine_prefill_traces": eng_traces,
+    }
+    report("serving_ttft_warm_p50_ms_baseline",
+           round(results["ttft"]["baseline_warm_p50_ms"], 2),
+           f"{len(lengths)} prompt lengths -> {base_traces} traces")
+    report("serving_ttft_warm_p50_ms_engine",
+           round(results["ttft"]["engine_warm_p50_ms"], 2),
+           f"{len(lengths)} prompt lengths -> {eng_traces} trace(s), bucketed")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        report("serving_bench_json", out, "full results")
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--slot-counts", default="2,4,8")
+    ap.add_argument("--ticks", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--sync-every", type=int, default=16)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json"))
+    args = ap.parse_args()
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}")
+
+    print("name,value,derived")
+    res = run(report, arch=args.arch,
+              slot_counts=tuple(int(x) for x in args.slot_counts.split(",")),
+              ticks=args.ticks, rounds=args.rounds,
+              sync_every=args.sync_every, out=args.out)
+    print(f"# decode speedup over baseline: geomean "
+          f"{res['speedup_geomean']:.2f}x, worst slot count "
+          f"{min(res['speedup'].values()):.2f}x")
+
+
+if __name__ == "__main__":
+    main()

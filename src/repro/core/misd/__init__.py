@@ -1,4 +1,9 @@
-from repro.core.misd.batching import BatchAccumulator, adaptive_batch_size
+from repro.core.misd.batching import (
+    AdmissionPlan,
+    BatchAccumulator,
+    adaptive_batch_size,
+    plan_admission,
+)
 from repro.core.misd.interference import (
     InterferencePredictor,
     pairwise_degradation,
@@ -7,6 +12,7 @@ from repro.core.misd.interference import (
 from repro.core.misd.partition import MeshPartitioner, Meshlet, PartitionPlan
 from repro.core.misd.scheduler import (
     SCHEDULERS,
+    ChunkedPrefillPolicy,
     Device,
     FIFOScheduler,
     InterferenceAwareScheduler,

@@ -35,6 +35,33 @@ def adaptive_batch_size(cfg, *, context: int, sla_s: float,
     return best, best_lat
 
 
+@dataclass(frozen=True)
+class AdmissionPlan:
+    """Cost-model-derived admission policy for the serving engine: how many
+    decode slots to run and how long queued requests may wait to batch up
+    before being force-admitted (survey §3.3.2: batch occupancy is the
+    first-order throughput knob; the deadline bounds the latency cost)."""
+
+    slots: int
+    flush_deadline_s: float
+    step_latency_s: float
+
+
+def plan_admission(cfg, *, context: int, sla_s: float, n_chips: int = 1,
+                   max_slots: int = 256) -> AdmissionPlan:
+    """Derive (slot count, admission flush deadline) from the cost model:
+    slots = largest decode batch meeting the per-step SLA budget; deadline =
+    SLA headroom left after one decode step (floored at 10% of the SLA so a
+    mis-modeled step cannot zero the accumulation window)."""
+    slots, lat = adaptive_batch_size(
+        cfg, context=context, sla_s=sla_s, kind="decode", n_chips=n_chips,
+        max_batch=max_slots)
+    lat = lat or 0.0
+    deadline = max(sla_s - lat, 0.1 * sla_s)
+    return AdmissionPlan(slots=slots, flush_deadline_s=deadline,
+                         step_latency_s=lat)
+
+
 @dataclass
 class BatchAccumulator:
     """Deadline-bounded query accumulator."""

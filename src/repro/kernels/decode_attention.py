@@ -1,10 +1,14 @@
 """Pallas TPU decode attention (the memory-bound serving hot-spot).
 
-Single-query attention against a (rolling) KV cache: the decode step is
-bandwidth-bound (survey §3: the memory-intensive tenant class), so the
-kernel's job is streaming K/V through VMEM exactly once per step at full
-HBM bandwidth. Grid (batch*heads, kv_blocks): online softmax over kv
-blocks; invalid cache slots (slot >= n_valid) are masked.
+Attention for a small number of new queries against a (rolling) KV cache.
+S=1 is the classic decode step: bandwidth-bound (survey §3: the
+memory-intensive tenant class), so the kernel's job is streaming K/V
+through VMEM exactly once per step at full HBM bandwidth. S>1 is a
+chunked-prefill chunk whose keys were just written at slots
+[n_valid - S, n_valid): per-query validity (query i sees
+``n_valid - (S-1) + i`` slots) makes the mask causal within the chunk.
+Grid (batch*heads, kv_blocks): online softmax over kv blocks; invalid
+cache slots are masked per query row.
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ def _decode_kernel(nvalid_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr, *, block_kv: int, scale: float):
     ki = pl.program_id(1)
     nk = pl.num_programs(1)
+    sq = q_ref.shape[1]
 
     @pl.when(ki == 0)
     def _init():
@@ -30,13 +35,16 @@ def _decode_kernel(nvalid_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0].astype(F32)  # (1, d)
+    q = q_ref[0].astype(F32)  # (sq, d)
     k = k_ref[0].astype(F32)  # (bkv, d)
     v = v_ref[0].astype(F32)
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=F32) * scale  # (1, bkv)
-    slot = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (1, block_kv), 1)
-    s = jnp.where(slot < nvalid_ref[0], s, NEG_INF)
+                            preferred_element_type=F32) * scale  # (sq, bkv)
+    slot = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, (sq, block_kv), 1)
+    # per-query valid slot count: row i sees n_valid - (sq - 1) + i slots
+    row = jax.lax.broadcasted_iota(jnp.int32, (sq, block_kv), 0)
+    limit = nvalid_ref[0] - (sq - 1) + row
+    s = jnp.where(slot < limit, s, NEG_INF)
 
     m_prev = m_scr[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
@@ -56,9 +64,12 @@ def _decode_kernel(nvalid_ref, q_ref, k_ref, v_ref, o_ref,
 
 def decode_attention(q, k, v, n_valid, *, block_kv: int = 256,
                      interpret: bool = False):
-    """q: (BH, 1, D); k/v: (BH, W, D); n_valid: (BH,) int32 — number of
-    valid cache slots per row. Returns (BH, 1, D)."""
+    """q: (BH, S, D); k/v: (BH, W, D); n_valid: (BH,) int32 — number of
+    valid cache slots for the LAST query row (row i of S sees
+    ``n_valid - (S-1) + i``; S=1 recovers the classic per-row count).
+    Returns (BH, S, D)."""
     bh, w, d = k.shape
+    sq = q.shape[1]
     block_kv = min(block_kv, w)
     assert w % block_kv == 0, (w, block_kv)
     scale = d ** -0.5
@@ -70,16 +81,16 @@ def decode_attention(q, k, v, n_valid, *, block_kv: int = 256,
         in_specs=[
             pl.BlockSpec((1,), lambda b, j: (b,),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, sq, d), lambda b, j: (b, 0, 0)),
             pl.BlockSpec((1, block_kv, d), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, block_kv, d), lambda b, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, d), lambda b, j: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, sq, d), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((1,), F32),
-            pltpu.VMEM((1,), F32),
-            pltpu.VMEM((1, d), F32),
+            pltpu.VMEM((sq,), F32),
+            pltpu.VMEM((sq,), F32),
+            pltpu.VMEM((sq, d), F32),
         ],
         interpret=interpret,
     )(n_valid, q, k, v)

@@ -43,20 +43,22 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
 @partial(jax.jit, static_argnames=("interpret",))
 def decode_attention(q, k_cache, v_cache, pos, *, interpret: bool = None):
-    """q: (B, 1, H, D); caches: (B, W, Hkv, D); pos: (B,) tokens written."""
+    """q: (B, S, H, D); caches: (B, W, Hkv, D); pos: (B,) tokens written
+    INCLUDING the S queries (S=1: classic decode; S>1: chunked-prefill
+    chunk with per-query causal validity)."""
     if interpret is None:
         interpret = _default_interpret()
-    b, _, h, d = q.shape
+    b, sq, h, d = q.shape
     w, hkv = k_cache.shape[1], k_cache.shape[2]
     rep = h // hkv
     k = jnp.repeat(k_cache, rep, axis=2) if rep > 1 else k_cache
     v = jnp.repeat(v_cache, rep, axis=2) if rep > 1 else v_cache
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, 1, d)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, w, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, w, d)
     nv = jnp.repeat(jnp.minimum(pos, w).astype(jnp.int32), h)
     o = _da.decode_attention(qf, kf, vf, nv, interpret=interpret)
-    return o.reshape(b, h, 1, d).transpose(0, 2, 1, 3)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

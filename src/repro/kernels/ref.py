@@ -20,11 +20,14 @@ def ref_attention(q, k, v, *, causal: bool = True):
 
 
 def ref_decode_attention(q, k, v, n_valid):
-    """q: (BH, 1, D); k/v: (BH, W, D); n_valid: (BH,)."""
+    """q: (BH, S, D); k/v: (BH, W, D); n_valid: (BH,) valid slots for the
+    LAST query row; row i sees n_valid - (S-1) + i (causal within chunk)."""
     scale = q.shape[-1] ** -0.5
     s = jnp.einsum("bqd,bkd->bqk", q.astype(F32), k.astype(F32)) * scale
-    w = k.shape[1]
-    valid = jnp.arange(w)[None, None, :] < n_valid[:, None, None]
+    w, sq = k.shape[1], q.shape[1]
+    limit = (n_valid[:, None] - (sq - 1)
+             + jnp.arange(sq, dtype=jnp.int32)[None, :])  # (BH, S)
+    valid = jnp.arange(w)[None, None, :] < limit[:, :, None]
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(F32)).astype(q.dtype)

@@ -1,9 +1,12 @@
 """Serving driver: continuous-batching engine fed by a synthetic open-loop
 client, reporting the survey's serving metrics (QPS, latency percentiles,
-JCT, SLA attainment).
+TTFT, JCT, SLA attainment).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
         --requests 32 --slots 4 --rate 8
+
+``--slots 0`` derives the slot count and admission flush deadline from the
+cost model (repro.core.misd.batching.plan_admission) instead of constants.
 """
 from __future__ import annotations
 
@@ -23,11 +26,18 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=32)
-    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots; 0 = derive from the cost model")
     ap.add_argument("--window", type=int, default=256)
     ap.add_argument("--rate", type=float, default=8.0, help="arrivals/s")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode ticks per device->host token sync")
+    ap.add_argument("--chunk-prefill", type=int, default=64,
+                    help="chunked-prefill piece size; 0 = single-shot")
+    ap.add_argument("--sla-ms", type=float, default=50.0,
+                    help="per-step SLA budget for the admission plan")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -39,7 +49,14 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     params = init_params(cfg, jax.random.key(args.seed))
-    eng = ServingEngine(cfg, params, slots=args.slots, window=args.window)
+    eng = ServingEngine(cfg, params, slots=args.slots, window=args.window,
+                        sync_every=args.sync_every,
+                        chunk_prefill=args.chunk_prefill,
+                        sla_s=args.sla_ms / 1e3)
+    if not args.slots:
+        print(f"admission plan: slots={eng.slots} "
+              f"flush_deadline={eng.plan.flush_deadline_s*1e3:.2f}ms "
+              f"(cost-model step={eng.plan.step_latency_s*1e3:.3f}ms)")
 
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     reqs = [
@@ -58,21 +75,28 @@ def main():
     while done < args.requests:
         now = time.time() - t0
         while queue and queue[0].arrival_time <= now:
-            if eng.try_admit(queue[0], now):
-                queue.pop(0)
-            else:
-                break
+            eng.submit(queue.pop(0), now)
         finished = eng.step(time.time() - t0)
         done += len(finished)
-        if not eng.n_active and queue:  # idle until next arrival
+        if (not eng.n_active and not eng.backlog
+                and not eng.admission.pending and queue):
+            # idle until the next arrival
             time.sleep(max(0.0, queue[0].arrival_time - (time.time() - t0)))
+    done += len(eng.drain(time.time() - t0))
     wall = time.time() - t0
     eng.metrics.total_time = wall
     lats = [r.finish_time - r.arrival_time for r in reqs]
+    ttfts = [r.ttft for r in reqs if r.ttft >= 0]
+    m = eng.metrics
     print(f"served {args.requests} requests in {wall:.2f}s  "
-          f"qps={args.requests/wall:.2f}  tok/s={eng.metrics.total_tokens/wall:.1f}")
+          f"qps={args.requests/wall:.2f}  tok/s={m.total_tokens/wall:.1f}  "
+          f"ticks={m.decode_ticks}  host_syncs={m.host_syncs}  "
+          f"prefill_chunks={m.prefill_chunks}")
     print(f"latency p50={np.percentile(lats,50)*1e3:.0f}ms "
-          f"p99={np.percentile(lats,99)*1e3:.0f}ms  mean_jct={np.mean(lats)*1e3:.0f}ms")
+          f"p99={np.percentile(lats,99)*1e3:.0f}ms  "
+          f"mean_jct={np.mean(lats)*1e3:.0f}ms  "
+          f"ttft p50={np.percentile(ttfts,50)*1e3:.0f}ms "
+          f"p95={np.percentile(ttfts,95)*1e3:.0f}ms")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,10 @@ from repro.models.ssm import apply_ssd, init_ssd, init_ssd_cache
 
 F32 = jnp.float32
 
+# Block types whose decode cache is a KV ring buffer (vs recurrent state).
+# The serving engine keys bucketed/chunked prefill eligibility off this.
+KV_CACHE_BLOCKS = ("dense", "moe", "encoder", "local_attn")
+
 
 # ---------------------------------------------------------------------------
 # init
@@ -87,7 +91,7 @@ def attn_cache_window(cfg, btype: str, seq_len: int) -> int:
 def init_block_cache(cfg, btype: str, batch: int, window: int, dtype,
                      kv_dtype: str = ""):
     hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
-    if btype in ("dense", "moe", "encoder", "local_attn"):
+    if btype in KV_CACHE_BLOCKS:
         w = min(window, cfg.local_window) if btype == "local_attn" else window
         if kv_dtype == "int8":
             # quantized serving cache: per-(token, kv-head) symmetric scale
@@ -138,27 +142,33 @@ def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
 
     new_cache = cache
     if mode == "decode":
-        assert s == 1 and cache is not None
+        # s == 1: one decode step. s > 1: one chunked-prefill chunk — the
+        # chunk's keys are written at their rolling slots and the per-query
+        # validity mask in decode_attention makes attention causal within
+        # the chunk (chunk i must satisfy pos + s <= W; the engine
+        # guarantees this by falling back to single-shot prefill).
+        assert cache is not None
         w = cache["k"].shape[1]
         pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-        slot = jax.lax.rem(pos_b, w)  # per-slot rolling write index
-        rows = jnp.arange(b)
+        slots = jax.lax.rem(
+            pos_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :], w)
+        rows = jnp.arange(b)[:, None]
         if quantized:
-            kq, ks = _quant(k[:, 0])
-            vq, vs = _quant(v[:, 0])
+            kq, ks = _quant(k)
+            vq, vs = _quant(v)
             new_cache = {
-                "k": cache["k"].at[rows, slot].set(kq),
-                "v": cache["v"].at[rows, slot].set(vq),
-                "k_scale": cache["k_scale"].at[rows, slot].set(ks),
-                "v_scale": cache["v_scale"].at[rows, slot].set(vs),
+                "k": cache["k"].at[rows, slots].set(kq),
+                "v": cache["v"].at[rows, slots].set(vq),
+                "k_scale": cache["k_scale"].at[rows, slots].set(ks),
+                "v_scale": cache["v_scale"].at[rows, slots].set(vs),
             }
             kc = _dequant(new_cache["k"], new_cache["k_scale"], k.dtype)
             vc = _dequant(new_cache["v"], new_cache["v_scale"], v.dtype)
         else:
-            kc = cache["k"].at[rows, slot].set(k[:, 0])
-            vc = cache["v"].at[rows, slot].set(v[:, 0])
+            kc = cache["k"].at[rows, slots].set(k)
+            vc = cache["v"].at[rows, slots].set(v)
             new_cache = {"k": kc, "v": vc}
-        out = L.decode_attention(q, kc, vc, pos_b + 1, window=window)
+        out = L.decode_attention(q, kc, vc, pos_b + s, window=window)
     else:
         out = L.attention(q, k, v, causal=causal, window=window)
         if cache is not None:  # prefill: fill the cache with the last W keys
@@ -190,7 +200,7 @@ def apply_block(cfg, btype: str, p, x, rope_pos, *, mode: str, cache=None,
     from repro.util import hint_opt
 
     aux = jnp.zeros((), F32)
-    if btype in ("dense", "moe", "encoder", "local_attn"):
+    if btype in KV_CACHE_BLOCKS:
         causal = cfg.causal and btype != "encoder"
         window = cfg.local_window if btype == "local_attn" else 0
         if hint_opt("parallel_block") and btype != "moe":

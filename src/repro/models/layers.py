@@ -348,17 +348,21 @@ def attention(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0,
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
-    """q (B,1,H,D); k/v_cache (B,W,Hkv,D); pos (B,) int32 = per-slot count
-    of tokens already written (incl. the current one). Valid cache slots:
-    min(pos, W) (rolling buffers overwrite at pos % W, so all W slots are
-    valid once pos >= W)."""
+    """q (B,S,H,D); k/v_cache (B,W,Hkv,D); pos (B,) int32 = per-slot count
+    of tokens already written INCLUDING all S queries. S=1 is the decode
+    step; S>1 is a chunked-prefill chunk whose keys were just written at
+    slots [pos-S, pos): query i attends cache slots < pos-S+1+i, which is
+    causal within the chunk because chunk keys sit at their own positions.
+    Valid cache slots cap at W (rolling buffers overwrite at pos % W, so
+    all W slots are valid once pos >= W)."""
     b, w, hkv, d = k_cache.shape
+    sq = q.shape[1]
     h = q.shape[2]
     g = h // hkv
-    # grouped-GQA einsum: q reshaped to (B, 1, Hkv, G, D) contracts the
+    # grouped-GQA einsum: q reshaped to (B, S, Hkv, G, D) contracts the
     # shared kv heads directly — the KV cache is never materialized at
     # q-head multiplicity (a 6x HBM-traffic saving for 48q/8kv configs).
-    qg = q.reshape(b, 1, hkv, g, d)
+    qg = q.reshape(b, sq, hkv, g, d)
     # Perf lever "kv_seq" (flash-decoding style): the cache is sharded
     # along the sequence dim, so scores/probs inherit a seq-sharded layout
     # and softmax statistics reduce across shards — pin the intermediates
@@ -375,9 +379,12 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
     scores = jnp.einsum("bqcgd,bwcd->bcgqw", qg, k,
                         preferred_element_type=F32) * scale
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    n_valid = jnp.minimum(pos, w)
+    # per-query valid count: query i (of S) sees pos - S + 1 + i slots
+    n_valid = jnp.minimum(
+        pos[:, None] - (sq - 1) + jnp.arange(sq, dtype=jnp.int32)[None, :],
+        w)  # (B, S)
     valid = (jnp.arange(w)[None, None, None, None, :]
-             < n_valid[:, None, None, None, None])
+             < n_valid[:, None, None, :, None])
     scores = jnp.where(valid, scores, -1e30)
     if pin_seq:
         scores = wsc(scores, bspec, None, None, None, ma)
@@ -386,4 +393,4 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
         probs = wsc(probs, bspec, None, None, None, ma)
     out = jnp.einsum("bcgqw,bwcd->bqcgd", probs.astype(q.dtype), v,
                      preferred_element_type=F32)
-    return out.astype(q.dtype).reshape(b, 1, h, d)
+    return out.astype(q.dtype).reshape(b, sq, h, d)

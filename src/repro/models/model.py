@@ -151,9 +151,9 @@ def _embed_inputs(cfg, params, batch):
     if cfg.rope_variant == "mrope":
         pos = batch["positions"]  # (3, B, S) from the (stubbed) frontend
     else:
-        if "pos" in batch:  # decode: per-slot absolute positions (B,)
+        if "pos" in batch:  # decode: per-slot absolute start positions (B,)
             p = jnp.broadcast_to(jnp.asarray(batch["pos"], jnp.int32), (b,))
-            pos = jnp.broadcast_to(p[:, None], (b, s))
+            pos = p[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
         else:
             pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     return x, pos
@@ -236,8 +236,11 @@ def forward(cfg, params, batch, *, mode: str = "train",
 
 
 def decode_step(cfg, params, cache, batch):
-    """One-token decode. batch: {"tokens": (B,1)} (+ positions for mrope).
-    Returns (logits (B,1,V), new_cache)."""
+    """Incremental decode against the cache. batch: {"tokens": (B,S)}
+    (+ positions for mrope). S=1 is the classic one-token decode step;
+    S>1 is a chunked-prefill chunk (attention-block archs only: recurrent
+    mixers carry single-step state). Returns (logits (B,S,V), new_cache)
+    with pos advanced by S."""
     pattern, n_repeat, tail = block_program(cfg)
     pos = cache["pos"]
     batch = dict(batch)
@@ -270,5 +273,5 @@ def decode_step(cfg, params, cache, batch):
     if head is None:
         head = params["embed"].T
     logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=F32)
-    new_cache = {"body": new_body, "tail": new_tail, "pos": pos + 1}
+    new_cache = {"body": new_body, "tail": new_tail, "pos": pos + x.shape[1]}
     return logits, new_cache

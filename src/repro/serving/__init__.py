@@ -1,10 +1,27 @@
-from repro.serving.engine import ServingEngine, generate, prefill_step, serve_step
+from repro.serving.engine import (
+    ServingEngine,
+    bucketed_prefill_step,
+    cache_insert,
+    decode_scan_step,
+    decode_tick,
+    generate,
+    prefill_chunk_step,
+    prefill_step,
+    prompt_bucket,
+    serve_step,
+)
 from repro.serving.request import Request, ServeMetrics
 
 __all__ = [
     "ServingEngine",
+    "bucketed_prefill_step",
+    "cache_insert",
+    "decode_scan_step",
+    "decode_tick",
     "generate",
+    "prefill_chunk_step",
     "prefill_step",
+    "prompt_bucket",
     "serve_step",
     "Request",
     "ServeMetrics",

@@ -3,22 +3,43 @@ executor (the survey's "adaptive batching" [8][4] in its modern form).
 
 The engine maintains B decode slots backed by one batched cache pytree.
 Each slot runs an independent request (per-slot positions / rolling KV).
-When a slot finishes, the next queued request is prefilled (B=1) and its
-cache is scattered into the slot — decode never stalls for prefill sizing.
+The steady-state decode loop is zero-copy and zero-recompile:
+
+  * buffer donation — the batched KV cache is donated to the jit'd decode
+    tick and to the jit'd slot-scatter (``cache_insert``), so XLA updates
+    it in place instead of copying every leaf every tick;
+  * device-resident tokens — the sampled-token carry and (m)rope positions
+    never leave the device in steady state; token values are synced to the
+    host once every ``sync_every`` ticks in a single transfer;
+  * bucketed prefill — prompts are padded to power-of-two buckets so jit's
+    shape-keyed compile cache retraces once per bucket, not once per
+    prompt length (``prefill_traces`` is the compile-count probe);
+  * chunked prefill — long prompts are split into fixed-size chunks that
+    interleave with decode ticks (``ChunkedPrefillPolicy`` decides how
+    many chunks fit per tick from the cost model), so admitting a long
+    request no longer stalls in-flight decode slots;
+  * cost-model admission — slot count and queue flush deadlines come from
+    ``repro.core.misd.batching.plan_admission`` instead of constants.
 
 All steps are pure jit functions; the executor is the only stateful part.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
+from dataclasses import dataclass
 from functools import partial
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.misd.batching import BatchAccumulator, plan_admission
+from repro.core.misd.scheduler import ChunkedPrefillPolicy
 from repro.models import decode_step, forward, init_cache
+from repro.models.blocks import KV_CACHE_BLOCKS
+from repro.models.model import block_program
 from repro.serving.request import Request, ServeMetrics
 
 
@@ -36,6 +57,46 @@ def prefill_step(cfg, params, batch, *, window: int):
     return logits[:, -1], cache
 
 
+def bucketed_prefill_step(cfg, params, batch, true_len, *, window: int):
+    """Prefill a prompt padded (at the end) to a bucket length. ``true_len``
+    is a traced int32 scalar, so every prompt length inside one bucket
+    shares a single trace. Causality keeps the pad garbage out of the real
+    tokens' keys; the returned cache's ``pos`` is clamped to ``true_len``
+    so decode's validity mask hides the garbage slots until the rolling
+    write index overwrites them. Returns (first_token (B,), last_true_token
+    logits (B, V), cache)."""
+    b = batch["tokens"].shape[0]
+    cache = init_cache(cfg, b, window)
+    logits, _, cache = forward(cfg, params, batch, mode="prefill", cache=cache)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+                                        keepdims=False)
+    cache["pos"] = jnp.full((b,), true_len, jnp.int32)
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return tok, last, cache
+
+
+def prefill_chunk_step(cfg, params, cache, tokens, true_len):
+    """One chunk of incremental prefill into a (B=1) cache via the
+    multi-token decode path. ``tokens`` (B, C) may carry end padding on the
+    final chunk; ``true_len`` (traced int32) clamps the advanced position
+    so the pad keys stay masked. Returns (token (B,) argmax at the last
+    true position, last-true-position logits (B, V), new_cache)."""
+    b, c = tokens.shape
+    start = cache["pos"]
+    batch = {"tokens": tokens}
+    if cfg.rope_variant == "mrope":
+        p = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        batch["positions"] = jnp.broadcast_to(p[None], (3, b, c))
+    logits, new_cache = decode_step(cfg, params, cache, batch)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    new_cache["pos"] = jnp.minimum(new_cache["pos"], true_len)
+    idx = jnp.clip(true_len - 1 - start[0], 0, c - 1)
+    last = jax.lax.dynamic_index_in_dim(logits, idx, axis=1, keepdims=False)
+    tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    return tok, last, new_cache
+
+
 def serve_step(cfg, params, cache, batch):
     """One decode step for every active slot: ONE new token against the KV
     cache. Returns (next_tokens (B,), logits (B,V), new_cache)."""
@@ -44,24 +105,109 @@ def serve_step(cfg, params, cache, batch):
     return nxt, logits[:, -1], new_cache
 
 
-def _cache_batch_axis(path_leaf_shape, batch: int):
-    """Find the batch axis of a cache leaf (0 for tail leaves, 1 for stacked
-    body leaves)."""
-    for ax, n in enumerate(path_leaf_shape):
-        if n == batch:
+def decode_tick(cfg, params, cache, tokens):
+    """The engine's steady-state step: ``tokens`` (B,) is the device-resident
+    last-token carry; (m)rope positions are built on device from the cache's
+    ``pos`` leaf — no host round-trip. Returns (next_tokens (B,), new_cache).
+    Jitted with the cache donated: the KV pytree updates in place."""
+    batch = {"tokens": tokens[:, None]}
+    if cfg.rope_variant == "mrope":
+        b = tokens.shape[0]
+        batch["positions"] = jnp.broadcast_to(
+            cache["pos"][None, :, None], (3, b, 1))
+    logits, new_cache = decode_step(cfg, params, cache, batch)
+    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    return nxt, new_cache
+
+
+def decode_scan_step(cfg, params, cache, tokens, *, n: int):
+    """``n`` fused decode ticks as one jitted ``lax.scan``: one dispatch and
+    one host sync per ``n`` tokens instead of per token. The engine uses
+    this whenever nothing interrupts the window (no pending admissions, no
+    prefill chunks, every active request has >= n tokens to go), falling
+    back to single ticks at scheduling boundaries. Returns
+    (final_tokens (B,), token_history (n, B), new_cache)."""
+
+    def body(carry, _):
+        toks, c = carry
+        nxt, c = decode_tick(cfg, params, c, toks)
+        return (nxt, c), nxt
+
+    (toks, cache), hist = jax.lax.scan(body, (tokens, cache), None, length=n)
+    return toks, hist, cache
+
+
+def _cache_batch_axis(big_shape, small_shape, batch: int):
+    """Find the slot (batch) axis of a batched cache leaf: the axis where
+    the batched leaf has ``batch`` entries and the B=1 leaf has one. Both
+    conditions are required — stacked body leaves carry an ``n_repeat``
+    leading axis that can collide with ``batch`` by value."""
+    for ax, (n_big, n_small) in enumerate(zip(big_shape, small_shape)):
+        if n_big == batch and n_small == 1:
             return ax
-    raise ValueError(f"no batch axis {batch} in {path_leaf_shape}")
+    raise ValueError(f"no batch axis {batch} in {big_shape} vs {small_shape}")
 
 
-def cache_insert(batched_cache, single_cache, slot: int, batch: int):
-    """Scatter a B=1 cache into slot `slot` of a batched cache."""
+def cache_insert(batched_cache, single_cache, slot, batch: int):
+    """Scatter a B=1 cache into slot ``slot`` of a batched cache. ``slot``
+    may be a traced int32 scalar — one trace covers every slot index (the
+    engine jits this with the batched cache donated, making admission a
+    true in-place scatter instead of a full-cache copy)."""
 
     def ins(big, small):
-        ax = _cache_batch_axis(big.shape, batch)
+        ax = _cache_batch_axis(big.shape, small.shape, batch)
         return jax.lax.dynamic_update_slice_in_dim(
             big, small.astype(big.dtype), slot, ax)
 
     return jax.tree.map(ins, batched_cache, single_cache)
+
+
+def _token_set(tokens, tok, slot):
+    """Write a (1,) token into the (B,) device carry at ``slot`` (traced)."""
+    return jax.lax.dynamic_update_slice_in_dim(tokens, tok.astype(tokens.dtype),
+                                               slot, 0)
+
+
+# ---------------------------------------------------------------------------
+# engine helpers
+# ---------------------------------------------------------------------------
+
+
+def _attn_only(cfg) -> bool:
+    """True when every block's decode cache is a KV buffer (no recurrent
+    state) — the precondition for end-padded bucketing and chunked prefill."""
+    pattern, _, tail = block_program(cfg)
+    return all(bt in KV_CACHE_BLOCKS for bt in pattern + tail)
+
+
+def _min_cache_window(cfg, window: int) -> int:
+    """Smallest KV ring among the model's attention blocks: bucketed /
+    chunked prefill must fit entirely inside it (a multi-query chunk that
+    wraps the ring would expose chunk-future keys to earlier queries)."""
+    pattern, _, tail = block_program(cfg)
+    w = window
+    for bt in pattern + tail:
+        if bt == "local_attn":
+            w = min(w, cfg.local_window)
+    return w
+
+
+def prompt_bucket(n: int, *, min_bucket: int = 16) -> int:
+    """Power-of-two bucket for a prompt of ``n`` tokens."""
+    return max(min_bucket, 1 << max(n - 1, 1).bit_length())
+
+
+@dataclass
+class _PrefillJob:
+    """A request mid-way through chunked prefill (slot reserved, B=1 cache
+    accumulating chunks)."""
+
+    req: Request
+    slot: int
+    cache: dict
+    tokens: jnp.ndarray  # (1, padded_len) device-resident prompt
+    true_len: np.int32
+    next_off: int = 0
 
 
 # ---------------------------------------------------------------------------
@@ -72,78 +218,308 @@ def cache_insert(batched_cache, single_cache, slot: int, batch: int):
 class ServingEngine:
     """Single-instance engine (SISD quadrant) with continuous batching.
 
-    ``slots``: max concurrent decode streams. ``window``: KV window.
+    ``slots``: max concurrent decode streams (0/None -> derived from the
+    cost model via ``plan_admission``). ``window``: KV window.
+    ``sync_every``: decode ticks between device->host token syncs (forced
+    to 1 when ``eos_id`` >= 0, since stopping needs token values).
+    ``chunk_prefill``: chunk size for interleaved prefill (0 disables).
+    ``bucket_prompts``: pad prefill to power-of-two buckets.
+    ``donate``: donate the KV cache to the jit'd steps (in-place update).
     """
 
-    def __init__(self, cfg, params, *, slots: int = 4, window: int = 512,
-                 eos_id: int = -1):
+    def __init__(self, cfg, params, *, slots: Optional[int] = 4,
+                 window: int = 512, eos_id: int = -1, sync_every: int = 8,
+                 donate: bool = True, bucket_prompts: bool = True,
+                 chunk_prefill: int = 64, sla_s: float = 0.05,
+                 n_chips: int = 1,
+                 prefill_policy: Optional[ChunkedPrefillPolicy] = None):
         self.cfg = cfg
         self.params = params
+        self.plan = plan_admission(cfg, context=window, sla_s=sla_s,
+                                   n_chips=n_chips)
+        if not slots:
+            slots = self.plan.slots
         self.slots = slots
         self.window = window
         self.eos_id = eos_id
-        self.cache = init_cache(cfg, slots, window)
-        self.active: List[Optional[Request]] = [None] * slots
-        self._prefill = jax.jit(
-            partial(prefill_step, cfg, window=window), static_argnames=())
-        self._decode = jax.jit(partial(serve_step, cfg))
+        self.sync_every = 1 if eos_id >= 0 else max(1, sync_every)
         self.metrics = ServeMetrics()
 
+        self._attn_only = _attn_only(cfg)
+        self._min_window = _min_cache_window(cfg, window)
+        self.bucket_prompts = bucket_prompts and self._attn_only
+        if prefill_policy is not None:  # the policy's chunk size wins
+            chunk_prefill = prefill_policy.chunk
+        self.chunk = chunk_prefill if (chunk_prefill and self._attn_only) else 0
+        self.prefill_policy = prefill_policy or ChunkedPrefillPolicy(
+            chunk=self.chunk or 64)
+
+        # --- device state (exclusively owned: donation-safe) ---
+        self.cache = init_cache(cfg, slots, window)
+        self._tokens = jnp.zeros((slots,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.decoding: List[bool] = [False] * slots
+        self._unsynced: List[jnp.ndarray] = []  # per-tick (B,) token arrays
+        self._finished: List[Request] = []
+        self._jobs: Deque[_PrefillJob] = deque()
+
+        # --- admission queue (deadline from the cost model) ---
+        self.backlog: Deque[Request] = deque()
+        self.admission = BatchAccumulator(
+            target_batch=slots, deadline_s=self.plan.flush_deadline_s)
+
+        # --- jit'd steps with compile-count probes ---
+        self.prefill_traces = 0
+        self.decode_traces = 0
+        donate_cache = (1,) if donate else ()
+
+        def _probed_decode(params, cache, tokens):
+            self.decode_traces += 1
+            return decode_tick(cfg, params, cache, tokens)
+
+        def _probed_scan(params, cache, tokens):
+            self.decode_traces += 1
+            return decode_scan_step(cfg, params, cache, tokens,
+                                    n=self.sync_every)
+
+        def _probed_bucketed(params, batch, true_len):
+            self.prefill_traces += 1
+            return bucketed_prefill_step(cfg, params, batch, true_len,
+                                         window=window)
+
+        def _probed_exact(params, batch):
+            self.prefill_traces += 1
+            return prefill_step(cfg, params, batch, window=window)
+
+        self._decode = jax.jit(_probed_decode, donate_argnums=donate_cache)
+        self._decode_scan = jax.jit(_probed_scan, donate_argnums=donate_cache)
+        self._prefill_bucketed = jax.jit(_probed_bucketed)
+        self._prefill_exact = jax.jit(_probed_exact)
+        self._prefill_chunk = jax.jit(
+            partial(prefill_chunk_step, cfg),
+            donate_argnums=(1,) if donate else ())
+        self._insert = jax.jit(
+            partial(cache_insert, batch=slots),
+            donate_argnums=(0,) if donate else ())
+        self._set_token = jax.jit(_token_set)
+
     # -- admission ---------------------------------------------------------
+    def submit(self, req: Request, now: float):
+        """Admit immediately while free capacity exists (holding a request
+        back from an idle slot buys nothing); once saturated, queue and
+        batch admissions up to the cost-model deadline (``plan_admission``)
+        so freed slots refill in groups."""
+        if (not self.backlog and not self.admission.pending
+                and self.try_admit(req, now)):
+            return
+        flushed = self.admission.add(req, now)
+        if flushed:
+            self.backlog.extend(flushed)
+            self._drain_backlog(now)
+
+    def _pump_admissions(self, now: float):
+        flushed = self.admission.poll(now)
+        if flushed:
+            self.backlog.extend(flushed)
+        self._drain_backlog(now)
+
+    def _drain_backlog(self, now: float):
+        while self.backlog:
+            if not self.try_admit(self.backlog[0], now):
+                break
+            self.backlog.popleft()
+
     def try_admit(self, req: Request, now: float) -> bool:
+        """Claim a free slot for ``req``. Long prompts (when chunking is on
+        and the prompt fits the KV ring) enter chunked prefill: the slot is
+        reserved and the prompt is processed ``chunk`` tokens per tick,
+        interleaved with decode. Short prompts prefill immediately
+        (bucketed when possible)."""
         for i, slot in enumerate(self.active):
-            if slot is None:
-                self._admit_at(req, i, now)
+            if slot is None and not any(j.slot == i for j in self._jobs):
+                if self._chunkable(req):
+                    self._start_chunked(req, i)
+                else:
+                    self._admit_now(req, i, now)
                 return True
         return False
 
-    def _admit_at(self, req: Request, slot: int, now: float):
-        batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
-        if self.cfg.rope_variant == "mrope":
-            s = req.prompt_len
-            batch["positions"] = jnp.broadcast_to(
-                jnp.arange(s, dtype=jnp.int32), (3, 1, s))
-        logits, cache1 = self._prefill(self.params, batch)
-        self.cache = cache_insert(self.cache, cache1, slot, self.slots)
-        first = int(jnp.argmax(logits[0]))
-        req.output.append(first)
+    def _chunkable(self, req: Request) -> bool:
+        return (self.chunk > 0
+                and req.prompt_len > self.chunk
+                and _padded_len(req.prompt_len, self.chunk) <= self._min_window)
+
+    def _bucket_for(self, plen: int) -> Optional[int]:
+        if not self.bucket_prompts:
+            return None
+        b = prompt_bucket(plen)
+        return b if b <= self._min_window else None
+
+    def _admit_now(self, req: Request, slot: int, now: float):
+        plen = req.prompt_len
+        bucket = self._bucket_for(plen)
+        if bucket is not None:
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :plen] = req.prompt
+            batch = {"tokens": jnp.asarray(padded)}
+            if self.cfg.rope_variant == "mrope":
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(bucket, dtype=jnp.int32), (3, 1, bucket))
+            tok, _, cache1 = self._prefill_bucketed(
+                self.params, batch, np.int32(plen))
+        else:
+            batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
+            if self.cfg.rope_variant == "mrope":
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(plen, dtype=jnp.int32), (3, 1, plen))
+            logits, cache1 = self._prefill_exact(self.params, batch)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._activate(req, slot, tok, cache1, now)
+
+    def _start_chunked(self, req: Request, slot: int):
+        padded_len = _padded_len(req.prompt_len, self.chunk)
+        padded = np.zeros((1, padded_len), np.int32)
+        padded[0, :req.prompt_len] = req.prompt
+        self._jobs.append(_PrefillJob(
+            req=req, slot=slot,
+            cache=init_cache(self.cfg, 1, self.window),
+            tokens=jnp.asarray(padded),
+            true_len=np.int32(req.prompt_len)))
+        self.active[slot] = req  # reserve (decoding stays False)
+
+    def _run_prefill_chunks(self, now: float):
+        if not self._jobs:
+            return
+        pending = sum(
+            (j.tokens.shape[1] - j.next_off) // self.chunk for j in self._jobs)
+        n = self.prefill_policy.chunks_this_tick(
+            self.cfg, n_decoding=self.n_decoding, pending_chunks=pending,
+            context=self.window)
+        for _ in range(n):
+            if not self._jobs:
+                break
+            job = self._jobs[0]
+            chunk_toks = jax.lax.slice_in_dim(
+                job.tokens, job.next_off, job.next_off + self.chunk, axis=1)
+            tok, _, job.cache = self._prefill_chunk(
+                self.params, job.cache, chunk_toks, job.true_len)
+            job.next_off += self.chunk
+            self.metrics.prefill_chunks += 1
+            if job.next_off >= job.tokens.shape[1]:
+                self._jobs.popleft()
+                self._activate(job.req, job.slot, tok, job.cache, now)
+
+    def _activate(self, req: Request, slot: int, tok, cache1, now: float):
+        """Install a prefilled request into its slot: scatter the B=1 cache
+        (donated, in-place), set the device token carry, record the first
+        token. Forces a token flush first so the deferred-sync window only
+        ever spans a fixed slot membership."""
+        self._flush(now)
+        self.cache = self._insert(self.cache, cache1, np.int32(slot))
+        self._tokens = self._set_token(self._tokens, tok, np.int32(slot))
+        req.output.append(int(tok[0]))
         req.prefill_done = now
+        self.metrics.ttfts.append(req.ttft)
         self.active[slot] = req
+        self.decoding[slot] = True
 
     # -- decode tick --------------------------------------------------------
     def step(self, now: float) -> List[Request]:
-        """One batched decode step; returns requests finished this tick."""
-        if not any(r is not None for r in self.active):
-            return []
-        last = [
-            (r.output[-1] if r is not None and r.output else 0)
-            for r in self.active
-        ]
-        batch = {"tokens": jnp.asarray(last, jnp.int32)[:, None]}
-        if self.cfg.rope_variant == "mrope":
-            pos = np.asarray(self.cache["pos"])
-            batch["positions"] = jnp.broadcast_to(
-                jnp.asarray(pos, jnp.int32)[None, :, None], (3, self.slots, 1))
-        nxt, _, self.cache = self._decode(self.params, self.cache, batch)
-        nxt = np.asarray(nxt)
-        finished = []
+        """One engine tick: pump queued admissions, run prefill chunks per
+        the interleave policy, then batched decode. In steady state (no
+        pending admissions or prefill chunks, every active request has >=
+        sync_every tokens to go) the whole deferred-sync window runs as ONE
+        fused jitted scan — one dispatch and one host transfer per
+        sync_every tokens. Scheduling boundaries fall back to single ticks.
+        Returns the requests that finished (host-visible) this tick."""
+        self._pump_admissions(now)
+        self._run_prefill_chunks(now)
+        if not any(self.decoding):
+            return self._take_finished()
+        if self._fusable():
+            toks, hist, self.cache = self._decode_scan(
+                self.params, self.cache, self._tokens)
+            self._tokens = toks
+            self.metrics.decode_ticks += self.sync_every
+            self._distribute(np.asarray(hist), now)
+            return self._take_finished()
+        nxt, self.cache = self._decode(self.params, self.cache, self._tokens)
+        self._tokens = nxt
+        self._unsynced.append(nxt)
+        self.metrics.decode_ticks += 1
+        pend = len(self._unsynced)
+        if (pend >= self.sync_every
+                or any(r is not None and d
+                       and len(r.output) + pend >= r.max_new_tokens
+                       for r, d in zip(self.active, self.decoding))):
+            self._flush(now)
+        return self._take_finished()
+
+    def _fusable(self) -> bool:
+        return (self.sync_every > 1
+                and not self._unsynced
+                and not self._jobs
+                and not self.backlog
+                and not self.admission.pending
+                and all(r.max_new_tokens - len(r.output) >= self.sync_every
+                        for r, d in zip(self.active, self.decoding)
+                        if r is not None and d))
+
+    def _flush(self, now: float = None):
+        """One host sync for the whole deferred window: transfers the
+        stacked (T, B) token block and distributes tokens to requests."""
+        if not self._unsynced:
+            return
+        toks = np.asarray(jnp.stack(self._unsynced))
+        self._unsynced = []
+        self._distribute(toks, now)
+
+    def _distribute(self, toks: np.ndarray, now: float = None):
+        """Hand a (T, B) host token block to the per-slot requests."""
+        self.metrics.host_syncs += 1
+        t_now = time.time() if now is None else now
         for i, r in enumerate(self.active):
-            if r is None:
+            if r is None or not self.decoding[i]:
                 continue
-            tok = int(nxt[i])
-            r.output.append(tok)
-            if r.done or tok == self.eos_id:
-                r.finish_time = now
-                finished.append(r)
-                self.active[i] = None
-                self.metrics.completed += 1
-                self.metrics.total_tokens += len(r.output)
-                self.metrics.jcts.append(now - r.arrival_time)
-        return finished
+            for t in range(toks.shape[0]):
+                if r.done:
+                    break
+                tok = int(toks[t, i])
+                r.output.append(tok)
+                if r.done or tok == self.eos_id:
+                    r.finish_time = t_now
+                    self._finished.append(r)
+                    self.active[i] = None
+                    self.decoding[i] = False
+                    self.metrics.completed += 1
+                    self.metrics.total_tokens += len(r.output)
+                    self.metrics.jcts.append(t_now - r.arrival_time)
+                    break
+
+    def _take_finished(self) -> List[Request]:
+        out, self._finished = self._finished, []
+        return out
+
+    def drain(self, now: float):
+        """Flush any deferred tokens (end-of-run bookkeeping)."""
+        self._flush(now)
+        return self._take_finished()
 
     @property
     def n_active(self) -> int:
         return sum(r is not None for r in self.active)
+
+    @property
+    def n_decoding(self) -> int:
+        return sum(self.decoding)
+
+    @property
+    def n_prefilling(self) -> int:
+        return len(self._jobs)
+
+
+def _padded_len(n: int, chunk: int) -> int:
+    return ((n + chunk - 1) // chunk) * chunk
 
 
 def generate(cfg, params, prompt: np.ndarray, max_new_tokens: int,

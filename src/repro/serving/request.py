@@ -34,6 +34,13 @@ class Request:
     def done(self) -> bool:
         return len(self.output) >= self.max_new_tokens
 
+    @property
+    def ttft(self) -> float:
+        """Time to first token (prefill completion) relative to arrival."""
+        if self.prefill_done < 0:
+            return -1.0
+        return self.prefill_done - self.arrival_time
+
 
 @dataclass
 class ServeMetrics:
@@ -44,7 +51,11 @@ class ServeMetrics:
     total_time: float = 0.0
     latencies: List[float] = field(default_factory=list)
     jcts: List[float] = field(default_factory=list)  # job completion times
+    ttfts: List[float] = field(default_factory=list)  # time to first token
     sla_violations: int = 0
+    decode_ticks: int = 0  # batched decode steps executed
+    host_syncs: int = 0  # device->host token transfers (1 per N ticks)
+    prefill_chunks: int = 0  # chunked-prefill pieces interleaved with decode
 
     @property
     def qps(self) -> float:
@@ -62,3 +73,8 @@ class ServeMetrics:
     @property
     def mean_jct(self) -> float:
         return float(np.mean(self.jcts)) if self.jcts else 0.0
+
+    def ttft_p(self, q: float) -> float:
+        if not self.ttfts:
+            return 0.0
+        return float(np.percentile(np.asarray(self.ttfts), q))

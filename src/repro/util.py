@@ -11,8 +11,25 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
+import time
 
 import jax
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Wall-clock seconds per call of a (jitted) function, with
+    ``block_until_ready`` fencing both the warmup and the timed region so
+    async dispatch cannot skew the measurement (the timer would otherwise
+    stop while work is still queued on the device)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
 
 _UNROLL = contextvars.ContextVar("unroll_scans", default=False)
 _ATTN_CHUNK = contextvars.ContextVar("attn_chunk", default=1024)

@@ -57,6 +57,35 @@ def test_decode_attention(w, d, dtype):
         atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.parametrize("sq", [4, 8])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_chunked(sq, dtype):
+    """Chunked-prefill queries: per-query validity == causal-within-chunk.
+    The S-query kernel call must match S separate 1-query calls."""
+    b, h, kv, w, d = 2, 4, 2, 128, 64
+    q = _mk(7, (b, sq, h, d), dtype)
+    kc = _mk(8, (b, w, kv, d), dtype)
+    vc = _mk(9, (b, w, kv, d), dtype)
+    pos = jnp.asarray([40, w], jnp.int32)  # tokens written incl. the chunk
+    out = ops.decode_attention(q, kc, vc, pos, interpret=True)
+    kk = jnp.repeat(kc, h // kv, axis=2).transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    vv = jnp.repeat(vc, h // kv, axis=2).transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    qq = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    nv = jnp.repeat(jnp.minimum(pos, w), h)
+    want = ref.ref_decode_attention(qq, kk, vv, nv)
+    want = want.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+    # row-by-row against single-query calls with shrinking validity
+    for i in range(sq):
+        one = ops.decode_attention(q[:, i:i + 1], kc, vc,
+                                   pos - (sq - 1 - i), interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(out[:, i:i + 1], np.float32),
+            np.asarray(one, np.float32), atol=TOL[dtype], rtol=TOL[dtype])
+
+
 @pytest.mark.parametrize("s", [128, 384])
 @pytest.mark.parametrize("l", [128, 256])
 @pytest.mark.parametrize("dtype", [jnp.float32])

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail collection
 from hypothesis import given, settings, strategies as st
 
 from repro.core.costmodel import WorkEstimate, estimate_decode
