@@ -1,15 +1,23 @@
 # One-word entry points for the repo's verify + bench loops.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test bench serve-bench micro
+.PHONY: test lint bench bench-smoke serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
+# pyflakes-critical lint tier (ruff.toml); check-only — CI never autofixes
+lint:
+	ruff check --no-fix .
+
 # serving perf trajectory: engine vs pre-refactor baseline -> BENCH_serving.json
 bench:
 	$(PY) benchmarks/serving_bench.py
+
+# CI gate: tiny serving run failing on compile-count regressions
+bench-smoke:
+	$(PY) benchmarks/serving_bench.py --smoke
 
 # wall-clock microbenchmarks of the jitted steps
 micro:

@@ -93,15 +93,34 @@ class BaselineEngine:
 # ---------------------------------------------------------------------------
 
 
-def _prime(eng, slots: int, prompt_len: int, vocab: int):
-    """Admit ``slots`` never-finishing requests and warm up the jit cache."""
-    rng = np.random.default_rng(0)
+def _release_all(eng):
+    """Vacate every slot (and, on the paged engine, reclaim its pages)."""
+    if hasattr(eng, "drain"):
+        eng.drain(0.0)
+    for i, r in enumerate(eng.active):
+        if r is None:
+            continue
+        if hasattr(eng, "release_slot"):
+            eng.release_slot(i)
+        else:
+            eng.active[i] = None
+
+
+def _prime(eng, slots: int, prompt_len: int, vocab: int, budget: int,
+           *, warmup: int = 2, seed: int = 0):
+    """(Re)admit ``slots`` fresh streams with a finite token budget and warm
+    the jit cache. Finite budgets keep every variant's attention working at
+    the same KV width (a paged request's lifetime tokens cannot wrap the way
+    a rolling ring does), so rounds re-prime instead of running one endless
+    stream per slot — admission cost stays outside the timed window."""
+    _release_all(eng)
+    rng = np.random.default_rng(seed)
     for i in range(slots):
         req = Request(rid=i,
                       prompt=rng.integers(0, vocab, prompt_len).astype(np.int32),
-                      max_new_tokens=10 ** 9)
+                      max_new_tokens=budget)
         assert eng.try_admit(req, now=0.0)
-    for _ in range(8):
+    for _ in range(warmup):
         eng.step(0.0)
     jax.block_until_ready(eng.cache)
 
@@ -126,6 +145,8 @@ def _measure_round(eng, slots: int, ticks: int):
         eng.step(0.0)
         dt = time.perf_counter() - s0
         n = _tick_count(eng) - c0
+        if n == 0 and not any(getattr(eng, "decoding", eng.active)):
+            break  # all streams ended (e.g. token budget): don't spin
         done += n
         tok_s.extend([dt / n] * n if n else [])
     if hasattr(eng, "drain"):
@@ -135,16 +156,20 @@ def _measure_round(eng, slots: int, ticks: int):
     return done * slots / wall, tok_s
 
 
-def _ab_rounds(base, eng, slots: int, ticks: int, rounds: int):
+def _ab_rounds(base, eng, slots: int, ticks: int, rounds: int,
+               prompt_len: int, vocab: int, budget: int):
     """Interleave baseline/engine measurement rounds (A/B/A/B...) so slow
     drift in machine load hits both variants equally; report the median
-    round. Returns (base_tps, base_ticks, eng_tps, eng_ticks)."""
+    round. Each round runs on freshly primed streams (same seed for both
+    variants). Returns (base_tps, base_ticks, eng_tps, eng_ticks)."""
     base_tps, eng_tps = [], []
     base_ticks, eng_ticks = [], []
-    for _ in range(rounds):
+    for r in range(rounds):
+        _prime(base, slots, prompt_len, vocab, budget, seed=r)
         tps, ts = _measure_round(base, slots, ticks)
         base_tps.append(tps)
         base_ticks.extend(ts)
+        _prime(eng, slots, prompt_len, vocab, budget, seed=r)
         tps, ts = _measure_round(eng, slots, ticks)
         eng_tps.append(tps)
         eng_ticks.extend(ts)
@@ -167,12 +192,14 @@ def _ttft_sweep(make_engine, lengths, vocab: int):
         assert eng.try_admit(req, now=0.0)
         jax.block_until_ready(eng.cache)
         times.append(time.perf_counter() - t0)
-        # free the slot so the sweep never exhausts capacity
+        # free the slot so the sweep never exhausts capacity (and, for the
+        # paged engine, returns the prompt's pages to the allocator)
         for j, r in enumerate(eng.active):
             if r is req:
-                eng.active[j] = None
-                if hasattr(eng, "decoding"):
-                    eng.decoding[j] = False
+                if hasattr(eng, "release_slot"):
+                    eng.release_slot(j)
+                else:
+                    eng.active[j] = None
     traces = getattr(eng, "prefill_traces", len(lengths))
     return times, traces
 
@@ -187,14 +214,19 @@ def run(report, *, arch: str = "granite-8b", slot_counts=(2, 4, 8),
                "slot_counts": list(slot_counts),
                "baseline": {}, "engine": {}, "speedup": {}}
 
+    # per-round stream budget: warmup + measured ticks (with fused-scan
+    # overshoot) must fit the window, so the paged engine (whose lifetime
+    # tokens cannot wrap) and the rolling ring attend at the same KV width
+    budget = window - prompt_len
+    assert budget >= (2 + 1) * sync_every + ticks, (window, ticks)
+
     for slots in slot_counts:
         base = BaselineEngine(cfg, params, slots=slots, window=window)
-        _prime(base, slots, prompt_len, cfg.vocab_size)
         eng = ServingEngine(cfg, params, slots=slots, window=window,
                             sync_every=sync_every)
-        _prime(eng, slots, prompt_len, cfg.vocab_size)
         base_tps, base_ticks, eng_tps, eng_ticks = _ab_rounds(
-            base, eng, slots, ticks, rounds)
+            base, eng, slots, ticks, rounds, prompt_len, cfg.vocab_size,
+            budget)
         speedup = eng_tps / base_tps
         results["baseline"][slots] = {
             "decode_tps": base_tps,
@@ -256,6 +288,59 @@ def run(report, *, arch: str = "granite-8b", slot_counts=(2, 4, 8),
     return results
 
 
+def smoke(*, arch: str = "granite-8b") -> int:
+    """CI gate: a tiny serving run that fails (non-zero exit) on a
+    compile-count regression — the zero-recompile invariants the engine
+    is built around:
+
+      * one prefill trace per power-of-two bucket (``prefill_traces``);
+      * at most two decode traces (the single tick + the fused scan),
+        regardless of slot membership churn or request count;
+      * steady-state host syncs stay ~1 per ``sync_every`` ticks.
+    """
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(0))
+    sync_every = 4
+    eng = ServingEngine(cfg, params, slots=3, window=128,
+                        sync_every=sync_every, chunk_prefill=0)
+    rng = np.random.default_rng(0)
+    failures = []
+
+    def check(name, ok, got):
+        print(f"smoke:{name}: {'ok' if ok else 'FAIL'} ({got})")
+        if not ok:
+            failures.append(name)
+
+    # two buckets of prompt lengths, several lengths per bucket
+    reqs = [Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=9)
+            for i, plen in enumerate((9, 12, 15, 17, 21, 31))]
+    t = 0.0
+    for r in reqs:
+        eng.submit(r, t)
+    while not all(r.done for r in reqs):
+        t += 1.0
+        eng.step(t)
+    eng.drain(t)
+    check("prefill_traces_per_bucket", eng.prefill_traces == 2,
+          f"{eng.prefill_traces} traces for 2 buckets")
+    check("decode_traces", eng.decode_traces <= 2,
+          f"{eng.decode_traces} traces")
+    m = eng.metrics
+    check("deferred_host_sync",
+          m.host_syncs <= m.decode_ticks / sync_every + len(reqs) + 1,
+          f"{m.host_syncs} syncs / {m.decode_ticks} ticks")
+    check("completed", m.completed == len(reqs), f"{m.completed} completed")
+    if hasattr(eng, "allocator"):
+        check("pages_reclaimed", eng.allocator.pages_in_use == 0,
+              f"{eng.allocator.pages_in_use} pages leaked")
+    if failures:
+        print(f"smoke: FAILED ({', '.join(failures)})")
+        return 1
+    print("smoke: all compile-count probes green")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-8b")
@@ -263,9 +348,13 @@ def main():
     ap.add_argument("--ticks", type=int, default=64)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--sync-every", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: fail on compile-count regression")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serving.json"))
     args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(arch=args.arch))
 
     def report(name, value, derived=""):
         print(f"{name},{value},{derived}")

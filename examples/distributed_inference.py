@@ -28,8 +28,8 @@ def main():
                               embed_dim=32, bottom_mlp=(64, 32),
                               top_mlp=(64, 1))
     params = init_dlrm(cfg, jax.random.key(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_local_mesh
+    mesh = make_local_mesh()
     with mesh:
         sh = jax.tree.map(lambda s: NamedSharding(mesh, s), shard_specs(cfg),
                           is_leaf=lambda x: isinstance(x, P))

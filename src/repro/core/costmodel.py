@@ -84,18 +84,34 @@ def _dtype_bytes(cfg) -> int:
     return 2 if cfg.dtype == "bfloat16" else 4
 
 
+def _n_attn_layers(cfg) -> int:
+    """Layers that keep a KV cache (hybrids only count their attention
+    blocks)."""
+    if cfg.arch_type != "hybrid":
+        return cfg.num_layers
+    pat = cfg.block_pattern or ("rglru", "rglru", "local_attn")
+    return cfg.num_layers * sum(b == "local_attn" for b in pat) // len(pat)
+
+
+def kv_bytes_per_token(cfg) -> float:
+    """HBM bytes one cached token costs across every attention layer (the
+    unit of the paged-KV capacity plan: a rolling cache pays this for a
+    full window per slot; a paged cache only for resident tokens)."""
+    if not cfg.has_attention:
+        return 0.0
+    return (2.0 * _n_attn_layers(cfg) * cfg.num_kv_heads
+            * cfg.resolved_head_dim * _dtype_bytes(cfg))
+
+
 def _attn_flops(cfg, batch: int, s_q: int, s_kv: int) -> float:
     if not cfg.has_attention:
         return 0.0
     hd = cfg.resolved_head_dim
     # score + value matmuls, causal halves the pair count for s_q == s_kv
     pairs = s_q * s_kv * (0.5 if (cfg.causal and s_q == s_kv) else 1.0)
-    n_attn = cfg.num_layers
     if cfg.arch_type == "hybrid":
-        pat = cfg.block_pattern or ("rglru", "rglru", "local_attn")
-        n_attn = cfg.num_layers * sum(b == "local_attn" for b in pat) // len(pat)
         pairs = min(pairs, s_q * cfg.local_window)
-    return 4.0 * batch * n_attn * cfg.num_heads * pairs * hd
+    return 4.0 * batch * _n_attn_layers(cfg) * cfg.num_heads * pairs * hd
 
 
 def estimate_prefill(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
@@ -117,13 +133,10 @@ def estimate_decode(cfg, batch: int, context: int, *, chip: Chip = TPU_V5E,
     flops = 2.0 * n_active * batch + _attn_flops(cfg, batch, 1, kv_len)
     kv_bytes = 0.0
     if cfg.has_attention:
-        n_attn = cfg.num_layers
         if cfg.arch_type == "hybrid":
-            pat = cfg.block_pattern or ("rglru", "rglru", "local_attn")
-            n_attn = cfg.num_layers * sum(b == "local_attn" for b in pat) // len(pat)
             kv_len = min(kv_len, cfg.local_window)
-        kv_bytes = (2.0 * batch * n_attn * kv_len * cfg.num_kv_heads
-                    * cfg.resolved_head_dim * wb)
+        kv_bytes = (2.0 * batch * _n_attn_layers(cfg) * kv_len
+                    * cfg.num_kv_heads * cfg.resolved_head_dim * wb)
     if cfg.arch_type in ("ssm", "hybrid"):
         # recurrent state read+write
         state = batch * cfg.num_layers * cfg.d_model * 4 * 4.0

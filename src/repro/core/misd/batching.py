@@ -11,7 +11,11 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
-from repro.core.costmodel import estimate_decode, estimate_prefill
+from repro.core.costmodel import (
+    estimate_decode,
+    estimate_prefill,
+    kv_bytes_per_token,
+)
 
 
 def adaptive_batch_size(cfg, *, context: int, sla_s: float,
@@ -48,14 +52,28 @@ class AdmissionPlan:
 
 
 def plan_admission(cfg, *, context: int, sla_s: float, n_chips: int = 1,
-                   max_slots: int = 256) -> AdmissionPlan:
+                   max_slots: int = 256,
+                   kv_hbm_budget_bytes: Optional[float] = None,
+                   mean_context: Optional[int] = None) -> AdmissionPlan:
     """Derive (slot count, admission flush deadline) from the cost model:
     slots = largest decode batch meeting the per-step SLA budget; deadline =
     SLA headroom left after one decode step (floored at 10% of the SLA so a
-    mis-modeled step cannot zero the accumulation window)."""
+    mis-modeled step cannot zero the accumulation window).
+
+    ``kv_hbm_budget_bytes`` additionally caps slots by KV memory:
+    each slot reserves ``mean_context`` cached tokens (a paged cache's
+    *expected* resident length; a rolling cache pays the full ``context``
+    window, so pass mean_context=context for it). Defaults to ``context``
+    when unset — the conservative rolling-cache bound."""
     slots, lat = adaptive_batch_size(
         cfg, context=context, sla_s=sla_s, kind="decode", n_chips=n_chips,
         max_batch=max_slots)
+    if kv_hbm_budget_bytes:
+        per_tok = kv_bytes_per_token(cfg)
+        resident = max(1, mean_context or context)
+        if per_tok > 0:
+            slots = min(slots, max(1, int(kv_hbm_budget_bytes
+                                          // (per_tok * resident))))
     lat = lat or 0.0
     deadline = max(sla_s - lat, 0.1 * sla_s)
     return AdmissionPlan(slots=slots, flush_deadline_s=deadline,

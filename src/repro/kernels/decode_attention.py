@@ -62,6 +62,105 @@ def _decode_kernel(nvalid_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(table_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *, page_size: int, s_q: int,
+                         scale: float):
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    rows = q_ref.shape[2]  # G * S query rows sharing this kv head
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    nv = nvalid_ref[bi]
+
+    # Block-sparsity: logical page ki covers cache slots [ki*ps, (ki+1)*ps);
+    # pages entirely past the last valid slot contribute nothing and are
+    # skipped (their DMA is still scheduled by the grid, but no FLOPs run).
+    @pl.when(ki * page_size < nv)
+    def _compute():
+        q = q_ref[0, 0].astype(F32)  # (rows, d)
+        k = k_ref[0, 0].astype(F32)  # (ps, d) — gathered via the page table
+        v = v_ref[0, 0].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * scale
+        slot = (ki * page_size
+                + jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 1))
+        # rows are ordered (g, s): query s of chunk S sees
+        # n_valid - (S - 1) + s slots, identically for each of the g heads
+        row = jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0)
+        limit = nv - (s_q - 1) + jax.lax.rem(row, s_q)
+        s = jnp.where(slot < limit, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=F32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pool, v_pool, table_flat, n_valid, *,
+                           s_q: int, interpret: bool = False):
+    """Block-sparse decode attention through a paged KV cache.
+
+    q: (B, KVH, R, D) with R = G*S query rows per kv head, ordered (g, s);
+    k/v_pool: (KVH, P, ps, D) — the shared page pool, kv-head major;
+    table_flat: (B * n_pages,) int32 — slot b's logical page j lives in
+    physical pool page ``table_flat[b * n_pages + j]``;
+    n_valid: (B,) valid cache slots for the LAST query row of the chunk.
+
+    The page table is a scalar-prefetch operand: the grid's kv step j
+    resolves its physical page in the BlockSpec index map, so the kernel
+    streams exactly the slot's pages (plus skips compute on pages past
+    ``n_valid`` — the block-sparse fast path). Returns (B, KVH, R, D)."""
+    b, hkv, rows, d = q.shape
+    _, _, ps, _ = k_pool.shape
+    n_pages = table_flat.shape[0] // b
+    scale = d ** -0.5
+    kernel = functools.partial(_paged_decode_kernel, page_size=ps, s_q=s_q,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda bi, hi, ji, t, nv: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bi, hi, ji, t, nv: (hi, t[bi * n_pages + ji],
+                                                    0, 0)),
+            pl.BlockSpec((1, 1, ps, d),
+                         lambda bi, hi, ji, t, nv: (hi, t[bi * n_pages + ji],
+                                                    0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d),
+                               lambda bi, hi, ji, t, nv: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows,), F32),
+            pltpu.VMEM((rows,), F32),
+            pltpu.VMEM((rows, d), F32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(table_flat, n_valid, q, k_pool, v_pool)
+
+
 def decode_attention(q, k, v, n_valid, *, block_kv: int = 256,
                      interpret: bool = False):
     """q: (BH, S, D); k/v: (BH, W, D); n_valid: (BH,) int32 — number of

@@ -62,6 +62,32 @@ def decode_attention(q, k_cache, v_cache, pos, *, interpret: bool = None):
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
+                           interpret: bool = None):
+    """q: (B, S, H, D); k/v_pool: (P, ps, Hkv, D) shared page pools;
+    page_table: (B, n_pages) int32; pos: (B,) tokens written INCLUDING the
+    S queries. Model-layout twin of ``repro.models.layers.
+    paged_decode_attention`` running the block-sparse Pallas kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, sq, h, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    g = h // hkv
+    n_pages = page_table.shape[1]
+    # (B, S, H, D) -> (B, KVH, G*S, D), rows (g, s)-ordered
+    qf = (q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+          .reshape(b, hkv, g * sq, d))
+    kf = k_pool.transpose(2, 0, 1, 3)  # (KVH, P, ps, D)
+    vf = v_pool.transpose(2, 0, 1, 3)
+    nv = jnp.minimum(pos, n_pages * ps).astype(jnp.int32)
+    o = _da.paged_decode_attention(
+        qf, kf, vf, page_table.reshape(-1).astype(jnp.int32), nv, s_q=sq,
+        interpret=interpret)
+    return (o.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4)
+            .reshape(b, sq, h, d))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
 def rglru_scan(a, x, h0, *, interpret: bool = None):
     if interpret is None:
         interpret = _default_interpret()

@@ -33,6 +33,26 @@ def ref_decode_attention(q, k, v, n_valid):
     return jnp.einsum("bqk,bkd->bqd", p, v.astype(F32)).astype(q.dtype)
 
 
+def ref_paged_decode_attention(q, k_pool, v_pool, page_table, n_valid):
+    """Oracle for the paged kernel: gather the slot's pages into a linear
+    cache view, then mask exactly like ``ref_decode_attention``.
+    q: (B, S, H, D); pools: (P, ps, Hkv, D); page_table: (B, n_pages);
+    n_valid: (B,) valid slots for the LAST query row."""
+    b, sq, h, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    n_pages = page_table.shape[1]
+    w = n_pages * ps
+    k = jnp.take(k_pool, page_table, axis=0).reshape(b, w, hkv, d)
+    v = jnp.take(v_pool, page_table, axis=0).reshape(b, w, hkv, d)
+    rep = h // hkv
+    kk = jnp.repeat(k, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    vv = jnp.repeat(v, rep, axis=2).transpose(0, 2, 1, 3).reshape(b * h, w, d)
+    qq = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    nv = jnp.repeat(jnp.minimum(n_valid, w), h)
+    out = ref_decode_attention(qq, kk, vv, nv)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
 def ref_rglru_scan(a, x, h0):
     """h_t = a_t h_{t-1} + x_t via associative scan. a/x: (B,S,L)."""
     af, xf = a.astype(F32), x.astype(F32)

@@ -38,6 +38,17 @@ def main():
                     help="chunked-prefill piece size; 0 = single-shot")
     ap.add_argument("--sla-ms", type=float, default=50.0,
                     help="per-step SLA budget for the admission plan")
+    ap.add_argument("--no-paged", action="store_true",
+                    help="force rolling-window KV (paged is the default "
+                         "for pageable archs)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--max-seq", type=int, default=0,
+                    help="per-request token cap / page-table width; "
+                         "0 = window (raise to exceed the old window cap)")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="shared KV pool size in pages; 0 = full headroom, "
+                         "less oversubscribes (admission backpressure)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -52,11 +63,19 @@ def main():
     eng = ServingEngine(cfg, params, slots=args.slots, window=args.window,
                         sync_every=args.sync_every,
                         chunk_prefill=args.chunk_prefill,
-                        sla_s=args.sla_ms / 1e3)
+                        sla_s=args.sla_ms / 1e3,
+                        paged=None if not args.no_paged else False,
+                        page_size=args.page_size,
+                        max_seq=args.max_seq or None,
+                        pool_pages=args.pool_pages or None)
     if not args.slots:
         print(f"admission plan: slots={eng.slots} "
               f"flush_deadline={eng.plan.flush_deadline_s*1e3:.2f}ms "
               f"(cost-model step={eng.plan.step_latency_s*1e3:.3f}ms)")
+    if eng.paged:
+        print(f"paged KV: page_size={eng.page_size} max_seq={eng.max_seq} "
+              f"pool={eng.pool_pages} pages "
+              f"({eng.allocator.capacity} usable + trash)")
 
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     reqs = [

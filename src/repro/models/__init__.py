@@ -4,7 +4,9 @@ from repro.models.model import (
     decode_step,
     forward,
     init_cache,
+    init_paged_cache,
     init_params,
+    paged_ok,
     param_count_tree,
     param_specs,
 )
@@ -15,7 +17,9 @@ __all__ = [
     "decode_step",
     "forward",
     "init_cache",
+    "init_paged_cache",
     "init_params",
+    "paged_ok",
     "param_count_tree",
     "param_specs",
 ]

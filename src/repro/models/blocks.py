@@ -31,6 +31,11 @@ F32 = jnp.float32
 # The serving engine keys bucketed/chunked prefill eligibility off this.
 KV_CACHE_BLOCKS = ("dense", "moe", "encoder", "local_attn")
 
+# Block types servable from a paged KV cache. local_attn is excluded: its
+# ring IS the sliding window (slot index != absolute position), while pages
+# address tokens by absolute position; recurrent mixers have no KV at all.
+PAGED_BLOCKS = ("dense", "moe")
+
 
 # ---------------------------------------------------------------------------
 # init
@@ -117,8 +122,45 @@ def init_block_cache(cfg, btype: str, batch: int, window: int, dtype,
 # ---------------------------------------------------------------------------
 
 
+def init_paged_block_cache(cfg, btype: str, n_pages: int, page_size: int,
+                           dtype):
+    """Paged serving cache for one attention block: a page POOL shared by
+    every decode slot (no batch axis — slots own disjoint page sets via the
+    model-level page table). Only KV blocks are pageable; recurrent mixers
+    keep their per-slot state and the engine falls back to rolling windows
+    for archs that contain them."""
+    if btype not in KV_CACHE_BLOCKS:
+        raise ValueError(f"{btype} blocks have no pageable KV cache")
+    hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+    return {
+        "k": jnp.zeros((n_pages, page_size, kv, hd), dtype),
+        "v": jnp.zeros((n_pages, page_size, kv, hd), dtype),
+    }
+
+
+def _paged_attn_decode(cfg, q, k, v, cache, pages, pos):
+    """Write the chunk's K/V through the page table and attend.
+
+    ``cache`` holds the shared pools (P, ps, kv, hd); ``pages`` is the
+    (B, n_pages) page table; token t of slot b lands in physical page
+    ``pages[b, t // ps]`` at offset ``t % ps``. The allocator guarantees
+    live slots own disjoint pages, so the batched scatter has no
+    cross-slot collisions (freed/inactive slots all alias the reserved
+    trash page 0, whose contents are never attended with weight)."""
+    b, s = q.shape[:2]
+    ps = cache["k"].shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    t = pos_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B, S)
+    phys = jnp.take_along_axis(pages, t // ps, axis=1)  # (B, S)
+    off = t % ps
+    kc = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype))
+    vc = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype))
+    out = L.paged_decode_attention(q, kc, vc, pages, pos_b + s)
+    return out, {"k": kc, "v": vc}
+
+
 def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
-                causal: bool, project: bool = True):
+                causal: bool, project: bool = True, pages=None):
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
     h, kv = cfg.num_heads, cfg.num_kv_heads
@@ -141,7 +183,10 @@ def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
         return (q8.astype(jnp.float32) * scale[..., None]).astype(dtype)
 
     new_cache = cache
-    if mode == "decode":
+    if mode == "decode" and pages is not None:
+        assert not quantized, "paged KV pools are not quantized"
+        out, new_cache = _paged_attn_decode(cfg, q, k, v, cache, pages, pos)
+    elif mode == "decode":
         # s == 1: one decode step. s > 1: one chunked-prefill chunk — the
         # chunk's keys are written at their rolling slots and the per-query
         # validity mask in decode_attention makes attention causal within
@@ -195,8 +240,9 @@ def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
 
 
 def apply_block(cfg, btype: str, p, x, rope_pos, *, mode: str, cache=None,
-                pos=None):
-    """Returns (x, new_cache, aux_loss)."""
+                pos=None, pages=None):
+    """Returns (x, new_cache, aux_loss). ``pages`` (B, n_pages) switches
+    attention blocks to the paged KV cache (decode mode only)."""
     from repro.util import hint_opt
 
     aux = jnp.zeros((), F32)
@@ -213,7 +259,8 @@ def apply_block(cfg, btype: str, p, x, rope_pos, *, mode: str, cache=None,
             h = L.apply_norm(cfg, p["norm1"], x)
             a_ctx, new_attn_cache = _attn_apply(
                 cfg, p["attn"], h, rope_pos, mode=mode, cache=cache,
-                pos=pos, window=window, causal=causal, project=False)
+                pos=pos, window=window, causal=causal, project=False,
+                pages=pages)
             h2 = L.apply_norm(cfg, p["norm2"], x)
             if cfg.mlp_variant in ("swiglu", "geglu"):
                 act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
@@ -230,7 +277,7 @@ def apply_block(cfg, btype: str, p, x, rope_pos, *, mode: str, cache=None,
         h = L.apply_norm(cfg, p["norm1"], x)
         a, new_attn_cache = _attn_apply(
             cfg, p["attn"], h, rope_pos, mode=mode, cache=cache, pos=pos,
-            window=window, causal=causal)
+            window=window, causal=causal, pages=pages)
         x = x + a
         h = L.apply_norm(cfg, p["norm2"], x)
         if btype == "moe":

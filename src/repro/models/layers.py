@@ -347,6 +347,29 @@ def attention(q, k, v, *, causal: bool, window: int = 0, q_offset: int = 0,
 # ---------------------------------------------------------------------------
 
 
+def paged_decode_attention(q, k_pool, v_pool, page_table, pos):
+    """Decode attention through a paged KV cache.
+
+    q (B,S,H,D); k/v_pool (P,page_size,Hkv,D) — the device-resident page
+    pool shared by every slot; page_table (B,n_pages) int32 maps a slot's
+    logical page i (tokens [i*ps, (i+1)*ps)) to a physical pool page;
+    pos (B,) counts tokens written including the S queries.
+
+    Gathers the slot's pages into a (B, n_pages*ps, Hkv, D) view and
+    reuses the rolling-cache masked softmax (``decode_attention``), so the
+    numerics are identical to a rolling window of width n_pages*ps —
+    garbage in not-yet-written page slots is hidden by the same per-query
+    validity mask. This is the jnp oracle twin of the block-sparse Pallas
+    kernel in ``repro.kernels.decode_attention.paged_decode_attention``.
+    """
+    b = q.shape[0]
+    _, ps, hkv, d = k_pool.shape
+    n_pages = page_table.shape[1]
+    k = jnp.take(k_pool, page_table, axis=0).reshape(b, n_pages * ps, hkv, d)
+    v = jnp.take(v_pool, page_table, axis=0).reshape(b, n_pages * ps, hkv, d)
+    return decode_attention(q, k, v, pos)
+
+
 def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
     """q (B,S,H,D); k/v_cache (B,W,Hkv,D); pos (B,) int32 = per-slot count
     of tokens already written INCLUDING all S queries. S=1 is the decode

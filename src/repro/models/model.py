@@ -23,7 +23,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers as L
-from repro.models.blocks import apply_block, init_block, init_block_cache
+from repro.models.blocks import (
+    PAGED_BLOCKS,
+    apply_block,
+    init_block,
+    init_block_cache,
+    init_paged_block_cache,
+)
 from repro.util import scan as uscan
 
 F32 = jnp.float32
@@ -126,6 +132,37 @@ def init_cache(cfg, batch: int, window: int, kv_dtype: str = ""):
 
 def cache_specs(cfg, batch: int, window: int, kv_dtype: str = ""):
     return jax.eval_shape(lambda: init_cache(cfg, batch, window, kv_dtype))
+
+
+def paged_ok(cfg) -> bool:
+    """True when every block can serve from a paged KV cache."""
+    pattern, _, tail = block_program(cfg)
+    return all(bt in PAGED_BLOCKS for bt in pattern + tail)
+
+
+def init_paged_cache(cfg, batch: int, n_pages: int, page_size: int,
+                     max_pages_per_slot: int):
+    """Paged decode cache: one page POOL per attention block (shared by all
+    slots, stacked over ``n_repeat`` for the scanned body) + one page-table
+    row and position per slot. Table entries start at 0 — the reserved
+    trash page — so uninitialized slots can never write into a live page.
+    """
+    assert paged_ok(cfg), f"{cfg.name}: arch has non-pageable blocks"
+    dtype = _dtype(cfg)
+    pattern, n_repeat, tail = block_program(cfg)
+
+    def stacked_pool(btype):
+        c = init_paged_block_cache(cfg, btype, n_pages, page_size, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_repeat,) + x.shape), c)
+
+    return {
+        "body": [stacked_pool(bt) for bt in pattern],
+        "tail": [init_paged_block_cache(cfg, bt, n_pages, page_size, dtype)
+                 for bt in tail],
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "page_table": jnp.zeros((batch, max_pages_per_slot), jnp.int32),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -243,6 +280,7 @@ def decode_step(cfg, params, cache, batch):
     with pos advanced by S."""
     pattern, n_repeat, tail = block_program(cfg)
     pos = cache["pos"]
+    pages = cache.get("page_table")  # paged serving cache (shared pools)
     batch = dict(batch)
     batch.setdefault("pos", pos)
     x, rope_pos = _embed_inputs(cfg, params, batch)
@@ -253,7 +291,8 @@ def decode_step(cfg, params, cache, batch):
         new_cs = []
         for bt, p, c in zip(pattern, p_slices, c_slices):
             x, c_new, aux = apply_block(cfg, bt, p, x, rope_pos,
-                                        mode="decode", cache=c, pos=pos)
+                                        mode="decode", cache=c, pos=pos,
+                                        pages=pages)
             new_cs.append(c_new)
             aux_acc = aux_acc + aux
         return (x, aux_acc), new_cs
@@ -265,7 +304,7 @@ def decode_step(cfg, params, cache, batch):
     new_tail = []
     for bt, p, c in zip(tail, params["tail"], cache["tail"]):
         x, c_new, _ = apply_block(cfg, bt, p, x, rope_pos, mode="decode",
-                                  cache=c, pos=pos)
+                                  cache=c, pos=pos, pages=pages)
         new_tail.append(c_new)
 
     x = L.apply_norm(cfg, params["final_norm"], x)
@@ -274,4 +313,6 @@ def decode_step(cfg, params, cache, batch):
         head = params["embed"].T
     logits = jnp.einsum("bsd,dv->bsv", x, head, preferred_element_type=F32)
     new_cache = {"body": new_body, "tail": new_tail, "pos": pos + x.shape[1]}
+    if pages is not None:
+        new_cache["page_table"] = pages
     return logits, new_cache

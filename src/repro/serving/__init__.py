@@ -5,24 +5,35 @@ from repro.serving.engine import (
     decode_scan_step,
     decode_tick,
     generate,
+    page_table_append,
+    paged_prefill_step,
+    pages_insert,
     prefill_chunk_step,
     prefill_step,
     prompt_bucket,
     serve_step,
+    slot_release,
 )
+from repro.serving.paging import OutOfPagesError, PageAllocator
 from repro.serving.request import Request, ServeMetrics
 
 __all__ = [
+    "OutOfPagesError",
+    "PageAllocator",
     "ServingEngine",
     "bucketed_prefill_step",
     "cache_insert",
     "decode_scan_step",
     "decode_tick",
     "generate",
+    "page_table_append",
+    "paged_prefill_step",
+    "pages_insert",
     "prefill_chunk_step",
     "prefill_step",
     "prompt_bucket",
     "serve_step",
+    "slot_release",
     "Request",
     "ServeMetrics",
 ]

@@ -25,6 +25,7 @@ All steps are pure jit functions; the executor is the only stateful part.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -37,9 +38,16 @@ import numpy as np
 
 from repro.core.misd.batching import BatchAccumulator, plan_admission
 from repro.core.misd.scheduler import ChunkedPrefillPolicy
-from repro.models import decode_step, forward, init_cache
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_paged_cache,
+    paged_ok,
+)
 from repro.models.blocks import KV_CACHE_BLOCKS
 from repro.models.model import block_program
+from repro.serving.paging import OutOfPagesError, PageAllocator
 from repro.serving.request import Request, ServeMetrics
 
 
@@ -95,6 +103,80 @@ def prefill_chunk_step(cfg, params, cache, tokens, true_len):
     last = jax.lax.dynamic_index_in_dim(logits, idx, axis=1, keepdims=False)
     tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
     return tok, last, new_cache
+
+
+def paged_prefill_step(cfg, params, batch, true_len):
+    """Prefill for the paged engine: the B=1 cache window IS the padded
+    prompt length (a LINEAR buffer — no rolling wrap), so every key of the
+    padded prompt survives for the page scatter. ``true_len`` is traced;
+    one trace serves every prompt inside a bucket. Returns (first_token
+    (B,), last-true-token logits (B, V), linear cache with pos=true_len)."""
+    padded = batch["tokens"].shape[1]
+    return bucketed_prefill_step(cfg, params, batch, true_len, window=padded)
+
+
+def pages_insert(paged_cache, linear_cache, pages, slot, true_len):
+    """Admit a prefilled request into the paged cache: scatter the B=1
+    linear prefill cache's K/V into the pool pages granted to the slot,
+    then point the slot's page-table row at them and set its position.
+
+    No other slot's state is touched — admission cost is O(prompt pages),
+    not O(slots * window). ``pages`` (n,), ``slot`` and ``true_len`` may
+    all be traced: one trace covers every slot index and page assignment
+    for a given bucket size (n is static per bucket). The row is written
+    in full, so entries past the prompt reset to the trash page."""
+    n = pages.shape[0]
+
+    def ins(pool, small):
+        # pool: (P, ps, kv, hd), or (n_repeat, P, ps, kv, hd) for stacked
+        # body leaves; small: the matching linear cache leaf holding the
+        # prompt's n * ps tokens at the front of its window axis (wider
+        # buffers — the shared chunked-prefill cache — are sliced down, so
+        # every chunked job reuses ONE compiled chunk step; the batch axis
+        # is 1 and is absorbed by the reshape).
+        ax = small.ndim - 4
+        ps = pool.shape[ax + 1]
+        if small.shape[ax + 1] > n * ps:
+            small = jax.lax.slice_in_dim(small, 0, n * ps, axis=ax + 1)
+        if ax == 0:
+            chunks = small.reshape((n, ps) + small.shape[2:])
+            return pool.at[pages].set(chunks.astype(pool.dtype))
+        chunks = small.reshape((small.shape[0], n, ps) + small.shape[3:])
+        return pool.at[:, pages].set(chunks.astype(pool.dtype))
+
+    table = paged_cache["page_table"]
+    row = jnp.zeros((table.shape[1],), jnp.int32).at[:n].set(pages)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    return {
+        "body": jax.tree.map(ins, paged_cache["body"], linear_cache["body"]),
+        "tail": jax.tree.map(ins, paged_cache["tail"], linear_cache["tail"]),
+        "page_table": jax.lax.dynamic_update_slice(table, row[None], (slot, 0)),
+        "pos": jax.lax.dynamic_update_slice(
+            paged_cache["pos"], true_len[None], (slot,)),
+    }
+
+
+def page_table_append(paged_cache, slot, idx, page):
+    """Grant one more page to a slot mid-decode: table[slot, idx] = page.
+    All three indices are traced — one trace covers every grant."""
+    new = dict(paged_cache)
+    new["page_table"] = jax.lax.dynamic_update_slice(
+        paged_cache["page_table"],
+        jnp.asarray(page, jnp.int32)[None, None], (slot, idx))
+    return new
+
+
+def slot_release(paged_cache, slot):
+    """Retire a finished slot: point its whole page-table row at the trash
+    page and zero its position. The slot keeps riding in the fused decode
+    batch, but its writes can no longer land in a reclaimed page."""
+    table = paged_cache["page_table"]
+    new = dict(paged_cache)
+    new["page_table"] = jax.lax.dynamic_update_slice(
+        table, jnp.zeros((1, table.shape[1]), jnp.int32), (slot, 0))
+    new["pos"] = jax.lax.dynamic_update_slice(
+        paged_cache["pos"], jnp.zeros((1,), jnp.int32), (slot,))
+    return new
 
 
 def serve_step(cfg, params, cache, batch):
@@ -225,6 +307,21 @@ class ServingEngine:
     ``chunk_prefill``: chunk size for interleaved prefill (0 disables).
     ``bucket_prompts``: pad prefill to power-of-two buckets.
     ``donate``: donate the KV cache to the jit'd steps (in-place update).
+
+    ``paged``: serve from a paged KV cache (None -> auto: on whenever every
+    block is pageable; recurrent / local-attention archs fall back to
+    rolling windows). ``page_size``: tokens per page (power of two).
+    ``max_seq``: per-request token cap (page-table width; defaults to
+    ``window`` for cost parity with the rolling cache — raise it to serve
+    prompts longer than the old window cap). ``pool_pages``: total device
+    pages shared by all slots (defaults to full headroom
+    ``slots * max_seq / page_size + 1``, the +1 being the reserved trash
+    page; pass less to oversubscribe — admission then backpressures when
+    the pool runs dry).
+    ``kv_hbm_budget``: optional KV-memory budget (bytes) handed to
+    ``plan_admission`` when ``slots=0`` — the paged cache only needs the
+    *expected* resident tokens per slot rather than a full window, so the
+    same budget admits more concurrent slots.
     """
 
     def __init__(self, cfg, params, *, slots: Optional[int] = 4,
@@ -232,11 +329,28 @@ class ServingEngine:
                  donate: bool = True, bucket_prompts: bool = True,
                  chunk_prefill: int = 64, sla_s: float = 0.05,
                  n_chips: int = 1,
-                 prefill_policy: Optional[ChunkedPrefillPolicy] = None):
+                 prefill_policy: Optional[ChunkedPrefillPolicy] = None,
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 pool_pages: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 kv_hbm_budget: Optional[float] = None,
+                 expected_len: Optional[int] = None):
         self.cfg = cfg
         self.params = params
-        self.plan = plan_admission(cfg, context=window, sla_s=sla_s,
-                                   n_chips=n_chips)
+        if paged and not paged_ok(cfg):
+            raise ValueError(
+                f"{cfg.name}: arch has non-pageable blocks (recurrent or "
+                f"local-attention); pass paged=None to auto-fall back to "
+                f"rolling windows")
+        self.paged = paged_ok(cfg) if paged is None else bool(paged)
+        assert page_size > 0 and page_size & (page_size - 1) == 0, page_size
+        self.page_size = page_size
+        self.max_seq = _padded_len(int(max_seq or window), page_size)
+        self.max_pages = self.max_seq // page_size
+        self.plan = plan_admission(
+            cfg, context=window, sla_s=sla_s, n_chips=n_chips,
+            kv_hbm_budget_bytes=kv_hbm_budget,
+            mean_context=(expected_len or None) if self.paged else window)
         if not slots:
             slots = self.plan.slots
         self.slots = slots
@@ -253,9 +367,22 @@ class ServingEngine:
         self.chunk = chunk_prefill if (chunk_prefill and self._attn_only) else 0
         self.prefill_policy = prefill_policy or ChunkedPrefillPolicy(
             chunk=self.chunk or 64)
+        # chunked-prefill buffers must be both chunk- and page-aligned
+        self._chunk_quantum = (math.lcm(self.chunk, page_size)
+                               if self.chunk else page_size)
 
         # --- device state (exclusively owned: donation-safe) ---
-        self.cache = init_cache(cfg, slots, window)
+        if self.paged:
+            self.pool_pages = pool_pages or slots * self.max_pages + 1
+            self.allocator = PageAllocator(self.pool_pages, page_size)
+            self.cache = init_paged_cache(cfg, slots, self.pool_pages,
+                                          page_size, self.max_pages)
+            self._pos_h: List[int] = [0] * slots  # host mirror of cache pos
+            # pages of the slot's reservation already written into its
+            # device page-table row (the decode tail is appended lazily)
+            self._tabled: List[int] = [0] * slots
+        else:
+            self.cache = init_cache(cfg, slots, window)
         self._tokens = jnp.zeros((slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.decoding: List[bool] = [False] * slots
@@ -291,16 +418,25 @@ class ServingEngine:
             self.prefill_traces += 1
             return prefill_step(cfg, params, batch, window=window)
 
+        def _probed_paged_prefill(params, batch, true_len):
+            self.prefill_traces += 1
+            return paged_prefill_step(cfg, params, batch, true_len)
+
+        donate0 = (0,) if donate else ()
         self._decode = jax.jit(_probed_decode, donate_argnums=donate_cache)
         self._decode_scan = jax.jit(_probed_scan, donate_argnums=donate_cache)
         self._prefill_bucketed = jax.jit(_probed_bucketed)
         self._prefill_exact = jax.jit(_probed_exact)
+        self._prefill_paged = jax.jit(_probed_paged_prefill)
         self._prefill_chunk = jax.jit(
             partial(prefill_chunk_step, cfg),
             donate_argnums=(1,) if donate else ())
         self._insert = jax.jit(
             partial(cache_insert, batch=slots),
-            donate_argnums=(0,) if donate else ())
+            donate_argnums=donate0)
+        self._pages_insert = jax.jit(pages_insert, donate_argnums=donate0)
+        self._table_append = jax.jit(page_table_append, donate_argnums=donate0)
+        self._release = jax.jit(slot_release, donate_argnums=donate0)
         self._set_token = jax.jit(_token_set)
 
     # -- admission ---------------------------------------------------------
@@ -308,7 +444,11 @@ class ServingEngine:
         """Admit immediately while free capacity exists (holding a request
         back from an idle slot buys nothing); once saturated, queue and
         batch admissions up to the cost-model deadline (``plan_admission``)
-        so freed slots refill in groups."""
+        so freed slots refill in groups. Unservable requests (prompt beyond
+        max_seq) are rejected HERE, before queueing — a poison request must
+        never reach the backlog, where its admission failure would abort
+        every subsequent tick."""
+        self._check_servable(req)
         if (not self.backlog and not self.admission.pending
                 and self.try_admit(req, now)):
             return
@@ -331,12 +471,18 @@ class ServingEngine:
 
     def try_admit(self, req: Request, now: float) -> bool:
         """Claim a free slot for ``req``. Long prompts (when chunking is on
-        and the prompt fits the KV ring) enter chunked prefill: the slot is
-        reserved and the prompt is processed ``chunk`` tokens per tick,
-        interleaved with decode. Short prompts prefill immediately
-        (bucketed when possible)."""
+        and the prompt fits the prefill buffer) enter chunked prefill: the
+        slot is reserved and the prompt is processed ``chunk`` tokens per
+        tick, interleaved with decode. Short prompts prefill immediately
+        (bucketed when possible). In paged mode the request's worst-case
+        pages (padded prompt + token budget) are reserved up front; an
+        exhausted pool rejects the admission (backpressure — the request
+        stays queued until pages free up)."""
+        self._check_servable(req)
         for i, slot in enumerate(self.active):
             if slot is None and not any(j.slot == i for j in self._jobs):
+                if self.paged and not self._reserve_pages(req, i):
+                    return False  # out of pages: backpressure
                 if self._chunkable(req):
                     self._start_chunked(req, i)
                 else:
@@ -344,21 +490,74 @@ class ServingEngine:
                 return True
         return False
 
+    def _check_servable(self, req: Request):
+        if self.paged and req.prompt_len > self.max_seq:
+            raise ValueError(
+                f"prompt of {req.prompt_len} tokens exceeds max_seq="
+                f"{self.max_seq}; raise ServingEngine(max_seq=...)")
+
     def _chunkable(self, req: Request) -> bool:
+        cap = self.max_seq if self.paged else self._min_window
+        quantum = self._chunk_quantum if self.paged else self.chunk
         return (self.chunk > 0
                 and req.prompt_len > self.chunk
-                and _padded_len(req.prompt_len, self.chunk) <= self._min_window)
+                and _padded_len(req.prompt_len, quantum) <= cap)
 
     def _bucket_for(self, plen: int) -> Optional[int]:
         if not self.bucket_prompts:
             return None
+        if self.paged:
+            b = prompt_bucket(plen, min_bucket=max(16, self.page_size))
+            return b if b <= self.max_seq else None
         b = prompt_bucket(plen)
         return b if b <= self._min_window else None
 
-    def _admit_now(self, req: Request, slot: int, now: float):
+    def _prefill_len(self, req: Request) -> int:
+        """Token capacity the prefill path will occupy for ``req`` (the
+        padded prompt length — every variant page-aligned in paged mode)."""
         plen = req.prompt_len
+        if self._chunkable(req):
+            quantum = self._chunk_quantum if self.paged else self.chunk
+            return _padded_len(plen, quantum)
         bucket = self._bucket_for(plen)
         if bucket is not None:
+            return bucket
+        return _padded_len(plen, self.page_size) if self.paged else plen
+
+    def _reserve_pages(self, req: Request, slot: int) -> bool:
+        """Grant ``req``'s worst-case lifetime pages to ``slot`` before any
+        prefill compute runs: the padded prompt plus its full token budget
+        (capped at max_seq). All-or-nothing — reserving the decode tail up
+        front means pool shortage always surfaces HERE as admission
+        backpressure, never as mid-stream exhaustion (requests that stop
+        early at eos return the tail unused)."""
+        if self.allocator.owned(slot):
+            # Lifecycle bypassed (e.g. a slot vacated without release):
+            # reclaim on device first so the stale table row can never
+            # alias pages about to be re-granted.
+            self.cache = self._release(self.cache, np.int32(slot))
+            self.allocator.free_slot(slot)
+            self._pos_h[slot] = 0
+            self._tabled[slot] = 0
+        lifetime = min(req.prompt_len + req.max_new_tokens - 1, self.max_seq)
+        n = self.allocator.pages_for(max(self._prefill_len(req), lifetime))
+        return self.allocator.alloc(slot, n) is not None
+
+    def _admit_now(self, req: Request, slot: int, now: float):
+        plen = req.prompt_len
+        bucket = None if self.paged else self._bucket_for(plen)
+        if self.paged:
+            # page-aligned linear prefill (bucketed, or page-rounded exact)
+            padded_len = self._prefill_len(req)
+            padded = np.zeros((1, padded_len), np.int32)
+            padded[0, :plen] = req.prompt
+            batch = {"tokens": jnp.asarray(padded)}
+            if self.cfg.rope_variant == "mrope":
+                batch["positions"] = jnp.broadcast_to(
+                    jnp.arange(padded_len, dtype=jnp.int32), (3, 1, padded_len))
+            tok, _, cache1 = self._prefill_paged(
+                self.params, batch, np.int32(plen))
+        elif bucket is not None:
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :plen] = req.prompt
             batch = {"tokens": jnp.asarray(padded)}
@@ -377,12 +576,16 @@ class ServingEngine:
         self._activate(req, slot, tok, cache1, now)
 
     def _start_chunked(self, req: Request, slot: int):
-        padded_len = _padded_len(req.prompt_len, self.chunk)
+        padded_len = self._prefill_len(req)
         padded = np.zeros((1, padded_len), np.int32)
         padded[0, :req.prompt_len] = req.prompt
+        # paged: a LINEAR buffer at the shared max_seq width (every chunked
+        # job then hits one compiled chunk step; pages_insert slices the
+        # prompt's pages out at activation); rolling: the window-size ring.
+        buf = self.max_seq if self.paged else self.window
         self._jobs.append(_PrefillJob(
             req=req, slot=slot,
-            cache=init_cache(self.cfg, 1, self.window),
+            cache=init_cache(self.cfg, 1, buf),
             tokens=jnp.asarray(padded),
             true_len=np.int32(req.prompt_len)))
         self.active[slot] = req  # reserve (decoding stays False)
@@ -413,15 +616,44 @@ class ServingEngine:
         """Install a prefilled request into its slot: scatter the B=1 cache
         (donated, in-place), set the device token carry, record the first
         token. Forces a token flush first so the deferred-sync window only
-        ever spans a fixed slot membership."""
+        ever spans a fixed slot membership. Paged mode scatters into the
+        slot's reserved pool pages and writes its page-table row instead of
+        copying into a per-slot window."""
         self._flush(now)
-        self.cache = self._insert(self.cache, cache1, np.int32(slot))
+        if self.paged:
+            # scatter the prompt into the reservation's LEADING pages; the
+            # decode-tail pages (also reserved) enter the table row lazily
+            # as the stream grows, so pages_insert keeps one trace per
+            # bucket regardless of each request's token budget
+            n_pref = self.allocator.pages_for(self._prefill_len(req))
+            pages = jnp.asarray(self.allocator.owned(slot)[:n_pref],
+                                jnp.int32)
+            self.cache = self._pages_insert(
+                self.cache, cache1, pages, np.int32(slot),
+                np.int32(req.prompt_len))
+            self._pos_h[slot] = req.prompt_len
+            self._tabled[slot] = n_pref
+            # the page table caps a request's lifetime tokens at max_seq;
+            # surface the truncation on the request instead of failing
+            cap = max(1, self.max_seq - req.prompt_len)
+            if req.max_new_tokens > cap:
+                req.max_new_tokens = cap
+                req.budget_capped = True
+        else:
+            self.cache = self._insert(self.cache, cache1, np.int32(slot))
         self._tokens = self._set_token(self._tokens, tok, np.int32(slot))
         req.output.append(int(tok[0]))
         req.prefill_done = now
         self.metrics.ttfts.append(req.ttft)
         self.active[slot] = req
         self.decoding[slot] = True
+        if req.done:
+            # The prefill token alone met the budget (max_new_tokens <= 1,
+            # or the prompt filled max_seq): finalize here — the decode
+            # loop only finalizes requests as it appends tokens, and a
+            # done-at-activation slot would otherwise zombie forever,
+            # holding its pages.
+            self._finalize_request(req, slot, now)
 
     # -- decode tick --------------------------------------------------------
     def step(self, now: float) -> List[Request]:
@@ -437,16 +669,22 @@ class ServingEngine:
         if not any(self.decoding):
             return self._take_finished()
         if self._fusable():
+            if self.paged:
+                self._ensure_headroom(self.sync_every)
             toks, hist, self.cache = self._decode_scan(
                 self.params, self.cache, self._tokens)
             self._tokens = toks
             self.metrics.decode_ticks += self.sync_every
+            self._advance_pos(self.sync_every)
             self._distribute(np.asarray(hist), now)
             return self._take_finished()
+        if self.paged:
+            self._ensure_headroom(1)
         nxt, self.cache = self._decode(self.params, self.cache, self._tokens)
         self._tokens = nxt
         self._unsynced.append(nxt)
         self.metrics.decode_ticks += 1
+        self._advance_pos(1)
         pend = len(self._unsynced)
         if (pend >= self.sync_every
                 or any(r is not None and d
@@ -454,6 +692,67 @@ class ServingEngine:
                        for r, d in zip(self.active, self.decoding))):
             self._flush(now)
         return self._take_finished()
+
+    def _advance_pos(self, n: int):
+        """Advance the host mirror of each decoding slot's cache position
+        (paged mode tracks it to pre-allocate decode pages without a
+        device sync)."""
+        if not self.paged:
+            return
+        for i, d in enumerate(self.decoding):
+            if d:
+                self._pos_h[i] += n
+
+    def _ensure_headroom(self, n: int):
+        """Write every decoding slot enough page-table entries to absorb
+        ``n`` more tokens BEFORE the fused window runs — table writes are
+        host decisions and cannot happen inside the scan. The pages come
+        from the slot's admission-time reservation; allocating here is a
+        defensive fallback (reachable only when the reservation lifecycle
+        was bypassed), hence the loud error instead of backpressure."""
+        for i, (r, d) in enumerate(zip(self.active, self.decoding)):
+            if r is None or not d:
+                continue
+            end = min(self._pos_h[i] + n, self.max_seq)
+            need = self.allocator.pages_for(end)
+            if need <= self._tabled[i]:
+                continue
+            owned = self.allocator.owned(i)
+            if need > len(owned):
+                if self.allocator.alloc(i, need - len(owned)) is None:
+                    raise OutOfPagesError(
+                        f"slot {i} needs {need - len(owned)} page(s) "
+                        f"mid-decode but the pool is exhausted "
+                        f"({self.allocator.pages_in_use}/"
+                        f"{self.allocator.capacity} in use); size pool_pages "
+                        f"for decode headroom "
+                        f"(slots * max_seq / page_size + 1)")
+                owned = self.allocator.owned(i)
+            for k in range(self._tabled[i], need):
+                self.cache = self._table_append(
+                    self.cache, np.int32(i), np.int32(k), np.int32(owned[k]))
+            self._tabled[i] = need
+
+    def _finalize_request(self, req: Request, slot: int, now: float):
+        """Retire a finished request: record metrics, free the slot (and
+        its pages), and stage it for the caller."""
+        req.finish_time = now
+        self._finished.append(req)
+        self.release_slot(slot)
+        self.metrics.completed += 1
+        self.metrics.total_tokens += len(req.output)
+        self.metrics.jcts.append(now - req.arrival_time)
+
+    def release_slot(self, slot: int):
+        """Retire ``slot`` (finished or cancelled request): return its pages
+        to the allocator and neutralize its device page-table row."""
+        self.active[slot] = None
+        self.decoding[slot] = False
+        if self.paged:
+            self.cache = self._release(self.cache, np.int32(slot))
+            self.allocator.free_slot(slot)
+            self._pos_h[slot] = 0
+            self._tabled[slot] = 0
 
     def _fusable(self) -> bool:
         return (self.sync_every > 1
@@ -487,13 +786,7 @@ class ServingEngine:
                 tok = int(toks[t, i])
                 r.output.append(tok)
                 if r.done or tok == self.eos_id:
-                    r.finish_time = t_now
-                    self._finished.append(r)
-                    self.active[i] = None
-                    self.decoding[i] = False
-                    self.metrics.completed += 1
-                    self.metrics.total_tokens += len(r.output)
-                    self.metrics.jcts.append(t_now - r.arrival_time)
+                    self._finalize_request(r, i, t_now)
                     break
 
     def _take_finished(self) -> List[Request]:

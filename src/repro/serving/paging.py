@@ -1,0 +1,100 @@
+"""Host-side page allocator for the paged KV cache.
+
+The device holds one shared page pool per attention layer
+(``[n_pages, page_size, kv_heads, head_dim]``) plus an integer page table
+per slot; this module owns the *indices*. Pages are fixed-size, so
+allocation is a free-list pop and free is a push — O(1), no compaction,
+no fragmentation beyond per-page internal padding (< ``page_size`` tokens
+per request).
+
+Invariants (tests/test_paging.py):
+  * page 0 is reserved as the trash page: freed/inactive slots point their
+    page-table rows at it, so a stale slot's decode writes can never land
+    in a page owned by a live request;
+  * a page is owned by at most one slot at a time; ``free_slot`` returns
+    every page to the free list (LIFO, so reuse is cache-friendly);
+  * ``alloc`` is all-or-nothing: it returns None (admission backpressure)
+    rather than a partial grant.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+
+class OutOfPagesError(RuntimeError):
+    """Raised when decode growth needs a page and the pool is exhausted.
+
+    Admission-time shortage is signalled by ``alloc`` returning None (the
+    engine queues the request); mid-decode shortage means the pool was
+    sized without decode headroom — size ``pool_pages`` at
+    ``slots * ceil(max_seq / page_size) + 1`` (the +1 covers the reserved
+    trash page) to make this unreachable.
+    """
+
+
+class PageAllocator:
+    """Free-list allocator over a fixed pool of KV pages.
+
+    ``n_pages`` counts the whole pool including the reserved trash page
+    (page 0), so ``capacity`` = n_pages - reserved usable pages.
+    """
+
+    TRASH_PAGE = 0
+
+    def __init__(self, n_pages: int, page_size: int, *, reserved: int = 1):
+        if n_pages <= reserved:
+            raise ValueError(f"pool of {n_pages} pages leaves none usable "
+                             f"({reserved} reserved)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.reserved = reserved
+        # LIFO free list: lowest page numbers on top so early allocations
+        # are dense (nicer locality, easier to eyeball in tests).
+        self._free: List[int] = list(range(n_pages - 1, reserved - 1, -1))
+        self._owned: Dict[int, List[int]] = {}
+
+    # -- sizing ------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.n_pages - self.reserved
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.capacity - len(self._free)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc / free ------------------------------------------------------
+    def alloc(self, slot: int, n: int) -> Optional[List[int]]:
+        """Grant ``n`` pages to ``slot`` (appending to what it owns), or
+        None if the pool cannot cover the whole request."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(slot, []).extend(pages)
+        return pages
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned.get(slot, ()))
+
+    def owned_tokens(self, slot: int) -> int:
+        """Token capacity currently backed by the slot's pages."""
+        return len(self._owned.get(slot, ())) * self.page_size
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Return every page owned by ``slot`` to the free list."""
+        pages = self._owned.pop(slot, [])
+        self._free.extend(reversed(pages))  # LIFO: newest pages reused first
+        return pages
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"PageAllocator(pages={self.n_pages}, size={self.page_size}, "
+                f"in_use={self.pages_in_use}, free={self.free_pages})")

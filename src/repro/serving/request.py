@@ -25,6 +25,10 @@ class Request:
     output: List[int] = field(default_factory=list)
     prefill_done: float = -1.0
     finish_time: float = -1.0
+    # True when the engine shortened max_new_tokens to fit its per-request
+    # token capacity (paged KV: prompt + output <= max_seq) — the stream
+    # ends early by budget, not by eos.
+    budget_capped: bool = False
 
     @property
     def prompt_len(self) -> int:

@@ -86,6 +86,48 @@ def test_decode_attention_chunked(sq, dtype):
             np.asarray(one, np.float32), atol=TOL[dtype], rtol=TOL[dtype])
 
 
+@pytest.mark.parametrize("sq", [1, 4])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(sq, dtype):
+    """Block-sparse paged kernel vs the gather-then-mask oracle: slots'
+    pages are deliberately scattered/permuted through the pool, with one
+    partially-valid slot and one slot whose table is fully resident."""
+    b, h, kv, d = 2, 4, 2, 64
+    ps, n_pages, pool_p = 16, 4, 12
+    q = _mk(20, (b, sq, h, d), dtype)
+    k_pool = _mk(21, (pool_p, ps, kv, d), dtype)
+    v_pool = _mk(22, (pool_p, ps, kv, d), dtype)
+    # non-trivial page assignment incl. shared trash page 0 entries
+    table = jnp.asarray([[7, 3, 11, 0], [2, 9, 4, 6]], jnp.int32)
+    pos = jnp.asarray([ps * 2 + 5, ps * 4], jnp.int32)  # partial + full
+    out = ops.paged_decode_attention(q, k_pool, v_pool, table, pos,
+                                     interpret=True)
+    want = ref.ref_paged_decode_attention(q, k_pool, v_pool, table, pos)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype])
+
+
+def test_paged_kernel_matches_linear_decode_kernel():
+    """A contiguous identity page table must reproduce the linear decode
+    kernel exactly (the paged kernel is a superset)."""
+    b, h, kv, d, ps, n_pages = 2, 4, 2, 64, 16, 8
+    w = ps * n_pages
+    q = _mk(23, (b, 1, h, d), jnp.float32)
+    kc = _mk(24, (b, w, kv, d), jnp.float32)
+    vc = _mk(25, (b, w, kv, d), jnp.float32)
+    pos = jnp.asarray([50, w], jnp.int32)
+    linear = ops.decode_attention(q, kc, vc, pos, interpret=True)
+    # slot b's cache rows [j*ps, (j+1)*ps) live in pool page b*n_pages+j
+    k_pool = kc.reshape(b * n_pages, ps, kv, d)
+    v_pool = vc.reshape(b * n_pages, ps, kv, d)
+    table = jnp.arange(b * n_pages, dtype=jnp.int32).reshape(b, n_pages)
+    paged = ops.paged_decode_attention(q, k_pool, v_pool, table, pos,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(paged), np.asarray(linear),
+                               atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("s", [128, 384])
 @pytest.mark.parametrize("l", [128, 256])
 @pytest.mark.parametrize("dtype", [jnp.float32])

@@ -1,0 +1,364 @@
+"""Paged KV cache: allocator invariants, paged-vs-rolling decode
+equivalence, prompts beyond the old window cap, admission backpressure,
+and page reuse under churn."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import forward, init_params
+from repro.serving import OutOfPagesError, PageAllocator, Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 500, n).astype(np.int32)
+
+
+def _run(cfg, params, reqs, **kw):
+    eng = ServingEngine(cfg, params, **kw)
+    for r in reqs:
+        assert eng.try_admit(r, 0.0)
+    t = 0.0
+    while not all(r.done for r in reqs):
+        t += 1.0
+        eng.step(t)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_alloc_free_reuse():
+    a = PageAllocator(9, 16)  # 8 usable + trash
+    assert a.capacity == 8 and a.free_pages == 8
+    p1 = a.alloc(0, 3)
+    assert p1 is not None and len(p1) == 3
+    assert a.TRASH_PAGE not in p1  # page 0 is never granted
+    assert a.pages_in_use == 3
+    freed = a.free_slot(0)
+    assert sorted(freed) == sorted(p1)
+    assert a.free_pages == 8
+    # LIFO: the pages just freed come back first
+    p2 = a.alloc(1, 3)
+    assert set(p2) == set(p1)
+
+
+def test_allocator_all_or_nothing():
+    a = PageAllocator(5, 16)  # 4 usable
+    assert a.alloc(0, 3) is not None
+    assert a.alloc(1, 2) is None  # only 1 left: no partial grant
+    assert a.free_pages == 1  # the failed alloc consumed nothing
+    assert a.alloc(1, 1) is not None
+
+
+def test_allocator_fragmentation_under_churn():
+    """Random admit/finish churn must conserve pages exactly: fixed-size
+    pages mean the free list never fragments — any N free pages satisfy
+    any N-page request regardless of the alloc/free history."""
+    rng = np.random.default_rng(0)
+    a = PageAllocator(33, 16)  # 32 usable
+    live = {}
+    for it in range(500):
+        if live and (len(live) > 6 or rng.random() < 0.45):
+            slot = int(rng.choice(list(live)))
+            a.free_slot(slot)
+            del live[slot]
+        else:
+            slot = it
+            n = int(rng.integers(1, 5))
+            pages = a.alloc(slot, n)
+            if pages is None:
+                assert a.free_pages < n  # refusal only when truly short
+                continue
+            live[slot] = pages
+        # invariants: disjoint ownership, exact conservation, no trash
+        owned = [p for ps in live.values() for p in ps]
+        assert len(owned) == len(set(owned))
+        assert 0 not in owned
+        assert a.free_pages + len(owned) == a.capacity
+    for slot in list(live):
+        a.free_slot(slot)
+    assert a.free_pages == a.capacity
+
+
+def test_allocator_pages_for():
+    a = PageAllocator(4, 16)
+    assert a.pages_for(1) == 1 and a.pages_for(16) == 1
+    assert a.pages_for(17) == 2 and a.pages_for(160) == 10
+
+
+# ---------------------------------------------------------------------------
+# paged vs rolling decode equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_paged_engine_matches_rolling(granite):
+    """Acceptance: for prompts that fit the old window, the paged engine's
+    token streams are identical to the rolling-window engine's."""
+    cfg, params = granite
+    out = {}
+    for paged in (True, False):
+        reqs = [Request(0, _prompt(13, seed=1), max_new_tokens=9),
+                Request(1, _prompt(30, seed=2), max_new_tokens=7),
+                Request(2, _prompt(21, seed=3), max_new_tokens=11)]
+        eng = _run(cfg, params, reqs, slots=3, window=64, sync_every=4,
+                   paged=paged)
+        assert eng.paged is paged
+        out[paged] = [r.output for r in reqs]
+    assert out[True] == out[False]
+
+
+def test_paged_chunked_prefill_matches_rolling(granite):
+    """Chunked-prefill admissions through the paged linear buffer decode
+    identically to the rolling engine's chunked path."""
+    cfg, params = granite
+    out = {}
+    for paged in (True, False):
+        req = Request(0, _prompt(40, seed=4), max_new_tokens=6)
+        _run(cfg, params, [req], slots=2, window=128, chunk_prefill=16,
+             paged=paged)
+        out[paged] = req.output
+    assert out[True] == out[False]
+
+
+def test_paged_lifts_prompt_cap(granite):
+    """Acceptance: prompts longer than the rolling window serve correctly
+    when max_seq raises the page-table width — first token must match the
+    exact full-prompt forward."""
+    cfg, params = granite
+    window, plen = 64, 100  # prompt exceeds the old per-slot window
+    prompt = _prompt(plen, seed=5)
+    req = Request(0, prompt, max_new_tokens=5)
+    eng = _run(cfg, params, [req], slots=2, window=window, max_seq=256,
+               sync_every=4)
+    assert eng.paged and len(req.output) == 5
+    logits, _, _ = forward(cfg, params,
+                           {"tokens": jnp.asarray(prompt[None, :], jnp.int32)},
+                           mode="prefill", cache=None)
+    assert req.output[0] == int(jnp.argmax(logits[0, -1]))
+    # and the whole stream matches a wide rolling engine (no paging)
+    ref = Request(1, prompt, max_new_tokens=5)
+    _run(cfg, params, [ref], slots=2, window=256, paged=False)
+    assert req.output == ref.output
+
+
+def test_explicit_paged_on_nonpageable_arch_raises():
+    """paged=True must not silently downgrade to rolling windows (callers
+    sizing max_seq would get lossy ring-wrapped context instead)."""
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="non-pageable"):
+        ServingEngine(cfg, params, slots=1, paged=True)
+    eng = ServingEngine(cfg, params, slots=1)  # auto-fallback stays fine
+    assert not eng.paged
+
+
+def test_paged_rejects_prompt_beyond_max_seq(granite):
+    """An unservable prompt is rejected at submit/try_admit time and never
+    reaches the backlog (where its failure would poison every later tick)."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=32, max_seq=64)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.try_admit(Request(0, _prompt(65), max_new_tokens=2), 0.0)
+    # saturate the slot, then submit the poison request: it must raise
+    # immediately, leaving the queue clean and the engine steppable
+    ok = Request(1, _prompt(10, seed=1), max_new_tokens=4)
+    assert eng.try_admit(ok, 0.0)
+    with pytest.raises(ValueError, match="max_seq"):
+        eng.submit(Request(2, _prompt(65, seed=2), max_new_tokens=2), 0.0)
+    assert not eng.backlog and not eng.admission.pending
+    t = 0.0
+    while not ok.done:
+        t += 1.0
+        eng.step(t)
+    assert len(ok.output) == 4
+
+
+def test_budget_cap_is_surfaced(granite):
+    """When the page table truncates a request's token budget, the request
+    says so instead of silently ending early."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, chunk_prefill=0)
+    req = Request(0, _prompt(20), max_new_tokens=1000)  # 64-token cap
+    assert eng.try_admit(req, 0.0)
+    assert req.budget_capped and req.max_new_tokens == 64 - 20
+    t = 0.0
+    while not req.done:
+        t += 1.0
+        eng.step(t)
+    assert len(req.output) == 44
+    # a request within budget is not flagged
+    ok = Request(1, _prompt(20, seed=1), max_new_tokens=4)
+    assert eng.try_admit(ok, t)
+    assert not ok.budget_capped
+
+
+# ---------------------------------------------------------------------------
+# single-trace probes
+# ---------------------------------------------------------------------------
+
+
+def test_paged_single_trace_probes(granite):
+    """Acceptance: the paged engine keeps one decode trace per step shape
+    (tick + fused scan) and one prefill trace per bucket."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=4, window=128, chunk_prefill=0,
+                        sync_every=4)
+    assert eng.paged
+    reqs = [Request(i, _prompt(p, seed=i), max_new_tokens=12)
+            for i, p in enumerate((9, 12, 15, 16))]
+    for r in reqs:
+        assert eng.try_admit(r, 0.0)
+    assert eng.prefill_traces == 1  # one bucket -> one trace
+    t = 0.0
+    while not all(r.done for r in reqs):
+        t += 1.0
+        eng.step(t)
+    assert eng.decode_traces <= 2  # single tick + fused scan, once each
+    assert eng.try_admit(Request(9, _prompt(17, seed=9), 4), t)
+    assert eng.prefill_traces == 2  # a new bucket costs exactly one trace
+
+
+# ---------------------------------------------------------------------------
+# backpressure and page reuse
+# ---------------------------------------------------------------------------
+
+
+def test_out_of_pages_backpressure(granite):
+    """A pool too small for a second prompt rejects the admission (request
+    stays queued) and accepts it once the first request's pages free up."""
+    cfg, params = granite
+    # 5 usable pages of 16 tokens; each 33-token prompt buckets to 64
+    # tokens = 4 pages, so the second admission cannot be covered.
+    eng = ServingEngine(cfg, params, slots=2, window=64, pool_pages=6,
+                        sync_every=1, chunk_prefill=0)
+    assert eng.paged
+    a = Request(0, _prompt(33, seed=1), max_new_tokens=4)
+    b = Request(1, _prompt(33, seed=2), max_new_tokens=4)
+    assert eng.try_admit(a, 0.0)
+    assert not eng.try_admit(b, 0.0)  # 1 free page < the 4 needed
+    eng.submit(b, 0.0)  # queues instead of dropping
+    t = 0.0
+    while not (a.done and b.done):
+        t += 1.0
+        eng.step(t)
+    assert len(a.output) == 4 and len(b.output) == 4
+    assert eng.allocator.pages_in_use == 0  # all pages returned
+
+
+def test_token_budget_reserved_at_admission(granite):
+    """Admission reserves the request's whole token budget, so a pool too
+    small for prompt + decode tail backpressures UP FRONT instead of
+    exhausting mid-stream."""
+    cfg, params = granite
+    # 2 usable pages: the 32-token bucket fits (2 pages) but the 20-token
+    # decode tail needs a 3rd -> admission must refuse, not crash later.
+    eng = ServingEngine(cfg, params, slots=1, window=64, pool_pages=3,
+                        sync_every=1, chunk_prefill=0)
+    assert not eng.try_admit(Request(0, _prompt(30), max_new_tokens=20), 0.0)
+    assert eng.allocator.pages_in_use == 0
+    # a request whose budget fits the reservation serves to completion
+    ok = Request(1, _prompt(30, seed=1), max_new_tokens=3)
+    assert eng.try_admit(ok, 0.0)
+    t = 0.0
+    while not ok.done:
+        t += 1.0
+        eng.step(t)
+    assert len(ok.output) == 3
+
+
+def test_out_of_pages_mid_decode_raises(granite):
+    """The mid-decode exhaustion guard stays a loud, sizing-naming error:
+    reachable only when the admission-time reservation is bypassed (here:
+    the token budget is raised after admission)."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, pool_pages=3,
+                        sync_every=1, chunk_prefill=0)
+    req = Request(0, _prompt(30), max_new_tokens=2)  # reserves 2 pages
+    assert eng.try_admit(req, 0.0)
+    req.max_new_tokens = 40  # bypass the reservation: grow past 32 tokens
+    with pytest.raises(OutOfPagesError, match="pool_pages"):
+        for t in range(60):
+            eng.step(float(t))
+
+
+def test_kv_budget_admits_more_paged_slots():
+    """The admission plan converts paged HBM savings into slots: under the
+    same KV budget, paying only the expected resident length per slot
+    (paged) admits more concurrency than reserving a full window
+    (rolling)."""
+    from repro.core.costmodel import kv_bytes_per_token
+    from repro.core.misd.batching import plan_admission
+
+    cfg = get_config("granite-8b")
+    budget = kv_bytes_per_token(cfg) * 4096 * 4  # 4 full windows of KV
+    rolling = plan_admission(cfg, context=4096, sla_s=10.0,
+                             kv_hbm_budget_bytes=budget, mean_context=4096)
+    paged = plan_admission(cfg, context=4096, sla_s=10.0,
+                           kv_hbm_budget_bytes=budget, mean_context=512)
+    assert rolling.slots == 4  # budget-bound
+    assert paged.slots == min(32, plan_admission(
+        cfg, context=4096, sla_s=10.0).slots)  # 8x more until SLA-bound
+
+
+def test_done_at_activation_releases_slot(granite):
+    """A request whose budget is met by the prefill token alone (max_new=1,
+    or a prompt filling max_seq) must finalize at activation — not zombie
+    in its slot holding pages forever."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, chunk_prefill=0)
+    req = Request(0, _prompt(10), max_new_tokens=1)
+    assert eng.try_admit(req, 0.0)
+    assert req.done and req.finish_time >= 0
+    assert eng.n_active == 0 and eng.allocator.pages_in_use == 0
+    assert eng.drain(1.0) == [req]
+    # a follow-up request reuses the slot and pages immediately
+    nxt = Request(1, _prompt(12, seed=2), max_new_tokens=3)
+    assert eng.try_admit(nxt, 1.0)
+
+
+def test_chunked_jobs_share_one_chunk_trace(granite):
+    """Chunked prompts of different padded lengths must reuse ONE compiled
+    chunk step (the shared max_seq-wide job buffer), not retrace the full
+    model per prompt length."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=2, window=64, max_seq=256,
+                        chunk_prefill=16)
+    t = 0.0
+    for i, plen in enumerate((40, 72)):  # different padded lengths
+        req = Request(i, _prompt(plen, seed=i), max_new_tokens=3)
+        assert eng.try_admit(req, t)
+        while not req.done:
+            t += 1.0
+            eng.step(t)
+    assert eng._prefill_chunk._cache_size() == 1
+
+
+def test_page_reuse_under_engine_churn(granite):
+    """Sequential waves of requests through a bounded pool: every wave's
+    pages are reclaimed, so the pool never monotonically fills."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=2, window=64, sync_every=2,
+                        chunk_prefill=0)
+    t = 0.0
+    for wave in range(3):
+        reqs = [Request(10 * wave + i, _prompt(20 + i, seed=wave * 7 + i),
+                        max_new_tokens=5) for i in range(2)]
+        for r in reqs:
+            assert eng.try_admit(r, t)
+        while not all(r.done for r in reqs):
+            t += 1.0
+            eng.step(t)
+        assert eng.allocator.pages_in_use == 0
+    assert eng.metrics.completed == 6

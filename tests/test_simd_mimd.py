@@ -26,12 +26,12 @@ from repro.core.simd.sharding import (
     make_policy,
     param_pspecs,
 )
+from repro.launch.mesh import make_local_mesh
 from repro.models import cache_specs, param_specs
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_local_mesh()
 
 
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
