@@ -1,7 +1,8 @@
 # One-word entry points for the repo's verify + bench loops.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test lint bench bench-smoke serve-bench micro
+.PHONY: test lint bench bench-smoke bench-cluster bench-cluster-smoke \
+	serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -18,6 +19,15 @@ bench:
 # CI gate: tiny serving run failing on compile-count regressions
 bench-smoke:
 	$(PY) benchmarks/serving_bench.py --smoke
+
+# cluster routing-policy A/B (virtual time) -> BENCH_cluster.json
+bench-cluster:
+	$(PY) benchmarks/cluster_bench.py
+
+# CI gate: tiny 2-replica cluster run failing on routing-invariant,
+# stream-identity, page-leak, or compile-count regressions
+bench-cluster-smoke:
+	$(PY) benchmarks/cluster_bench.py --smoke
 
 # wall-clock microbenchmarks of the jitted steps
 micro:

@@ -1,0 +1,346 @@
+"""Cluster-frontend benchmark: A/B the routing policies (round-robin,
+least-loaded, power-of-two-choices, predicted-completion) over N live
+``ServingEngine`` replicas under a Poisson, mixed-prompt-length workload.
+
+    PYTHONPATH=src python benchmarks/cluster_bench.py [--replicas 2]
+        [--requests 48] [--rate 0.6] [--out BENCH_cluster.json]
+    PYTHONPATH=src python benchmarks/cluster_bench.py --smoke   # CI gate
+
+Time is VIRTUAL: the drive loop advances ``now`` by one cost-model decode
+tick (``estimate_decode(cfg, slots, window).latency_s``) per cluster step,
+so TTFT/JCT measure *queueing structure* (how many cluster ticks a request
+waited for a slot behind the policy's placement decisions), not CPU
+wall-clock noise — the same determinism trick as the MISD simulator, but
+over real engines doing real token work. Calibrating the virtual clock to
+the cost model keeps the routing predictions and the observed latencies on
+one scale, so the closed-loop residual correction is exercised for real
+(latencies are REPORTED in ticks). Every policy replays the identical
+workload on the SAME engine objects (reset between rounds, jit caches kept
+warm), so the A/B isolates the routing decision.
+
+``--smoke`` is the CI gate: a tiny 2-replica run asserting the cluster
+preserves the engine's zero-recompile invariants (compile-count probes per
+replica), the routing invariants (every replica sees traffic under
+round-robin; predicted-completion routing is no worse than round-robin on
+p99 TTFT and SLO goodput — and strictly better on at least one), that
+token streams are bit-identical to single-engine serving, and that no
+replica leaks pages across the run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.costmodel import estimate_decode
+from repro.core.mimd.router import POLICIES
+from repro.models import init_params
+from repro.serving import ClusterFrontend, Request, ServingEngine
+
+
+# ---------------------------------------------------------------------------
+# workload
+# ---------------------------------------------------------------------------
+
+
+def make_workload(n: int, *, rate: float, vocab: int, seed: int,
+                  tick_s: float = 1.0, short_frac: float = 0.7,
+                  models=("",)):
+    """Poisson arrivals; bimodal prompt/budget mix (the survey's
+    short-interactive vs long-context tension): short prompts with tight
+    TTFT SLOs, long chunk-prefilled prompts with loose ones. ``rate`` and
+    the SLOs are in TICKS (one cost-model decode step); ``tick_s``
+    converts to the virtual-clock seconds the engines see. ``models``
+    tags requests round-robin across pools (multi-model clusters)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n)) * tick_s
+    reqs = []
+    for i in range(n):
+        if rng.random() < short_frac:
+            plen = int(rng.integers(8, 25))
+            budget = int(rng.integers(4, 9))
+            slo = 6.0
+        else:
+            plen = int(rng.integers(48, 97))
+            budget = int(rng.integers(24, 41))
+            slo = 16.0
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=budget,
+            arrival_time=float(arrivals[i]),
+            ttft_slo_s=slo * tick_s,
+            tpot_slo_s=2.0 * tick_s,
+            model=models[i % len(models)],
+        ))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# engine reuse across policy rounds
+# ---------------------------------------------------------------------------
+
+
+def build_engines(cfg, params, *, replicas: int, slots: int, window: int,
+                  max_seq: int, sync_every: int, tick_s: float):
+    # sla_s rides the virtual clock: the admission accumulator's flush
+    # deadline must be ~a tick, not wall-clock milliseconds, or saturated
+    # engines would batch admissions for hundreds of virtual ticks
+    return [ServingEngine(cfg, params, slots=slots, window=window,
+                          max_seq=max_seq, sync_every=sync_every,
+                          sla_s=4.0 * tick_s)
+            for _ in range(replicas)]
+
+
+def reset_engine(eng: ServingEngine):
+    """Next policy round starts clean on the SAME engine object, keeping
+    its jit caches (the A/B then never pays a recompile after round one)."""
+    eng.reset()
+
+
+# ---------------------------------------------------------------------------
+# virtual-time drive
+# ---------------------------------------------------------------------------
+
+
+def drive(server, reqs, *, dt: float = 1.0, max_steps: int = 200_000):
+    """Open-loop replay in virtual time: submit arrivals as the clock
+    passes them, step the server once per dt. Works for a ClusterFrontend
+    or a bare ServingEngine (the single-engine reference)."""
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    i, now, done = 0, 0.0, 0
+    for _ in range(max_steps):
+        while i < len(pending) and pending[i].arrival_time <= now:
+            server.submit(pending[i], now)
+            i += 1
+        done += len(server.step(now))
+        if done >= len(reqs):
+            break
+        now += dt
+    else:
+        raise RuntimeError(f"workload did not drain in {max_steps} steps "
+                           f"({done}/{len(reqs)} finished)")
+    server.drain(now)
+    return now
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+
+
+def run_policy(policy, engines, reqs, *, seed: int, tick_s: float = 1.0,
+               pools=("",)):
+    for eng in engines:
+        reset_engine(eng)
+    if len(pools) > 1:
+        grouped = {m: [e for j, e in enumerate(engines)
+                       if j % len(pools) == pools.index(m)] for m in pools}
+        cluster = ClusterFrontend(grouped, policy=policy, seed=seed)
+    else:
+        cluster = ClusterFrontend(engines, policy=policy, seed=seed)
+    makespan = drive(cluster, reqs, dt=tick_s) / tick_s
+    m = cluster.merged_metrics()
+    ttfts = np.asarray([r.ttft for r in reqs]) / tick_s  # -> ticks
+    jcts = np.asarray([r.finish_time - r.arrival_time
+                       for r in reqs]) / tick_s
+    assert (ttfts >= 0).all() and m.completed == len(reqs)
+    return {
+        "ttft_p50": float(np.percentile(ttfts, 50)),
+        "ttft_p99": float(np.percentile(ttfts, 99)),
+        "jct_p50": float(np.percentile(jcts, 50)),
+        "jct_p99": float(np.percentile(jcts, 99)),
+        "goodput": m.goodput,
+        "slo_met": m.slo_met,
+        "slo_tracked": m.slo_tracked,
+        "ttft_slo_misses": m.ttft_slo_misses,
+        "tpot_slo_misses": m.tpot_slo_misses,
+        "makespan": makespan,
+        "throughput_tps": m.total_tokens / makespan if makespan else 0.0,
+        "per_engine": {
+            inst.name: {"routed": inst.routed,
+                        "utilization": round(inst.utilization, 3),
+                        "residual": round(inst.corrector.correction, 4)}
+            for inst in cluster.instances
+        },
+        "outputs": {r.rid: list(r.output) for r in reqs},
+        "pages_in_use": [e.allocator.pages_in_use if e.paged else 0
+                         for e in engines],
+        "prefill_traces": [e.prefill_traces for e in engines],
+        "decode_traces": [e.decode_traces for e in engines],
+    }
+
+
+def single_engine_reference(eng, reqs, *, tick_s: float = 1.0):
+    """The bit-identical oracle: the same requests through ONE engine.
+    Greedy decoding is batching- and placement-invariant, so every cluster
+    policy must reproduce these token streams exactly."""
+    reset_engine(eng)
+    drive(eng, reqs, dt=tick_s)
+    return {r.rid: list(r.output) for r in reqs}
+
+
+def run(report, *, arch="granite-8b", replicas=2, slots=2, window=128,
+        max_seq=192, sync_every=4, requests=48, rate=0.6, seed=0,
+        pools=1, out=""):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(seed))
+    # virtual clock: 1 tick = one cost-model batched decode step, so the
+    # engines' telemetry (backlog seconds) and the observed queueing
+    # delays share a scale and the closed-loop corrector sees real signal
+    tick_s = estimate_decode(cfg, slots, window).latency_s
+    engines = build_engines(cfg, params, replicas=replicas, slots=slots,
+                            window=window, max_seq=max_seq,
+                            sync_every=sync_every, tick_s=tick_s)
+    model_tags = tuple(f"m{i}" for i in range(pools)) if pools > 1 else ("",)
+    if pools > 1:
+        assert replicas >= pools, "need at least one replica per pool"
+
+    results = {"arch": arch, "replicas": replicas, "slots": slots,
+               "window": window, "max_seq": max_seq,
+               "sync_every": sync_every, "requests": requests,
+               "rate": rate, "seed": seed, "pools": pools,
+               "tick_s": tick_s,
+               "note": "virtual-time drive: one step per cost-model decode "
+                       "tick; latencies reported in ticks, not CPU wall "
+                       "clock",
+               "policies": {}}
+
+    # bit-identical oracle (single pool only: one engine sees every prompt)
+    reference = None
+    if pools == 1:
+        ref_reqs = make_workload(requests, rate=rate, vocab=cfg.vocab_size,
+                                 seed=seed, tick_s=tick_s, models=model_tags)
+        reference = single_engine_reference(engines[0], ref_reqs,
+                                            tick_s=tick_s)
+
+    for policy in POLICIES:
+        reqs = make_workload(requests, rate=rate, vocab=cfg.vocab_size,
+                             seed=seed, tick_s=tick_s, models=model_tags)
+        res = run_policy(policy, engines, reqs, seed=seed, tick_s=tick_s,
+                         pools=model_tags)
+        res["bit_identical_to_single_engine"] = (
+            res.pop("outputs") == reference if reference is not None
+            else None)
+        results["policies"][policy] = res
+        report(f"cluster_ttft_p99_{policy}", round(res["ttft_p99"], 2),
+               f"p50={res['ttft_p50']:.2f} goodput={res['goodput']:.3f} "
+               f"jct_p99={res['jct_p99']:.2f}")
+
+    rr = results["policies"]["round-robin"]
+    pred = results["policies"]["predicted"]
+    results["predicted_vs_round_robin"] = {
+        "ttft_p99_ratio": (pred["ttft_p99"] / rr["ttft_p99"]
+                           if rr["ttft_p99"] else 1.0),
+        "goodput_delta": pred["goodput"] - rr["goodput"],
+    }
+    report("cluster_pred_vs_rr_ttft_p99_ratio",
+           round(results["predicted_vs_round_robin"]["ttft_p99_ratio"], 3),
+           "predicted-completion / round-robin (lower is better)")
+    report("cluster_pred_vs_rr_goodput_delta",
+           round(results["predicted_vs_round_robin"]["goodput_delta"], 3),
+           "SLO goodput gain of predicted over round-robin")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        report("cluster_bench_json", out, "full results")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# CI smoke gate
+# ---------------------------------------------------------------------------
+
+
+def smoke(*, arch="granite-8b") -> int:
+    """Tiny 2-replica run asserting the invariants a cluster PR can break
+    while every per-engine test stays green."""
+    res = run(lambda *a: None, arch=arch, replicas=2, slots=2, window=128,
+              max_seq=192, sync_every=4, requests=24, rate=0.6, seed=0)
+    failures = []
+
+    def check(name, ok, got):
+        print(f"smoke:{name}: {'ok' if ok else 'FAIL'} ({got})")
+        if not ok:
+            failures.append(name)
+
+    for policy, r in res["policies"].items():
+        check(f"{policy}_bit_identical", r["bit_identical_to_single_engine"],
+              "token streams vs single-engine oracle")
+        check(f"{policy}_no_page_leak", r["pages_in_use"] == [0, 0],
+              f"pages_in_use={r['pages_in_use']}")
+        check(f"{policy}_decode_traces", max(r["decode_traces"]) <= 2,
+              f"{r['decode_traces']} (tick + fused scan per replica)")
+        check(f"{policy}_prefill_traces", max(r["prefill_traces"]) <= 4,
+              f"{r['prefill_traces']} (one per bucket per replica)")
+    rr = res["policies"]["round-robin"]
+    pred = res["policies"]["predicted"]
+    check("rr_hits_every_replica",
+          all(e["routed"] > 0 for e in rr["per_engine"].values()),
+          {k: v["routed"] for k, v in rr["per_engine"].items()})
+    check("predicted_ttft_p99_no_worse",
+          pred["ttft_p99"] <= rr["ttft_p99"],
+          f"pred={pred['ttft_p99']:.2f} rr={rr['ttft_p99']:.2f}")
+    check("predicted_goodput_no_worse",
+          pred["goodput"] >= rr["goodput"],
+          f"pred={pred['goodput']:.3f} rr={rr['goodput']:.3f}")
+    check("predicted_strictly_beats_rr_somewhere",
+          (pred["ttft_p99"] < rr["ttft_p99"]
+           or pred["goodput"] > rr["goodput"]),
+          f"ttft_p99 {pred['ttft_p99']:.2f} vs {rr['ttft_p99']:.2f}, "
+          f"goodput {pred['goodput']:.3f} vs {rr['goodput']:.3f}")
+    if failures:
+        print(f"smoke: FAILED ({', '.join(failures)})")
+        return 1
+    print("smoke: cluster routing + compile-count + stream-identity probes "
+          "green")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--window", type=int, default=128)
+    ap.add_argument("--max-seq", type=int, default=192)
+    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--rate", type=float, default=0.6,
+                    help="Poisson arrivals per virtual second")
+    ap.add_argument("--pools", type=int, default=1,
+                    help="model pools; engines and requests split across "
+                         "them round-robin (multi-model cluster)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: fail on routing/compile regressions")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_cluster.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(arch=args.arch))
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}")
+
+    print("name,value,derived")
+    res = run(report, arch=args.arch, replicas=args.replicas,
+              slots=args.slots, window=args.window, max_seq=args.max_seq,
+              sync_every=args.sync_every, requests=args.requests,
+              rate=args.rate, seed=args.seed, pools=args.pools,
+              out=args.out)
+    cmp = res["predicted_vs_round_robin"]
+    print(f"# predicted vs round-robin: p99 TTFT x{cmp['ttft_p99_ratio']:.2f}"
+          f", goodput {cmp['goodput_delta']:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

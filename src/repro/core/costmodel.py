@@ -156,6 +156,32 @@ def estimate_train(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
     return WorkEstimate(flops, hbm, collective_bytes, chip, n_chips)
 
 
+def estimate_backlog_s(cfg, *, queued_prefill_tokens: int,
+                       decode_tokens_remaining: int, slots: int,
+                       context: int, chip: Chip = TPU_V5E,
+                       n_chips: int = 1) -> float:
+    """Seconds to drain an engine's outstanding work — the scalar the
+    cluster frontend routes on (``ServingEngine.load_report``).
+
+    Two terms: every queued/unfinished prefill token must flow through the
+    prefill path once, and every remaining decode token costs a share of a
+    batched decode tick (an engine with B slots emits up to B tokens per
+    tick, so drain time is ``tokens / B`` ticks). Both terms are monotone
+    in load, which is all routing needs; the cluster's closed loop
+    (``InterferencePredictor.observe_latency``) absorbs the constant
+    factor this model gets wrong on real hardware."""
+    s = 0.0
+    if queued_prefill_tokens > 0:
+        s += estimate_prefill(cfg, 1, queued_prefill_tokens, chip=chip,
+                              n_chips=n_chips).latency_s
+    if decode_tokens_remaining > 0:
+        b = max(1, slots)
+        per_tick = estimate_decode(cfg, b, context, chip=chip,
+                                   n_chips=n_chips).latency_s
+        s += per_tick * decode_tokens_remaining / b
+    return s
+
+
 def estimate(cfg, shape, *, chip: Chip = TPU_V5E, n_chips: int = 1) -> WorkEstimate:
     """Estimate for an assigned ShapeConfig."""
     if shape.kind == "train":

@@ -3,19 +3,34 @@ across a cluster of model instances deployed on meshlets/pods.
 
 The router "understands different models' requirements and places one or
 multiple queries intelligently onto hardware": each model has an instance
-pool (replicas on meshlets); routing is least-loaded / power-of-two-choices
-over predicted completion time from the cost model. Autoscaling hooks
-grow/shrink pools from queue pressure — the data-center management layer
-the survey notes is underexplored for inference.
+pool (replicas on meshlets); routing policies are
+
+  round-robin   — rotate through the pool, blind to load;
+  least-loaded  — minimize the instance's instantaneous ``load()`` signal;
+  p2c           — power-of-two-choices: sample two (seeded), keep the one
+                  with the lower predicted completion;
+  predicted     — minimize predicted completion over the whole pool.
+
+``Instance`` is the simulation-facing replica (its load signal is the
+``queue_s`` scalar the router itself maintains); live engines plug in via
+``repro.serving.cluster.EngineInstance``, which overrides ``load()`` /
+``predicted_completion()`` with real telemetry from
+``ServingEngine.load_report()`` — the SAME router policies then run
+unchanged over live engines. Tie-breaks are deterministic under the
+constructor seed: ties on the routing key fall back to registration order,
+never to dict/hash order. Autoscaling hooks grow/shrink pools from queue
+pressure — the data-center management layer the survey notes is
+underexplored for inference.
 """
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
-from repro.core.costmodel import WorkEstimate
 from repro.core.misd.scheduler import Device, Job
+
+POLICIES = ("least-loaded", "p2c", "round-robin", "predicted")
 
 
 @dataclass
@@ -26,6 +41,13 @@ class Instance:
     model: str
     device: Device
     queue_s: float = 0.0  # predicted backlog seconds
+    draining: bool = False  # deregistered: finish in-flight, take no routes
+    order: int = -1  # registration sequence (deterministic tie-break key)
+
+    def load(self) -> float:
+        """Instantaneous load signal for least-loaded routing (cheaper and
+        noisier than ``predicted_completion`` — no per-job service term)."""
+        return self.queue_s
 
     def predicted_completion(self, job: Job) -> float:
         concurrency = len(self.device.running) + 1
@@ -36,14 +58,34 @@ class ServiceRouter:
     """Cluster-level query router over per-model instance pools."""
 
     def __init__(self, policy: str = "least-loaded", seed: int = 0):
-        assert policy in ("least-loaded", "p2c", "round-robin")
+        assert policy in POLICIES, f"unknown policy {policy!r} (want {POLICIES})"
         self.policy = policy
         self.pools: Dict[str, List[Instance]] = {}
         self._rr: Dict[str, int] = {}
         self._rng = random.Random(seed)
+        self._next_order = 0
 
-    def register(self, inst: Instance):
+    def register(self, inst: Instance) -> Instance:
+        inst.order = self._next_order
+        self._next_order += 1
+        inst.draining = False
         self.pools.setdefault(inst.model, []).append(inst)
+        return inst
+
+    def deregister(self, inst_or_name, model: Optional[str] = None) -> Optional[Instance]:
+        """Retire an instance: mark it draining and remove it from its pool
+        so it stops receiving routes (in-flight work finishes elsewhere —
+        the caller keeps stepping it until empty). Accepts the instance or
+        its name; returns the removed instance, or None if absent."""
+        pools = ([self.pools.get(model, [])] if model is not None
+                 else list(self.pools.values()))
+        for pool in pools:
+            for i, inst in enumerate(pool):
+                if inst is inst_or_name or inst.name == inst_or_name:
+                    pool.pop(i)
+                    inst.draining = True
+                    return inst
+        return None
 
     def route(self, job: Job) -> Optional[Instance]:
         pool = self.pools.get(job.model)
@@ -54,12 +96,21 @@ class ServiceRouter:
             self._rr[job.model] = i + 1
             chosen = pool[i]
         elif self.policy == "p2c":
-            a, b = self._rng.sample(pool, k=min(2, len(pool)))
-            chosen = min((a, b), key=lambda x: x.predicted_completion(job))
-        else:  # least-loaded (random tie-break so equal loads spread out)
+            # the seeded sample order doubles as the tie-break (first of
+            # the pair wins an exact tie): deterministic under the
+            # constructor seed, yet persistent ties still spread; a pool
+            # shrunk to one replica degrades to that replica
+            pair = (self._rng.sample(pool, k=2) if len(pool) >= 2
+                    else [pool[0]])
+            chosen = min(pair, key=lambda x: x.predicted_completion(job))
+        elif self.policy == "predicted":
+            chosen = min(pool, key=lambda x: (x.predicted_completion(job),
+                                              x.order))
+        else:  # least-loaded: the seeded shuffle IS the tie-break, so
+            # exact-tie loads spread out (deterministically under the seed)
             order = list(pool)
             self._rng.shuffle(order)
-            chosen = min(order, key=lambda x: x.predicted_completion(job))
+            chosen = min(order, key=lambda x: x.load())
         chosen.queue_s += job.service_s / chosen.device.speed
         return chosen
 

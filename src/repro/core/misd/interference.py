@@ -45,18 +45,55 @@ class InterferencePredictor:
     """ML-style latency predictor ([28]): here a calibrated analytic model
     with a learned residual hook. ``observe`` accumulates (predicted,
     actual) pairs; ``predict`` applies the mean residual correction —
-    the survey's online-learning feedback loop in miniature."""
+    the survey's online-learning feedback loop in miniature.
+
+    The latency-domain twins (``observe_latency`` / ``corrected_latency``)
+    serve the cluster frontend's predicted-completion routing: the cost
+    model predicts a completion latency, the frontend observes the real
+    TTFT/JCT, and the mean multiplicative residual closes the loop (rates
+    are reciprocal latencies, so the same accumulator serves both views).
+    """
 
     def __init__(self):
         self._resid_sum = 0.0
         self._n = 0
 
+    @property
+    def correction(self) -> float:
+        """Mean fractional residual: positive when reality runs slower
+        than predicted (rates were over-estimated)."""
+        return self._resid_sum / self._n if self._n else 0.0
+
     def predict(self, demands: Sequence[Tuple[float, float]]) -> List[float]:
         rates = progress_rates(demands)
-        corr = self._resid_sum / self._n if self._n else 0.0
+        corr = self.correction
         return [max(1e-3, r * (1.0 - corr)) for r in rates]
 
     def observe(self, predicted_rate: float, actual_rate: float):
         if predicted_rate > 0:
             self._resid_sum += (actual_rate - predicted_rate) / predicted_rate * -1.0
             self._n += 1
+
+    def observe_latency(self, predicted_s: float, actual_s: float):
+        """Record one (predicted, observed) latency pair (seconds).
+
+        Outlier rejection keeps the residual a *model correction*, not a
+        noise accumulator: a pair more than 32x apart (an instant first
+        token on an idle engine, a host stall, mismatched clocks) is a
+        different regime from model error and is dropped entirely; pairs
+        within band are clamped to 4x so one tail observation nudges the
+        mean instead of dominating it. Persistent in-band bias still
+        converges, one clamped step per observation."""
+        p = max(predicted_s, 1e-9)
+        if not (p / 32.0 <= actual_s <= 32.0 * p):
+            return
+        a = min(max(actual_s, 0.25 * p), 4.0 * p)
+        self.observe(1.0 / p, 1.0 / a)
+
+    def corrected_latency(self, predicted_s: float) -> float:
+        """Apply the learned residual to a cost-model latency estimate.
+        The correction is clamped so a burst of pathological observations
+        can never flip the rate negative or amplify it without bound."""
+        corr = min(0.95, max(-20.0, self.correction))
+        rate = (1.0 / max(predicted_s, 1e-9)) * (1.0 - corr)
+        return 1.0 / max(rate, 1e-9)

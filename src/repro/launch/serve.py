@@ -1,12 +1,18 @@
-"""Serving driver: continuous-batching engine fed by a synthetic open-loop
-client, reporting the survey's serving metrics (QPS, latency percentiles,
-TTFT, JCT, SLA attainment).
+"""Serving driver: continuous-batching engine(s) fed by a synthetic
+open-loop client, reporting the survey's serving metrics (QPS, latency
+percentiles, TTFT, JCT, SLO attainment).
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
         --requests 32 --slots 4 --rate 8
 
 ``--slots 0`` derives the slot count and admission flush deadline from the
 cost model (repro.core.misd.batching.plan_admission) instead of constants.
+
+``--replicas N`` (N > 1) serves the same traffic through the multi-engine
+cluster frontend (repro.serving.cluster): N ServingEngine replicas behind
+one SLO-aware (EDF) frontend queue, routed by ``--route-policy``
+(round-robin | least-loaded | p2c | predicted). ``--ttft-slo-ms`` tags
+every request with a TTFT deadline so the report includes SLO goodput.
 """
 from __future__ import annotations
 
@@ -17,8 +23,20 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.mimd.router import POLICIES
 from repro.models import init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import ClusterFrontend, Request, ServingEngine
+
+
+def _build_engine(cfg, params, args):
+    return ServingEngine(cfg, params, slots=args.slots, window=args.window,
+                         sync_every=args.sync_every,
+                         chunk_prefill=args.chunk_prefill,
+                         sla_s=args.sla_ms / 1e3,
+                         paged=None if not args.no_paged else False,
+                         page_size=args.page_size,
+                         max_seq=args.max_seq or None,
+                         pool_pages=args.pool_pages or None)
 
 
 def main():
@@ -49,6 +67,16 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="shared KV pool size in pages; 0 = full headroom, "
                          "less oversubscribes (admission backpressure)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="ServingEngine replicas behind the cluster "
+                         "frontend; 1 = single-engine path")
+    ap.add_argument("--route-policy", default="predicted",
+                    choices=POLICIES,
+                    help="cluster routing policy (with --replicas > 1)")
+    ap.add_argument("--ttft-slo-ms", type=float, default=0.0,
+                    help="per-request TTFT deadline; 0 = untracked")
+    ap.add_argument("--tpot-slo-ms", type=float, default=0.0,
+                    help="per-request mean TPOT bound; 0 = untracked")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -60,14 +88,7 @@ def main():
 
     rng = np.random.default_rng(args.seed)
     params = init_params(cfg, jax.random.key(args.seed))
-    eng = ServingEngine(cfg, params, slots=args.slots, window=args.window,
-                        sync_every=args.sync_every,
-                        chunk_prefill=args.chunk_prefill,
-                        sla_s=args.sla_ms / 1e3,
-                        paged=None if not args.no_paged else False,
-                        page_size=args.page_size,
-                        max_seq=args.max_seq or None,
-                        pool_pages=args.pool_pages or None)
+    eng = _build_engine(cfg, params, args)
     if not args.slots:
         print(f"admission plan: slots={eng.slots} "
               f"flush_deadline={eng.plan.flush_deadline_s*1e3:.2f}ms "
@@ -77,6 +98,15 @@ def main():
               f"pool={eng.pool_pages} pages "
               f"({eng.allocator.capacity} usable + trash)")
 
+    cluster = None
+    if args.replicas > 1:
+        engines = [eng] + [_build_engine(cfg, params, args)
+                           for _ in range(args.replicas - 1)]
+        cluster = ClusterFrontend(engines, policy=args.route_policy,
+                                  seed=args.seed)
+        print(f"cluster frontend: {args.replicas} replicas, "
+              f"policy={args.route_policy}, EDF frontend queue")
+
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     reqs = [
         Request(
@@ -85,28 +115,34 @@ def main():
                                 args.prompt_len).astype(np.int32),
             max_new_tokens=args.max_new,
             arrival_time=float(arrivals[i]),
+            ttft_slo_s=args.ttft_slo_ms / 1e3,
+            tpot_slo_s=args.tpot_slo_ms / 1e3,
         )
         for i in range(args.requests)
     ]
+    server = cluster if cluster is not None else eng
     queue = list(reqs)
     t0 = time.time()
     done = 0
     while done < args.requests:
         now = time.time() - t0
         while queue and queue[0].arrival_time <= now:
-            eng.submit(queue.pop(0), now)
-        finished = eng.step(time.time() - t0)
+            server.submit(queue.pop(0), now)
+        finished = server.step(time.time() - t0)
         done += len(finished)
-        if (not eng.n_active and not eng.backlog
-                and not eng.admission.pending and queue):
+        if cluster is not None:
+            busy = not cluster.idle
+        else:
+            busy = (eng.n_active or eng.backlog or eng.admission.pending)
+        if not busy and queue:
             # idle until the next arrival
             time.sleep(max(0.0, queue[0].arrival_time - (time.time() - t0)))
-    done += len(eng.drain(time.time() - t0))
+    done += len(server.drain(time.time() - t0))
     wall = time.time() - t0
-    eng.metrics.total_time = wall
+    m = cluster.merged_metrics() if cluster is not None else eng.metrics
+    m.total_time = wall
     lats = [r.finish_time - r.arrival_time for r in reqs]
     ttfts = [r.ttft for r in reqs if r.ttft >= 0]
-    m = eng.metrics
     print(f"served {args.requests} requests in {wall:.2f}s  "
           f"qps={args.requests/wall:.2f}  tok/s={m.total_tokens/wall:.1f}  "
           f"ticks={m.decode_ticks}  host_syncs={m.host_syncs}  "
@@ -116,6 +152,16 @@ def main():
           f"mean_jct={np.mean(lats)*1e3:.0f}ms  "
           f"ttft p50={np.percentile(ttfts,50)*1e3:.0f}ms "
           f"p95={np.percentile(ttfts,95)*1e3:.0f}ms")
+    if m.slo_tracked:
+        print(f"SLO goodput={m.goodput:.3f} "
+              f"({m.slo_met}/{m.slo_tracked} in SLO; "
+              f"ttft_misses={m.ttft_slo_misses} "
+              f"tpot_misses={m.tpot_slo_misses})")
+    if cluster is not None:
+        for inst in cluster.instances:
+            print(f"  {inst.name}: routed={inst.routed} "
+                  f"utilization={inst.utilization:.2f} "
+                  f"residual={inst.corrector.correction:+.3f}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,6 @@
+from repro.serving.cluster import ClusterFrontend, EngineInstance
 from repro.serving.engine import (
+    LoadReport,
     ServingEngine,
     bucketed_prefill_step,
     cache_insert,
@@ -18,6 +20,9 @@ from repro.serving.paging import OutOfPagesError, PageAllocator
 from repro.serving.request import Request, ServeMetrics
 
 __all__ = [
+    "ClusterFrontend",
+    "EngineInstance",
+    "LoadReport",
     "OutOfPagesError",
     "PageAllocator",
     "ServingEngine",

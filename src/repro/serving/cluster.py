@@ -1,0 +1,336 @@
+"""Multi-engine cluster frontend: SLO-aware routing of live traffic across
+``ServingEngine`` replicas (the survey's MIMD quadrant made real).
+
+The survey (§2) calls for a datacenter tier that "understands different
+models' requirements and places one or multiple queries intelligently onto
+hardware". ``repro.core.mimd.router`` has that tier for *simulated*
+instances; this module unifies it with reality:
+
+  * ``EngineInstance`` adapts a live ``ServingEngine`` to the router's
+    ``Instance`` protocol — ``load()`` / ``predicted_completion()`` read
+    real telemetry from ``ServingEngine.load_report()`` (free slots, free
+    pages, queued prefill tokens, cost-model backlog seconds), so every
+    ``ServiceRouter`` policy (round-robin, least-loaded,
+    power-of-two-choices, predicted-completion) runs unchanged over live
+    engines;
+  * predictions are closed-loop: each instance owns an
+    ``InterferencePredictor`` that folds observed TTFT / completion
+    latency back into a multiplicative residual on the cost model
+    (``corrected_latency``), so a replica that is slower than the model
+    thinks (noisy host, co-tenant, weaker chip) organically repels load;
+  * ``ClusterFrontend`` owns the replicas plus one shared frontend queue
+    with SLO-aware EDF ordering (earliest TTFT deadline dispatches first),
+    and exposes autoscaling hooks (``autoscale``: grow a pool via a spawn
+    callback under queue pressure, retire + drain the least-loaded replica
+    when idle).
+
+Dispatch is eager: a routed request enters its engine's own admission
+machinery (accumulator -> backlog -> paged backpressure), so per-engine
+invariants — all-or-nothing page reservation, single-trace probes,
+bit-identical token streams — hold unchanged under the cluster. A retired
+replica keeps being stepped until it drains empty; it just stops
+receiving routes.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Dict, List, Mapping, Optional, Sequence, Union
+
+from repro.core.costmodel import estimate_decode, estimate_prefill
+from repro.core.mimd.router import Instance, ServiceRouter
+from repro.core.misd.interference import InterferencePredictor
+from repro.core.misd.scheduler import Device, Job
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request, ServeMetrics
+
+DEFAULT_POOL = ""  # model tag for homogeneous (single-model) clusters
+
+
+class EngineInstance(Instance):
+    """A live ``ServingEngine`` behind the router's ``Instance`` protocol.
+
+    ``sync()`` mirrors the engine's cost-model backlog into the simulation
+    field ``queue_s``, so router machinery written for simulated instances
+    (``pressure``, ``want_scale``) keeps working; the routing-policy hooks
+    themselves (``load`` / ``predicted_completion``) take a fresh
+    ``load_report()`` every call — telemetry, not the mirror."""
+
+    def __init__(self, name: str, engine: ServingEngine,
+                 model: str = DEFAULT_POOL):
+        super().__init__(
+            name=name, model=model,
+            device=Device(name=f"dev:{name}", max_tenants=engine.slots))
+        self.engine = engine
+        self.corrector = InterferencePredictor()
+        # frontend-side accounting (the bench's utilization columns)
+        self.routed = 0
+        self.ticks = 0
+        self.busy_ticks = 0
+
+    def sync(self):
+        self.queue_s = self.engine.load_report().backlog_s
+
+    def load(self) -> float:
+        """Instantaneous occupancy signal for least-loaded routing: queued
+        requests plus busy slots, normalized by slot count so replicas of
+        different widths compare fairly. No cost model involved."""
+        rep = self.engine.load_report()
+        busy = rep.slots - rep.free_slots
+        return (rep.queued_requests + busy) / max(1, rep.slots)
+
+    @staticmethod
+    def _slot_wait_ticks(rep) -> float:
+        """Decode ticks until a slot opens for ONE MORE request, simulating
+        the engine's drain: each busy slot frees after its remaining token
+        budget, the queued requests (in drain order) claim slots as they
+        free, and the new request takes the next opening. Exact under
+        FCFS/EDF + one-token-per-tick; the closed loop absorbs the rest
+        (fused scans, chunk interleave)."""
+        frees = [0.0] * rep.free_slots + sorted(rep.active_remaining)
+        frees = frees[:max(1, rep.slots)]
+        heapq.heapify(frees)
+        for budget in rep.queued_budgets:
+            heapq.heappush(frees, heapq.heappop(frees) + budget)
+        return heapq.heappop(frees)
+
+    def queue_wait_s(self, rep=None) -> float:
+        """Uncorrected cost-model seconds a new request would wait before
+        its slot opens: slot-drain simulation plus queued prefill work.
+        Pass a ``load_report()`` snapshot to amortize it across calls."""
+        rep = rep if rep is not None else self.engine.load_report()
+        return rep.tick_est_s * self._slot_wait_ticks(rep) + rep.queued_prefill_s
+
+    def predicted_completion(self, job: Job) -> float:
+        """Cost-model completion estimate on THIS replica, residual-
+        corrected by what the closed loop has observed here: seconds until
+        a decode slot opens for the job (slot-drain simulation over the
+        telemetry), plus the engine's queued prefill work, plus the job's
+        own isolated service time."""
+        return self.corrector.corrected_latency(
+            self.queue_wait_s() + job.service_s)
+
+    def predicted_wait(self, prefill_s: float, rep=None) -> float:
+        """Corrected seconds until the job's FIRST token (TTFT component):
+        slot wait plus queued prefill work plus the job's own prefill."""
+        return self.corrector.corrected_latency(
+            self.queue_wait_s(rep) + prefill_s)
+
+    @property
+    def utilization(self) -> float:
+        return self.busy_ticks / self.ticks if self.ticks else 0.0
+
+
+class ClusterFrontend:
+    """Owns N live engine replicas (homogeneous, or pools keyed by model
+    tag) behind one shared, SLO-aware frontend queue.
+
+    ``engines``: a sequence of ``ServingEngine`` (single default pool) or a
+    mapping ``model -> sequence of engines`` (multi-model pools; requests
+    select a pool via ``Request.model``). ``policy``: any
+    ``repro.core.mimd.router.POLICIES`` entry. ``edf``: order the frontend
+    queue by TTFT deadline (earliest first; untracked requests last) —
+    False preserves FIFO arrival order. ``edf`` also turns on each
+    engine's EDF backlog drain so deadline order survives engine-side
+    queueing.
+    """
+
+    def __init__(self,
+                 engines: Union[Sequence[ServingEngine],
+                                Mapping[str, Sequence[ServingEngine]]],
+                 *, policy: str = "predicted", seed: int = 0,
+                 edf: bool = True):
+        self.router = ServiceRouter(policy=policy, seed=seed)
+        self.edf = edf
+        self.instances: List[EngineInstance] = []
+        self.draining: List[EngineInstance] = []
+        self.retired: List[EngineInstance] = []  # drained + reaped
+        self._queue: List = []  # heap of (deadline_key, seq, Request)
+        self._seq = itertools.count()
+        self._names = itertools.count()
+        if isinstance(engines, Mapping):
+            for model, pool in engines.items():
+                for eng in pool:
+                    self.add_engine(eng, model=model)
+        else:
+            for eng in engines:
+                self.add_engine(eng)
+
+    # -- pool management ---------------------------------------------------
+    def add_engine(self, engine: ServingEngine,
+                   model: str = DEFAULT_POOL,
+                   name: Optional[str] = None) -> EngineInstance:
+        """Register a live replica into ``model``'s pool (autoscale grow
+        path). The engine starts receiving routes immediately."""
+        if self.edf:
+            engine.edf_backlog = True
+        name = name or f"{model or 'pool'}/e{next(self._names)}"
+        inst = EngineInstance(name, engine, model=model)
+        self.router.register(inst)
+        self.instances.append(inst)
+        return inst
+
+    def retire(self, inst_or_name) -> Optional[EngineInstance]:
+        """Deregister a replica (autoscale shrink path): it stops receiving
+        routes NOW, keeps being stepped until its in-flight work drains,
+        then drops out of the cluster. Returns the retiring instance."""
+        inst = self.router.deregister(inst_or_name)
+        if inst is None:
+            return None
+        self.instances.remove(inst)
+        self.draining.append(inst)
+        return inst
+
+    def pool(self, model: str = DEFAULT_POOL) -> List[EngineInstance]:
+        return list(self.router.pools.get(model, []))
+
+    @property
+    def engines(self) -> List[ServingEngine]:
+        return [i.engine for i in self.instances]
+
+    # -- request path ------------------------------------------------------
+    def submit(self, req: Request, now: float):
+        """Enqueue a request at the frontend queue. Routing happens at the
+        next ``step``: every request submitted inside one tick is dispatched
+        in EDF order (earliest TTFT deadline routes first — and therefore
+        lands earliest in its engine's own queue), not arrival order."""
+        if req.model not in self.router.pools or not self.router.pools[req.model]:
+            raise ValueError(
+                f"request {req.rid}: no engine pool for model "
+                f"{req.model!r} (pools: {list(self.router.pools)})")
+        key = req.ttft_deadline if self.edf else 0.0
+        heapq.heappush(self._queue, (key, next(self._seq), req))
+
+    def _dispatch(self, now: float):
+        """Drain the frontend queue in EDF order, routing each request to
+        the policy-chosen replica. Routing is eager — engine-side backlogs
+        (and their paged backpressure) do the holding — so every policy
+        pays the same queueing machinery and differs ONLY in choice."""
+        held = []
+        while self._queue:
+            _, _, req = heapq.heappop(self._queue)
+            if not self.router.pools.get(req.model):
+                # pool emptied (every replica retired) after this request
+                # was accepted: hold it at the frontend — it dispatches
+                # the moment add_engine repopulates the pool — rather than
+                # crashing the step and losing the request
+                held.append(req)
+                continue
+            job = self._job_for(req, now)
+            inst = self.router.route(job)
+            # stash the closed-loop anchors on the request: the RAW
+            # (uncorrected) predictions, so the residual is learned
+            # against the cost model itself — observing the corrected
+            # value would converge to sqrt of the true slowdown. One
+            # telemetry snapshot serves both (route() already took
+            # per-instance snapshots for its own scoring).
+            rep = inst.engine.load_report()
+            base = inst.queue_wait_s(rep)
+            pre_s = estimate_prefill(inst.engine.cfg, 1,
+                                     max(1, req.prompt_len),
+                                     n_chips=inst.engine.n_chips).latency_s
+            req._pred_wait_s = base + pre_s
+            req._pred_complete_s = base + job.service_s
+            req._dispatch_t = now
+            req.routed_to = inst.name
+            inst.routed += 1
+            inst.engine.submit(req, now)
+        for req in held:
+            key = req.ttft_deadline if self.edf else 0.0
+            heapq.heappush(self._queue, (key, next(self._seq), req))
+
+    def _job_for(self, req: Request, now: float) -> Job:
+        pool = self.router.pools[req.model]
+        cfg = pool[0].engine.cfg
+        n_chips = pool[0].engine.n_chips
+        ctx = pool[0].engine.window
+        dec = estimate_decode(cfg, 1, ctx, n_chips=n_chips)
+        pre_s = estimate_prefill(cfg, 1, max(1, req.prompt_len),
+                                 n_chips=n_chips).latency_s
+        service = pre_s + dec.latency_s * max(0, req.max_new_tokens - 1)
+        return Job(jid=req.rid, model=req.model, demand=dec.demand,
+                   service_s=service, arrival=now, priority=req.priority,
+                   sla_s=req.ttft_slo_s)
+
+    def step(self, now: float) -> List[Request]:
+        """One cluster tick: dispatch anything queued, step every replica
+        (live and draining), observe finished requests into each replica's
+        closed-loop corrector, and reap fully-drained retirees."""
+        self._dispatch(now)
+        finished: List[Request] = []
+        for inst in list(self.instances) + list(self.draining):
+            eng = inst.engine
+            inst.ticks += 1
+            if (eng.n_decoding or eng.n_prefilling or eng.backlog
+                    or eng.admission.pending):
+                inst.busy_ticks += 1
+            for req in eng.step(now):
+                self._observe(inst, req)
+                finished.append(req)
+            inst.sync()
+        reaped = [i for i in self.draining if i.engine.idle]
+        if reaped:
+            # keep reaped retirees for the metrics rollup — the traffic
+            # they served must not vanish from completed/goodput
+            self.retired.extend(reaped)
+            self.draining = [i for i in self.draining
+                             if not i.engine.idle]
+        return finished
+
+    def _observe(self, inst: EngineInstance, req: Request):
+        """Close the loop: predicted vs observed wait (TTFT) and completion
+        latency, measured from dispatch, feed the instance's residual."""
+        t0 = getattr(req, "_dispatch_t", None)
+        if t0 is None:
+            return
+        if req.prefill_done >= 0 and getattr(req, "_pred_wait_s", 0) > 0:
+            inst.corrector.observe_latency(req._pred_wait_s,
+                                           req.prefill_done - t0)
+        if req.finish_time >= 0 and getattr(req, "_pred_complete_s", 0) > 0:
+            inst.corrector.observe_latency(req._pred_complete_s,
+                                           req.finish_time - t0)
+
+    def drain(self, now: float) -> List[Request]:
+        """Flush every replica's deferred tokens (end-of-run bookkeeping)."""
+        out: List[Request] = []
+        for inst in self.instances + self.draining:
+            out.extend(inst.engine.drain(now))
+        return out
+
+    # -- autoscaling -------------------------------------------------------
+    def autoscale(self, now: float, *, spawn=None, model: str = DEFAULT_POOL,
+                  high_s: float = 1.0, low_s: float = 0.05):
+        """One autoscaling decision from queue pressure: pressure above
+        ``high_s`` spawns a replica (via the ``spawn`` callback — building
+        a ServingEngine is the caller's business), pressure below ``low_s``
+        retires the least-loaded replica (it drains, then drops). Returns
+        the instance added or retired, else None. ``sync`` during ``step``
+        keeps ``router.pressure`` fed with live backlog telemetry."""
+        sig = self.router.want_scale(model, high_s=high_s, low_s=low_s)
+        if sig > 0 and spawn is not None:
+            return self.add_engine(spawn(), model=model)
+        if sig < 0:
+            pool = self.router.pools.get(model, [])
+            if len(pool) > 1:
+                victim = min(pool, key=lambda i: (i.queue_s, i.order))
+                return self.retire(victim)
+        return None
+
+    # -- rollups -----------------------------------------------------------
+    def merged_metrics(self) -> ServeMetrics:
+        """Cluster-wide ServeMetrics: every replica's counters summed —
+        including replicas retired (and reaped) along the way."""
+        m = ServeMetrics()
+        for inst in self.instances + self.draining + self.retired:
+            m.merge(inst.engine.metrics)
+        return m
+
+    def utilization(self) -> Dict[str, float]:
+        return {i.name: i.utilization
+                for i in self.instances + self.draining + self.retired}
+
+    @property
+    def idle(self) -> bool:
+        return (not self._queue
+                and all(i.engine.idle
+                        for i in self.instances + self.draining))

@@ -36,6 +36,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.costmodel import (
+    estimate_backlog_s,
+    estimate_decode,
+    estimate_prefill,
+)
 from repro.core.misd.batching import BatchAccumulator, plan_admission
 from repro.core.misd.scheduler import ChunkedPrefillPolicy
 from repro.models import (
@@ -279,6 +284,35 @@ def prompt_bucket(n: int, *, min_bucket: int = 16) -> int:
     return max(min_bucket, 1 << max(n - 1, 1).bit_length())
 
 
+@dataclass(frozen=True)
+class LoadReport:
+    """One engine's telemetry snapshot — the routing signal the cluster
+    frontend (repro.serving.cluster) consumes. Everything is host-side
+    bookkeeping: taking a report never syncs the device."""
+
+    slots: int
+    free_slots: int  # slots with no active or prefilling request
+    queued_requests: int  # backlog + admission-accumulator pending
+    queued_prefill_tokens: int  # prompt tokens not yet through prefill
+    decode_tokens_remaining: int  # unfinished token budgets, queued incl.
+    free_pages: int  # page pool headroom (-1: rolling cache, unpaged)
+    total_pages: int  # usable pool capacity (0 when unpaged)
+    backlog_s: float  # cost-model seconds to drain the outstanding work
+    tick_est_s: float  # cost-model latency of one batched decode tick
+    queued_prefill_s: float  # cost-model seconds for the queued prefills
+    # per-slot remaining token budgets of in-flight requests (prefilling
+    # slots count their budget plus pending chunk ticks), and the queued
+    # requests' budgets in the order the backlog will drain them — the
+    # inputs to the cluster's slot-availability simulation
+    active_remaining: tuple = ()
+    queued_budgets: tuple = ()
+
+    @property
+    def saturated(self) -> bool:
+        """No slot free for an immediate admission."""
+        return self.free_slots <= 0
+
+
 @dataclass
 class _PrefillJob:
     """A request mid-way through chunked prefill (slot reserved, B=1 cache
@@ -334,9 +368,15 @@ class ServingEngine:
                  pool_pages: Optional[int] = None,
                  max_seq: Optional[int] = None,
                  kv_hbm_budget: Optional[float] = None,
-                 expected_len: Optional[int] = None):
+                 expected_len: Optional[int] = None,
+                 edf_backlog: bool = False):
         self.cfg = cfg
         self.params = params
+        self.n_chips = n_chips
+        # EDF ordering of the admission backlog (earliest TTFT deadline
+        # first); FIFO stays the default so single-trace probes and every
+        # pre-cluster caller see identical admission order.
+        self.edf_backlog = edf_backlog
         if paged and not paged_ok(cfg):
             raise ValueError(
                 f"{cfg.name}: arch has non-pageable blocks (recurrent or "
@@ -355,6 +395,9 @@ class ServingEngine:
             slots = self.plan.slots
         self.slots = slots
         self.window = window
+        # cost-model latency of one batched decode tick (load_report)
+        self._tick_est_s = estimate_decode(cfg, slots, window,
+                                           n_chips=n_chips).latency_s
         self.eos_id = eos_id
         self.sync_every = 1 if eos_id >= 0 else max(1, sync_every)
         self.metrics = ServeMetrics()
@@ -465,9 +508,16 @@ class ServingEngine:
 
     def _drain_backlog(self, now: float):
         while self.backlog:
-            if not self.try_admit(self.backlog[0], now):
+            idx = 0
+            if self.edf_backlog:
+                # earliest TTFT deadline first; FIFO among equal deadlines
+                # (untracked requests have an infinite deadline and drain
+                # after every SLO-tracked one)
+                idx = min(range(len(self.backlog)),
+                          key=lambda k: (self.backlog[k].ttft_deadline, k))
+            if not self.try_admit(self.backlog[idx], now):
                 break
-            self.backlog.popleft()
+            del self.backlog[idx]
 
     def try_admit(self, req: Request, now: float) -> bool:
         """Claim a free slot for ``req``. Long prompts (when chunking is on
@@ -742,6 +792,7 @@ class ServingEngine:
         self.metrics.completed += 1
         self.metrics.total_tokens += len(req.output)
         self.metrics.jcts.append(now - req.arrival_time)
+        self.metrics.record_slo(req)
 
     def release_slot(self, slot: int):
         """Retire ``slot`` (finished or cancelled request): return its pages
@@ -797,6 +848,74 @@ class ServingEngine:
         """Flush any deferred tokens (end-of-run bookkeeping)."""
         self._flush(now)
         return self._take_finished()
+
+    def reset(self):
+        """Return the engine to an empty state — every slot vacated (pages
+        reclaimed), queues and metrics cleared — while keeping its compiled
+        steps warm, so bench/test rounds reuse one engine without paying
+        recompiles. In-flight requests are abandoned, not finished."""
+        self.drain(0.0)
+        for i in range(self.slots):
+            if self.active[i] is not None:
+                self.release_slot(i)
+        self._jobs.clear()
+        self.backlog.clear()
+        self.admission.flush()
+        self._unsynced = []
+        self._finished = []
+        self.metrics = ServeMetrics()
+
+    # -- telemetry ---------------------------------------------------------
+    def load_report(self) -> LoadReport:
+        """Snapshot the engine's load for cluster routing: free slots and
+        pages, queued prefill tokens, unfinished decode budgets (scalar
+        and per-slot/per-queued for the frontend's slot-availability
+        simulation), and the cost model's predicted seconds to drain it
+        all. Pure host-side arithmetic — safe to call every dispatch
+        without a device sync."""
+        queued = list(self.backlog) + list(self.admission.pending)
+        if self.edf_backlog:
+            queued.sort(key=lambda r: r.ttft_deadline)
+        chunks_left = {j.slot: -(-(j.tokens.shape[1] - j.next_off)
+                                 // max(1, self.chunk))
+                       for j in self._jobs}
+        remaining = []
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            rem = max(0, r.max_new_tokens - len(r.output))
+            remaining.append(rem + chunks_left.get(i, 0))
+        q_pref = sum(r.prompt_len for r in queued)
+        q_pref += sum(max(0, j.tokens.shape[1] - j.next_off)
+                      for j in self._jobs)
+        dec_rem = sum(remaining) + sum(r.max_new_tokens for r in queued)
+        pre_s = (estimate_prefill(self.cfg, 1, q_pref,
+                                  n_chips=self.n_chips).latency_s
+                 if q_pref > 0 else 0.0)
+        # backlog_s = prefill term (computed once, above) + decode term
+        dec_s = estimate_backlog_s(
+            self.cfg, queued_prefill_tokens=0,
+            decode_tokens_remaining=dec_rem, slots=self.slots,
+            context=self.window, n_chips=self.n_chips)
+        return LoadReport(
+            slots=self.slots,
+            free_slots=sum(r is None for r in self.active),
+            queued_requests=len(queued),
+            queued_prefill_tokens=q_pref,
+            decode_tokens_remaining=dec_rem,
+            free_pages=self.allocator.free_pages if self.paged else -1,
+            total_pages=self.allocator.capacity if self.paged else 0,
+            backlog_s=pre_s + dec_s,
+            tick_est_s=self._tick_est_s,
+            queued_prefill_s=pre_s,
+            active_remaining=tuple(remaining),
+            queued_budgets=tuple(r.max_new_tokens for r in queued))
+
+    @property
+    def idle(self) -> bool:
+        """No active, prefilling, or queued work (drain-complete test)."""
+        return (self.n_active == 0 and not self._jobs and not self.backlog
+                and not self.admission.pending and not self._unsynced)
 
     @property
     def n_active(self) -> int:

@@ -2,11 +2,11 @@
 
 These are the schedulable units of the survey's taxonomy: the MISD/MIMD
 schedulers (repro.core) operate on ``Request`` metadata; the engine
-(repro.serving.engine) executes the token work.
+(repro.serving.engine) executes the token work; the cluster frontend
+(repro.serving.cluster) routes on the SLO fields.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -20,11 +20,16 @@ class Request:
     max_new_tokens: int
     arrival_time: float = 0.0
     priority: int = 0  # higher = more urgent
-    sla_ms: float = 0.0  # latency SLA; 0 = best-effort
+    sla_ms: float = 0.0  # legacy whole-request SLA; 0 = best-effort
+    model: str = ""  # routing pool tag (cluster frontend); "" = default pool
+    # --- per-request SLOs (survey §3.2.3; 0 = untracked) ---
+    ttft_slo_s: float = 0.0  # time-to-first-token deadline after arrival
+    tpot_slo_s: float = 0.0  # mean time-per-output-token bound
     # --- filled during serving ---
     output: List[int] = field(default_factory=list)
     prefill_done: float = -1.0
     finish_time: float = -1.0
+    routed_to: str = ""  # cluster frontend: name of the serving replica
     # True when the engine shortened max_new_tokens to fit its per-request
     # token capacity (paged KV: prompt + output <= max_seq) — the stream
     # ends early by budget, not by eos.
@@ -45,6 +50,37 @@ class Request:
             return -1.0
         return self.prefill_done - self.arrival_time
 
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token over the decode phase (excludes the
+        prefill token); -1 before completion or for single-token streams."""
+        if self.finish_time < 0 or self.prefill_done < 0:
+            return -1.0
+        n_decode = len(self.output) - 1
+        if n_decode <= 0:
+            return 0.0
+        return (self.finish_time - self.prefill_done) / n_decode
+
+    @property
+    def ttft_deadline(self) -> float:
+        """Absolute deadline for the first token — the EDF ordering key.
+        Untracked requests sort last (infinite deadline)."""
+        if self.ttft_slo_s <= 0:
+            return float("inf")
+        return self.arrival_time + self.ttft_slo_s
+
+    def meets_slo(self) -> Optional[bool]:
+        """True/False once finished against the declared SLOs; None when
+        the request declares no SLO (untracked — excluded from goodput)."""
+        if self.ttft_slo_s <= 0 and self.tpot_slo_s <= 0:
+            return None
+        ok = True
+        if self.ttft_slo_s > 0:
+            ok = ok and 0 <= self.ttft <= self.ttft_slo_s
+        if self.tpot_slo_s > 0:
+            ok = ok and 0 <= self.tpot <= self.tpot_slo_s
+        return ok
+
 
 @dataclass
 class ServeMetrics:
@@ -60,6 +96,11 @@ class ServeMetrics:
     decode_ticks: int = 0  # batched decode steps executed
     host_syncs: int = 0  # device->host token transfers (1 per N ticks)
     prefill_chunks: int = 0  # chunked-prefill pieces interleaved with decode
+    # --- SLO attainment (requests declaring ttft_slo_s / tpot_slo_s) ---
+    slo_tracked: int = 0  # finished requests that declared any SLO
+    slo_met: int = 0  # ...that met every declared SLO
+    ttft_slo_misses: int = 0
+    tpot_slo_misses: int = 0
 
     @property
     def qps(self) -> float:
@@ -82,3 +123,43 @@ class ServeMetrics:
         if not self.ttfts:
             return 0.0
         return float(np.percentile(np.asarray(self.ttfts), q))
+
+    # -- SLO attainment ----------------------------------------------------
+    def record_slo(self, req: Request):
+        """Fold one finished request's SLO verdict into the counters
+        (called by the engine at finalize; no-op for untracked requests)."""
+        verdict = req.meets_slo()
+        if verdict is None:
+            return
+        self.slo_tracked += 1
+        if verdict:
+            self.slo_met += 1
+        if req.ttft_slo_s > 0 and not (0 <= req.ttft <= req.ttft_slo_s):
+            self.ttft_slo_misses += 1
+        if req.tpot_slo_s > 0 and not (0 <= req.tpot <= req.tpot_slo_s):
+            self.tpot_slo_misses += 1
+
+    @property
+    def goodput(self) -> float:
+        """Fraction of SLO-tracked completions meeting every declared SLO
+        (1.0 when nothing is tracked — no SLO means nothing to violate)."""
+        if not self.slo_tracked:
+            return 1.0
+        return self.slo_met / self.slo_tracked
+
+    def merge(self, other: "ServeMetrics"):
+        """Accumulate another engine's counters (cluster-wide rollup)."""
+        self.completed += other.completed
+        self.total_tokens += other.total_tokens
+        self.total_time = max(self.total_time, other.total_time)
+        self.latencies.extend(other.latencies)
+        self.jcts.extend(other.jcts)
+        self.ttfts.extend(other.ttfts)
+        self.sla_violations += other.sla_violations
+        self.decode_ticks += other.decode_ticks
+        self.host_syncs += other.host_syncs
+        self.prefill_chunks += other.prefill_chunks
+        self.slo_tracked += other.slo_tracked
+        self.slo_met += other.slo_met
+        self.ttft_slo_misses += other.ttft_slo_misses
+        self.tpot_slo_misses += other.tpot_slo_misses

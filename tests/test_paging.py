@@ -98,6 +98,37 @@ def test_allocator_pages_for():
     assert a.pages_for(17) == 2 and a.pages_for(160) == 10
 
 
+def test_allocator_lifo_exact_reuse_order():
+    """LIFO is exact, not just set-equal: across interleaved frees the
+    most recently freed page is always granted first (cache-friendly
+    reuse; also makes allocation traces reproducible in tests)."""
+    a = PageAllocator(9, 16)  # 8 usable
+    assert a.alloc(0, 2) == [1, 2]  # free list pops lowest-first when fresh
+    assert a.alloc(1, 2) == [3, 4]
+    a.free_slot(0)  # free list top: 1, 2 (newest first... reversed -> 1 on top)
+    a.free_slot(1)  # top now: 3, 4 order below slot 0's pages
+    # slot 1's pages were freed last, so they come back first, in the
+    # order originally granted
+    assert a.alloc(2, 3) == [3, 4, 1]
+    assert a.alloc(3, 1) == [2]
+
+
+def test_allocator_exhaustion_boundary_at_admission():
+    """Admission-time exhaustion is a clean refusal exactly at the
+    capacity boundary — never a partial grant, never an exception (the
+    mid-stream OutOfPagesError guard is a different, louder path —
+    test_out_of_pages_mid_decode_raises)."""
+    a = PageAllocator(5, 16)  # 4 usable
+    assert a.can_alloc(4) and not a.can_alloc(5)
+    assert a.alloc(0, 5) is None  # one past capacity: refused whole
+    assert a.free_pages == 4  # the refusal consumed nothing
+    assert len(a.alloc(0, 4)) == 4  # exactly at capacity: granted
+    assert a.free_pages == 0 and not a.can_alloc(1)
+    assert a.alloc(1, 1) is None
+    a.free_slot(0)
+    assert a.free_pages == 4  # full recovery after release
+
+
 # ---------------------------------------------------------------------------
 # paged vs rolling decode equivalence
 # ---------------------------------------------------------------------------

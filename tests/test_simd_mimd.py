@@ -180,3 +180,63 @@ def test_router_autoscale_signals():
         r.route(Job(i, "m", (0.5, 0.5), 0.5))
     assert r.want_scale("m") == 1  # pressure built up
     assert r.route(Job(0, "unknown", (0.5, 0.5), 0.01)) is None
+
+
+def test_router_deregister_stops_routes():
+    """A deregistered instance is marked draining and never routed again;
+    pools can now shrink as well as grow."""
+    r = _router("round-robin")
+    gone = r.deregister("i2")
+    assert gone is not None and gone.draining and gone.name == "i2"
+    assert len(r.pools["m"]) == 3
+    hits = {r.route(Job(i, "m", (0.5, 0.5), 0.01)).name for i in range(30)}
+    assert hits == {"i0", "i1", "i3"}
+    assert r.deregister("i2") is None  # absent now
+    assert r.deregister("i0", model="never-registered") is None  # no KeyError
+    # re-registering clears draining and restores routes
+    r.register(gone)
+    assert not gone.draining
+    hits = {r.route(Job(i, "m", (0.5, 0.5), 0.01)).name for i in range(40)}
+    assert "i2" in hits
+
+
+def test_router_p2c_single_instance_pool():
+    """p2c must degrade to the only instance instead of crashing when a
+    pool has shrunk to one replica."""
+    r = _router("p2c")
+    for name in ("i1", "i2", "i3"):
+        r.deregister(name)
+    inst = r.route(Job(0, "m", (0.5, 0.5), 0.01))
+    assert inst is not None and inst.name == "i0"
+
+
+def test_router_p2c_deterministic_under_seed():
+    """Same seed -> identical p2c routing sequence even under permanent
+    exact ties (the seeded sample order is the tie-break), and ties still
+    spread across the pool instead of starving later registrations."""
+
+    def choices(seed):
+        r = ServiceRouter(policy="p2c", seed=seed)
+        for i in range(4):
+            r.register(Instance(f"i{i}", "m", Device(f"d{i}", 4)))
+        out = []
+        for i in range(80):
+            inst = r.route(Job(i, "m", (0.5, 0.5), 0.01))
+            out.append(inst.name)
+            inst.queue_s = 0.0  # force a permanent exact tie
+        return out
+
+    a, b = choices(7), choices(7)
+    assert a == b
+    assert set(a) == {"i0", "i1", "i2", "i3"}  # ties spread, nobody starves
+
+
+def test_router_predicted_policy():
+    """'predicted' scans the whole pool for the minimum predicted
+    completion (p2c with full visibility)."""
+    r = ServiceRouter(policy="predicted", seed=0)
+    for i in range(4):
+        inst = r.register(Instance(f"i{i}", "m", Device(f"d{i}", 4)))
+        inst.queue_s = 3.0 - 0.5 * i  # i3 is least loaded
+    chosen = r.route(Job(0, "m", (0.5, 0.5), 0.01))
+    assert chosen.name == "i3"
