@@ -2,7 +2,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test lint bench bench-smoke bench-cluster bench-cluster-smoke \
-	serve-bench micro
+	bench-prefix bench-prefix-smoke serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -28,6 +28,15 @@ bench-cluster:
 # stream-identity, page-leak, or compile-count regressions
 bench-cluster-smoke:
 	$(PY) benchmarks/cluster_bench.py --smoke
+
+# shared-prefix KV cache A/B (warm vs cold TTFT) -> BENCH_prefix.json
+bench-prefix:
+	$(PY) benchmarks/prefix_bench.py
+
+# CI gate: tiny prefix-cache A/B failing on the >=5x warm-TTFT headline,
+# stream identity, page/refcount leaks, or suffix-trace growth
+bench-prefix-smoke:
+	$(PY) benchmarks/prefix_bench.py --smoke --out BENCH_prefix_smoke.json
 
 # wall-clock microbenchmarks of the jitted steps
 micro:

@@ -1,0 +1,48 @@
+"""Host-noise mitigation shared by the BENCH_*.json benchmarks.
+
+The container's CPU is shared, so wall-clock numbers drift with whatever
+else the host runs. Two mitigations:
+
+  * ``pin_host_threads()`` — call BEFORE the first ``import jax``: caps
+    BLAS/XLA host parallelism (oversubscribed thread pools are the
+    biggest variance source on a loaded box; single-threaded eigen is
+    slower but far steadier). Existing settings are respected
+    (``setdefault`` / append), so CI or a user can still override.
+  * ``loadavg()`` — record the 1/5/15-minute load averages into every
+    BENCH_*.json, so cross-PR comparisons can be qualified ("was the box
+    busy when this number was taken?").
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+_EIGEN_FLAG = "--xla_cpu_multi_thread_eigen=false"
+
+
+def pin_host_threads() -> bool:
+    """Pin BLAS/XLA host threads for steadier CPU benchmarks. Only
+    effective before jax is imported (XLA reads these at backend init):
+    when another module already loaded jax — e.g. `-m benchmarks.run`
+    importing several benchmarks into one process — pinning is skipped
+    with a warning rather than failing the harness. Returns whether the
+    pins apply to this process's jax."""
+    if "jax" in sys.modules:
+        print("bench_noise: jax already imported; host-thread pinning "
+              "skipped (numbers may be noisier)", file=sys.stderr)
+        return False
+    os.environ.setdefault("OMP_NUM_THREADS", "1")
+    os.environ.setdefault("OPENBLAS_NUM_THREADS", "1")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if _EIGEN_FLAG not in flags:
+        os.environ["XLA_FLAGS"] = f"{flags} {_EIGEN_FLAG}".strip()
+    return True
+
+
+def loadavg() -> list:
+    """[1m, 5m, 15m] host load averages (json-serializable; [] where the
+    platform has no getloadavg)."""
+    try:
+        return [round(x, 3) for x in os.getloadavg()]
+    except (AttributeError, OSError):  # pragma: no cover - non-POSIX
+        return []

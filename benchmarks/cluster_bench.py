@@ -34,6 +34,11 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from bench_noise import loadavg, pin_host_threads
+
+pin_host_threads()  # must precede the first jax import
 
 import jax
 import numpy as np
@@ -208,6 +213,7 @@ def run(report, *, arch="granite-8b", replicas=2, slots=2, window=128,
                "sync_every": sync_every, "requests": requests,
                "rate": rate, "seed": seed, "pools": pools,
                "tick_s": tick_s,
+               "loadavg": loadavg(),  # host business when measured
                "note": "virtual-time drive: one step per cost-model decode "
                        "tick; latencies reported in ticks, not CPU wall "
                        "clock",

@@ -22,6 +22,11 @@ from functools import partial
 from typing import List, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from bench_noise import loadavg, pin_host_threads
+
+pin_host_threads()  # must precede the first jax import
 
 import jax
 import jax.numpy as jnp
@@ -212,6 +217,7 @@ def run(report, *, arch: str = "granite-8b", slot_counts=(2, 4, 8),
     results = {"arch": arch, "window": window, "ticks": ticks,
                "rounds": rounds, "sync_every": sync_every,
                "slot_counts": list(slot_counts),
+               "loadavg": loadavg(),  # host business when measured
                "baseline": {}, "engine": {}, "speedup": {}}
 
     # per-round stream budget: warmup + measured ticks (with fused-scan

@@ -115,12 +115,22 @@ def _attn_flops(cfg, batch: int, s_q: int, s_kv: int) -> float:
 
 
 def estimate_prefill(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
-                     n_chips: int = 1, collective_bytes: float = 0.0) -> WorkEstimate:
+                     n_chips: int = 1, collective_bytes: float = 0.0,
+                     prefix_hit: int = 0) -> WorkEstimate:
+    """``prefix_hit`` > 0 models suffix-offset prefill over a shared-prefix
+    KV cache hit: only ``seq - prefix_hit`` tokens flow through the model
+    (their attention still spans all ``seq`` keys), and the cached prefix
+    KV is READ from HBM instead of computed. This is the discount the
+    cluster's prefix-affinity routing scores with — a replica already
+    holding a request's template predicts a cheaper prefill."""
     n_active = cfg.active_param_count()
-    flops = 2.0 * n_active * batch * seq + _attn_flops(cfg, batch, seq, seq)
+    new = max(1, seq - prefix_hit) if prefix_hit > 0 else seq
+    flops = 2.0 * n_active * batch * new + _attn_flops(cfg, batch, new, seq)
     wb = _dtype_bytes(cfg)
-    act_bytes = 12.0 * batch * seq * cfg.d_model * wb  # residual traffic
+    act_bytes = 12.0 * batch * new * cfg.d_model * wb  # residual traffic
     hbm = cfg.param_count() * wb + act_bytes
+    if prefix_hit > 0:
+        hbm += kv_bytes_per_token(cfg) * min(prefix_hit, seq) * batch
     return WorkEstimate(flops, hbm, collective_bytes, chip, n_chips)
 
 

@@ -49,9 +49,20 @@ class Instance:
         noisier than ``predicted_completion`` — no per-job service term)."""
         return self.queue_s
 
+    def prefix_hit_s(self, job: Job) -> float:
+        """Prefix-affinity term: service seconds this replica would SKIP
+        because it already holds the job's prompt prefix in its KV cache.
+        The simulated instance has no cache, so the default is 0; live
+        engines (``repro.serving.cluster.EngineInstance``) override it
+        with a real ``PrefixIndex`` probe. Subtracted from the routing
+        score, so template traffic gravitates to the replica that already
+        paid for the prefix."""
+        return 0.0
+
     def predicted_completion(self, job: Job) -> float:
         concurrency = len(self.device.running) + 1
-        return self.queue_s + job.service_s * concurrency / self.device.speed
+        service = max(0.0, job.service_s - self.prefix_hit_s(job))
+        return self.queue_s + service * concurrency / self.device.speed
 
 
 class ServiceRouter:

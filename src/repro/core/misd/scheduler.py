@@ -34,6 +34,12 @@ class Job:
     arrival: float = 0.0
     priority: int = 0
     sla_s: float = 0.0
+    # token-level shape (0/None when the caller only knows service_s):
+    # lets per-replica routing re-estimate service for heterogeneous
+    # hardware (n_chips) and probe prefix-cache affinity on the prompt
+    prompt_tokens: int = 0
+    new_tokens: int = 0
+    tokens: Optional[Sequence[int]] = None  # prompt ids (affinity probe)
     # runtime state
     remaining: float = -1.0
     start: float = -1.0

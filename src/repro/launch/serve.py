@@ -36,7 +36,8 @@ def _build_engine(cfg, params, args):
                          paged=None if not args.no_paged else False,
                          page_size=args.page_size,
                          max_seq=args.max_seq or None,
-                         pool_pages=args.pool_pages or None)
+                         pool_pages=args.pool_pages or None,
+                         prefix_cache=args.prefix_cache)
 
 
 def main():
@@ -67,6 +68,10 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="shared KV pool size in pages; 0 = full headroom, "
                          "less oversubscribes (admission backpressure)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV cache: keep finished prompts' "
+                         "pages in a radix index; later requests alias "
+                         "them and prefill only their suffix (paged only)")
     ap.add_argument("--replicas", type=int, default=1,
                     help="ServingEngine replicas behind the cluster "
                          "frontend; 1 = single-engine path")
@@ -147,6 +152,9 @@ def main():
           f"qps={args.requests/wall:.2f}  tok/s={m.total_tokens/wall:.1f}  "
           f"ticks={m.decode_ticks}  host_syncs={m.host_syncs}  "
           f"prefill_chunks={m.prefill_chunks}")
+    if m.prefix_hits:
+        print(f"prefix cache: {m.prefix_hits} hits, "
+              f"{m.prefix_hit_tokens} prompt tokens skipped")
     print(f"latency p50={np.percentile(lats,50)*1e3:.0f}ms "
           f"p99={np.percentile(lats,99)*1e3:.0f}ms  "
           f"mean_jct={np.mean(lats)*1e3:.0f}ms  "

@@ -60,7 +60,11 @@ class EngineInstance(Instance):
                  model: str = DEFAULT_POOL):
         super().__init__(
             name=name, model=model,
-            device=Device(name=f"dev:{name}", max_tenants=engine.slots))
+            # device speed mirrors the replica's chip count so router
+            # machinery written for simulated instances scales its
+            # fallback predictions on heterogeneous pools
+            device=Device(name=f"dev:{name}", max_tenants=engine.slots,
+                          speed=float(engine.n_chips)))
         self.engine = engine
         self.corrector = InterferencePredictor()
         # frontend-side accounting (the bench's utilization columns)
@@ -101,14 +105,49 @@ class EngineInstance(Instance):
         rep = rep if rep is not None else self.engine.load_report()
         return rep.tick_est_s * self._slot_wait_ticks(rep) + rep.queued_prefill_s
 
+    def prefix_hit_s(self, job: Job) -> float:
+        """Live prefix-affinity probe: cost-model prefill seconds this
+        replica's ``PrefixIndex`` would skip for the job's prompt (0 when
+        the cache is off, the prompt is unknown, or nothing matches)."""
+        if job.tokens is None or job.prompt_tokens <= 0:
+            return 0.0
+        hit = self.engine.prefix_match_len(job.tokens)
+        if hit <= 0:
+            return 0.0
+        eng = self.engine
+        full = estimate_prefill(eng.cfg, 1, job.prompt_tokens,
+                                n_chips=eng.n_chips).latency_s
+        rest = estimate_prefill(eng.cfg, 1, job.prompt_tokens,
+                                n_chips=eng.n_chips,
+                                prefix_hit=hit).latency_s
+        return max(0.0, full - rest)
+
+    def service_s(self, job: Job) -> float:
+        """The job's isolated service time ON THIS replica: re-estimated
+        from its token shape with this engine's chip count (heterogeneous
+        pools) and discounted by the prefix-affinity hit. Falls back to
+        the pool-reference ``job.service_s`` when the token shape is
+        unknown."""
+        if job.prompt_tokens <= 0:
+            return job.service_s
+        eng = self.engine
+        hit = (self.engine.prefix_match_len(job.tokens)
+               if job.tokens is not None else 0)
+        pre = estimate_prefill(eng.cfg, 1, job.prompt_tokens,
+                               n_chips=eng.n_chips,
+                               prefix_hit=max(0, hit)).latency_s
+        dec = estimate_decode(eng.cfg, 1, eng.window,
+                              n_chips=eng.n_chips).latency_s
+        return pre + dec * max(0, job.new_tokens - 1)
+
     def predicted_completion(self, job: Job) -> float:
         """Cost-model completion estimate on THIS replica, residual-
         corrected by what the closed loop has observed here: seconds until
         a decode slot opens for the job (slot-drain simulation over the
         telemetry), plus the engine's queued prefill work, plus the job's
-        own isolated service time."""
+        own service time on this hardware (chip count + prefix affinity)."""
         return self.corrector.corrected_latency(
-            self.queue_wait_s() + job.service_s)
+            self.queue_wait_s() + self.service_s(job))
 
     def predicted_wait(self, prefill_s: float, rep=None) -> float:
         """Corrected seconds until the job's FIRST token (TTFT component):
@@ -226,11 +265,19 @@ class ClusterFrontend:
             # per-instance snapshots for its own scoring).
             rep = inst.engine.load_report()
             base = inst.queue_wait_s(rep)
-            pre_s = estimate_prefill(inst.engine.cfg, 1,
-                                     max(1, req.prompt_len),
-                                     n_chips=inst.engine.n_chips).latency_s
+            # one radix probe + one estimate pair for both anchors (the
+            # per-candidate probes during route() scoring are inherent
+            # to the policy; the chosen replica's is not re-run)
+            eng = inst.engine
+            hit = eng.prefix_match_len(req.prompt)
+            pre_s = estimate_prefill(eng.cfg, 1, max(1, req.prompt_len),
+                                     n_chips=eng.n_chips,
+                                     prefix_hit=hit).latency_s
+            dec_s = estimate_decode(eng.cfg, 1, eng.window,
+                                    n_chips=eng.n_chips).latency_s
             req._pred_wait_s = base + pre_s
-            req._pred_complete_s = base + job.service_s
+            req._pred_complete_s = (base + pre_s
+                                    + dec_s * max(0, req.max_new_tokens - 1))
             req._dispatch_t = now
             req.routed_to = inst.name
             inst.routed += 1
@@ -250,7 +297,11 @@ class ClusterFrontend:
         service = pre_s + dec.latency_s * max(0, req.max_new_tokens - 1)
         return Job(jid=req.rid, model=req.model, demand=dec.demand,
                    service_s=service, arrival=now, priority=req.priority,
-                   sla_s=req.ttft_slo_s)
+                   sla_s=req.ttft_slo_s,
+                   # token shape: lets each EngineInstance re-estimate
+                   # service for its own chips and probe prefix affinity
+                   prompt_tokens=req.prompt_len,
+                   new_tokens=req.max_new_tokens, tokens=req.prompt)
 
     def step(self, now: float) -> List[Request]:
         """One cluster tick: dispatch anything queued, step every replica

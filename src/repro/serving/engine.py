@@ -19,7 +19,12 @@ The steady-state decode loop is zero-copy and zero-recompile:
     many chunks fit per tick from the cost model), so admitting a long
     request no longer stalls in-flight decode slots;
   * cost-model admission — slot count and queue flush deadlines come from
-    ``repro.core.misd.batching.plan_admission`` instead of constants.
+    ``repro.core.misd.batching.plan_admission`` instead of constants;
+  * shared-prefix KV cache (opt-in ``prefix_cache=True``, paged only) —
+    finished prompts' full pages stay in a radix ``PrefixIndex``; a new
+    request aliases the longest cached prefix (refcounted pages, zero
+    prefill compute for the hit) and prefills only its suffix from a
+    nonzero offset, with copy-on-write for a partially-matched tail page.
 
 All steps are pure jit functions; the executor is the only stateful part.
 """
@@ -30,7 +35,7 @@ import time
 from collections import deque
 from dataclasses import dataclass
 from functools import partial
-from typing import Deque, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -52,7 +57,12 @@ from repro.models import (
 )
 from repro.models.blocks import KV_CACHE_BLOCKS
 from repro.models.model import block_program
-from repro.serving.paging import OutOfPagesError, PageAllocator
+from repro.serving.paging import (
+    OutOfPagesError,
+    PageAllocator,
+    PrefixHit,
+    PrefixIndex,
+)
 from repro.serving.request import Request, ServeMetrics
 
 
@@ -156,6 +166,66 @@ def pages_insert(paged_cache, linear_cache, pages, slot, true_len):
         "body": jax.tree.map(ins, paged_cache["body"], linear_cache["body"]),
         "tail": jax.tree.map(ins, paged_cache["tail"], linear_cache["tail"]),
         "page_table": jax.lax.dynamic_update_slice(table, row[None], (slot, 0)),
+        "pos": jax.lax.dynamic_update_slice(
+            paged_cache["pos"], true_len[None], (slot,)),
+    }
+
+
+def prefix_seed_cache(paged_cache, pages, start):
+    """Gather a cached page chain into a fresh B=1 LINEAR cache — the
+    working buffer for suffix-offset prefill. ``pages`` (max_pages,) is
+    the hit's chain (full pages + the shared COW tail) padded with the
+    trash page, so its shape is FIXED: one trace covers every hit length.
+    Page i lands at linear positions [i*ps, (i+1)*ps); ``start`` (traced)
+    is the suffix-restart offset -> the cache's pos, which masks both the
+    trash-page garbage beyond the chain and the donor's tokens beyond the
+    matched span. Read-only over the pools (never donated)."""
+
+    def gather(pool):
+        ax = pool.ndim - 4  # page axis (stacked body leaves lead n_repeat)
+        take = jnp.take(pool, pages, axis=ax)  # (..., n, ps, kv, hd)
+        s = take.shape
+        merged = take.reshape(s[:ax] + (s[ax] * s[ax + 1],) + s[ax + 2:])
+        return jnp.expand_dims(merged, ax)  # B=1 axis where pages were
+
+    return {
+        "body": jax.tree.map(gather, paged_cache["body"]),
+        "tail": jax.tree.map(gather, paged_cache["tail"]),
+        "pos": jnp.full((1,), jnp.asarray(start, jnp.int32), jnp.int32),
+    }
+
+
+def pages_insert_prefix(paged_cache, linear_cache, scatter_pages, table_pages,
+                        slot, true_len):
+    """Admit a prefix-hit request: the slot's table row aliases the cached
+    full pages while only privately-owned pages receive the linear
+    cache's data. Both page rows are max_pages wide (the linear buffer IS
+    max_seq tokens), so ONE trace covers every hit length / suffix shape.
+
+    ``scatter_pages`` carries the trash page at every aliased (shared)
+    position — shared pages are never written. This is where copy-on-
+    write lands: the shared tail page's matched tokens were gathered into
+    the linear buffer (prefix_seed_cache), the suffix prefill overwrote
+    from the hit boundary on, and the whole span now scatters into the
+    private replacement page named by ``table_pages``."""
+    n = scatter_pages.shape[0]
+
+    def ins(pool, small):
+        ax = small.ndim - 4
+        ps = pool.shape[ax + 1]
+        if ax == 0:
+            chunks = small.reshape((n, ps) + small.shape[2:])
+            return pool.at[scatter_pages].set(chunks.astype(pool.dtype))
+        chunks = small.reshape((small.shape[0], n, ps) + small.shape[3:])
+        return pool.at[:, scatter_pages].set(chunks.astype(pool.dtype))
+
+    table = paged_cache["page_table"]
+    true_len = jnp.asarray(true_len, jnp.int32)
+    return {
+        "body": jax.tree.map(ins, paged_cache["body"], linear_cache["body"]),
+        "tail": jax.tree.map(ins, paged_cache["tail"], linear_cache["tail"]),
+        "page_table": jax.lax.dynamic_update_slice(
+            table, table_pages[None], (slot, 0)),
         "pos": jax.lax.dynamic_update_slice(
             paged_cache["pos"], true_len[None], (slot,)),
     }
@@ -306,6 +376,11 @@ class LoadReport:
     # inputs to the cluster's slot-availability simulation
     active_remaining: tuple = ()
     queued_budgets: tuple = ()
+    # --- prefix cache (0s when the index is off) ---
+    prefix_cached_pages: int = 0  # pages currently held by the index
+    prefix_cached_tokens: int = 0
+    prefix_hits: int = 0  # cumulative admissions served from the cache
+    prefix_hit_tokens: int = 0  # cumulative prompt tokens skipped
 
     @property
     def saturated(self) -> bool:
@@ -324,6 +399,21 @@ class _PrefillJob:
     tokens: jnp.ndarray  # (1, padded_len) device-resident prompt
     true_len: np.int32
     next_off: int = 0
+    # first-token logits come from the chunk containing position
+    # true_len-1, which is NOT always the last chunk (the padded buffer
+    # is quantum-aligned; trailing chunks can be pure pad) — stash it
+    tok: Optional[jnp.ndarray] = None
+
+
+@dataclass
+class _HitAdmission:
+    """Host-side plan for a prefix-hit admission, staged between
+    reservation and activation: which table positions alias shared pages
+    (scatter to trash) and which receive the suffix prefill's data."""
+
+    scatter_pages: np.ndarray  # (max_pages,) trash at aliased positions
+    table_pages: np.ndarray  # (max_pages,) the slot's full table row
+    n_tabled: int  # owned pages written into the row (incl. decode tail)
 
 
 # ---------------------------------------------------------------------------
@@ -356,6 +446,12 @@ class ServingEngine:
     ``plan_admission`` when ``slots=0`` — the paged cache only needs the
     *expected* resident tokens per slot rather than a full window, so the
     same budget admits more concurrent slots.
+    ``prefix_cache``: keep finished prompts' full KV pages in a radix
+    ``PrefixIndex`` so later requests sharing a prefix alias those pages
+    (refcounted) and prefill only their suffix — zero prefill compute for
+    the cached span. Requires the paged cache. Off by default: cached
+    pages outlive their requests, so ``pages_in_use`` no longer drains to
+    zero between waves (use ``clear_prefix_cache()`` / ``reset()``).
     """
 
     def __init__(self, cfg, params, *, slots: Optional[int] = 4,
@@ -369,7 +465,8 @@ class ServingEngine:
                  max_seq: Optional[int] = None,
                  kv_hbm_budget: Optional[float] = None,
                  expected_len: Optional[int] = None,
-                 edf_backlog: bool = False):
+                 edf_backlog: bool = False,
+                 prefix_cache: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_chips = n_chips
@@ -415,9 +512,15 @@ class ServingEngine:
                                if self.chunk else page_size)
 
         # --- device state (exclusively owned: donation-safe) ---
+        if prefix_cache and not (paged_ok(cfg) if paged is None else paged):
+            raise ValueError(
+                f"{cfg.name}: prefix_cache requires the paged KV cache "
+                f"(rolling windows cannot alias another slot's KV)")
         if self.paged:
             self.pool_pages = pool_pages or slots * self.max_pages + 1
             self.allocator = PageAllocator(self.pool_pages, page_size)
+            self.prefix_index = (PrefixIndex(self.allocator, page_size)
+                                 if prefix_cache else None)
             self.cache = init_paged_cache(cfg, slots, self.pool_pages,
                                           page_size, self.max_pages)
             self._pos_h: List[int] = [0] * slots  # host mirror of cache pos
@@ -425,7 +528,11 @@ class ServingEngine:
             # device page-table row (the decode tail is appended lazily)
             self._tabled: List[int] = [0] * slots
         else:
+            self.prefix_index = None
             self.cache = init_cache(cfg, slots, window)
+        # staged prefix-hit admission plans, keyed by slot (consumed at
+        # activation; see _HitAdmission)
+        self._hit_pending: Dict[int, _HitAdmission] = {}
         self._tokens = jnp.zeros((slots,), jnp.int32)
         self.active: List[Optional[Request]] = [None] * slots
         self.decoding: List[bool] = [False] * slots
@@ -465,6 +572,13 @@ class ServingEngine:
             self.prefill_traces += 1
             return paged_prefill_step(cfg, params, batch, true_len)
 
+        def _probed_suffix(params, cache, tokens, true_len):
+            # suffix-offset prefill over a seeded linear cache: retraces
+            # once per SUFFIX bucket width (cache width is always
+            # max_seq), never per hit length — start/true_len are traced
+            self.prefill_traces += 1
+            return prefill_chunk_step(cfg, params, cache, tokens, true_len)
+
         donate0 = (0,) if donate else ()
         self._decode = jax.jit(_probed_decode, donate_argnums=donate_cache)
         self._decode_scan = jax.jit(_probed_scan, donate_argnums=donate_cache)
@@ -478,6 +592,14 @@ class ServingEngine:
             partial(cache_insert, batch=slots),
             donate_argnums=donate0)
         self._pages_insert = jax.jit(pages_insert, donate_argnums=donate0)
+        # prefix-hit path: the seed reads the pools (never donated); the
+        # suffix step consumes the seeded linear cache; the scatter
+        # donates the pools like every other admission write
+        self._prefix_seed = jax.jit(prefix_seed_cache)
+        self._prefill_suffix = jax.jit(
+            _probed_suffix, donate_argnums=(1,) if donate else ())
+        self._pages_insert_prefix = jax.jit(pages_insert_prefix,
+                                            donate_argnums=donate0)
         self._table_append = jax.jit(page_table_append, donate_argnums=donate0)
         self._release = jax.jit(slot_release, donate_argnums=donate0)
         self._set_token = jax.jit(_token_set)
@@ -531,9 +653,14 @@ class ServingEngine:
         self._check_servable(req)
         for i, slot in enumerate(self.active):
             if slot is None and not any(j.slot == i for j in self._jobs):
-                if self.paged and not self._reserve_pages(req, i):
+                hit = None
+                if self.prefix_index is not None:
+                    hit = self.prefix_index.lookup(req.prompt)
+                if self.paged and not self._reserve_pages(req, i, hit):
                     return False  # out of pages: backpressure
-                if self._chunkable(req):
+                if hit is not None:
+                    self._admit_prefix(req, i, hit, now)
+                elif self._chunkable(req):
                     self._start_chunked(req, i)
                 else:
                     self._admit_now(req, i, now)
@@ -574,13 +701,51 @@ class ServingEngine:
             return bucket
         return _padded_len(plen, self.page_size) if self.paged else plen
 
-    def _reserve_pages(self, req: Request, slot: int) -> bool:
+    def _suffix_chunked(self, req: Request, hit: PrefixHit) -> bool:
+        """Whether the hit's suffix goes through interleaved chunk steps
+        (long suffix) instead of one synchronous bucketed suffix step."""
+        return (self.chunk > 0
+                and req.prompt_len - hit.tokens > self.chunk
+                and _padded_len(req.prompt_len, self._chunk_quantum)
+                <= self.max_seq)
+
+    def _suffix_plan(self, req: Request, hit: PrefixHit):
+        """(start, end) of the suffix-offset prefill in the linear buffer:
+        tokens [start, end) are (re)computed — start <= hit.tokens keeps
+        the span aligned to the chunk grid / bucket width so hit lengths
+        share traces; end never exceeds max_seq (the linear buffer must
+        not wrap)."""
+        plen, h = req.prompt_len, hit.tokens
+        if self._suffix_chunked(req, hit):
+            s = (h // self.chunk) * self.chunk
+            return s, _padded_len(plen, self._chunk_quantum)
+        c = min(prompt_bucket(plen - h, min_bucket=max(16, self.page_size)),
+                self.max_seq)
+        s = min(h, self.max_seq - c)
+        return s, s + c
+
+    def _alloc_evicting(self, slot: int, n: int) -> bool:
+        """All-or-nothing grant, evicting idle cached prefixes (LRU) to
+        cover a shortfall before refusing."""
+        if (not self.allocator.can_alloc(n)
+                and self.prefix_index is not None):
+            self.prefix_index.evict(n - self.allocator.free_pages)
+        return self.allocator.alloc(slot, n) is not None
+
+    def _reserve_pages(self, req: Request, slot: int,
+                       hit: Optional[PrefixHit] = None) -> bool:
         """Grant ``req``'s worst-case lifetime pages to ``slot`` before any
         prefill compute runs: the padded prompt plus its full token budget
         (capped at max_seq). All-or-nothing — reserving the decode tail up
         front means pool shortage always surfaces HERE as admission
         backpressure, never as mid-stream exhaustion (requests that stop
-        early at eos return the tail unused)."""
+        early at eos return the tail unused).
+
+        With a prefix ``hit``, the matched full pages are SHARED into the
+        slot (refcount+1, no pool spend) and only the remainder — the COW
+        tail replacement, suffix pages, decode tail — is allocated. Under
+        pool pressure, idle cached prefixes are evicted (oldest first)
+        before the admission is refused."""
         if self.allocator.owned(slot):
             # Lifecycle bypassed (e.g. a slot vacated without release):
             # reclaim on device first so the stale table row can never
@@ -589,9 +754,24 @@ class ServingEngine:
             self.allocator.free_slot(slot)
             self._pos_h[slot] = 0
             self._tabled[slot] = 0
+            self._hit_pending.pop(slot, None)
         lifetime = min(req.prompt_len + req.max_new_tokens - 1, self.max_seq)
-        n = self.allocator.pages_for(max(self._prefill_len(req), lifetime))
-        return self.allocator.alloc(slot, n) is not None
+        if hit is None:
+            n = self.allocator.pages_for(max(self._prefill_len(req), lifetime))
+            return self._alloc_evicting(slot, n)
+        # Share first: a shared page is no longer evictable, so the
+        # eviction pass below can never reclaim the chain we are using.
+        shared = self.allocator.share(slot, list(hit.full_pages))
+        if hit.tail_page >= 0:
+            self.allocator.retain(hit.tail_page)  # pin the COW source
+        _, end = self._suffix_plan(req, hit)
+        n_priv = self.allocator.pages_for(max(end, lifetime)) - len(shared)
+        if not self._alloc_evicting(slot, n_priv):
+            if hit.tail_page >= 0:
+                self.allocator.release(hit.tail_page)
+            self.allocator.free_slot(slot)  # drop the shares (rollback)
+            return False
+        return True
 
     def _admit_now(self, req: Request, slot: int, now: float):
         plen = req.prompt_len
@@ -625,6 +805,56 @@ class ServingEngine:
             tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self._activate(req, slot, tok, cache1, now)
 
+    def _admit_prefix(self, req: Request, slot: int, hit: PrefixHit,
+                      now: float):
+        """Admit a request whose prefix is cached: alias the matched full
+        pages into the slot's table row (zero prefill compute for the
+        hit), gather the chain into a seeded linear buffer, and prefill
+        ONLY the suffix from a nonzero offset — synchronously in one
+        bucketed multi-token step, or through the interleaved chunk path
+        when the suffix is long. A partially-matched tail page is never
+        aliased: its matched tokens ride the gathered buffer and scatter
+        into a private page at activation (copy-on-write)."""
+        plen, ps = req.prompt_len, self.page_size
+        n_full = len(hit.full_pages)
+        owned = self.allocator.owned(slot)  # [shared full..., private...]
+        start, end = self._suffix_plan(req, hit)
+        # gather chain: full pages + COW tail source, trash-padded to the
+        # fixed max_pages width (one seed trace for every hit length)
+        chain = list(hit.full_pages)
+        if hit.tail_page >= 0:
+            chain.append(hit.tail_page)
+        gpages = np.zeros((self.max_pages,), np.int32)
+        gpages[:len(chain)] = chain
+        # table row: aliased fulls, then privates (COW tail replacement,
+        # suffix, decode tail); scatter row: privates only — a shared
+        # page is never written
+        trow = np.zeros((self.max_pages,), np.int32)
+        trow[:len(owned)] = owned
+        srow = np.zeros((self.max_pages,), np.int32)
+        srow[n_full:len(owned)] = owned[n_full:]
+        self._hit_pending[slot] = _HitAdmission(srow, trow, len(owned))
+        req.prefix_hit_tokens = hit.tokens
+        self.metrics.prefix_hits += 1
+        self.metrics.prefix_hit_tokens += hit.tokens
+        cache1 = self._prefix_seed(self.cache, jnp.asarray(gpages),
+                                   np.int32(start))
+        if hit.tail_page >= 0:
+            self.allocator.release(hit.tail_page)  # gather done: unpin
+        padded = np.zeros((1, end), np.int32)
+        padded[0, :plen] = req.prompt
+        if self._suffix_chunked(req, hit):
+            self._jobs.append(_PrefillJob(
+                req=req, slot=slot, cache=cache1,
+                tokens=jnp.asarray(padded), true_len=np.int32(plen),
+                next_off=start))
+            self.active[slot] = req  # reserve (decoding stays False)
+            return
+        toks = jnp.asarray(padded[:, start:end])
+        tok, _, cache1 = self._prefill_suffix(self.params, cache1, toks,
+                                              np.int32(plen))
+        self._activate(req, slot, tok, cache1, now)
+
     def _start_chunked(self, req: Request, slot: int):
         padded_len = self._prefill_len(req)
         padded = np.zeros((1, padded_len), np.int32)
@@ -656,11 +886,19 @@ class ServingEngine:
                 job.tokens, job.next_off, job.next_off + self.chunk, axis=1)
             tok, _, job.cache = self._prefill_chunk(
                 self.params, job.cache, chunk_toks, job.true_len)
+            prev_off = job.next_off
             job.next_off += self.chunk
+            if prev_off <= int(job.true_len) - 1 < job.next_off:
+                # first-token logits live in the chunk holding position
+                # true_len-1; later chunks (pure quantum padding) return
+                # a clamped garbage index — keep the real one
+                job.tok = tok
             self.metrics.prefill_chunks += 1
             if job.next_off >= job.tokens.shape[1]:
                 self._jobs.popleft()
-                self._activate(job.req, job.slot, tok, job.cache, now)
+                self._activate(job.req, job.slot,
+                               tok if job.tok is None else job.tok,
+                               job.cache, now)
 
     def _activate(self, req: Request, slot: int, tok, cache1, now: float):
         """Install a prefilled request into its slot: scatter the B=1 cache
@@ -671,18 +909,39 @@ class ServingEngine:
         copying into a per-slot window."""
         self._flush(now)
         if self.paged:
-            # scatter the prompt into the reservation's LEADING pages; the
-            # decode-tail pages (also reserved) enter the table row lazily
-            # as the stream grows, so pages_insert keeps one trace per
-            # bucket regardless of each request's token budget
-            n_pref = self.allocator.pages_for(self._prefill_len(req))
-            pages = jnp.asarray(self.allocator.owned(slot)[:n_pref],
-                                jnp.int32)
-            self.cache = self._pages_insert(
-                self.cache, cache1, pages, np.int32(slot),
-                np.int32(req.prompt_len))
-            self._pos_h[slot] = req.prompt_len
-            self._tabled[slot] = n_pref
+            info = self._hit_pending.pop(slot, None)
+            if info is not None:
+                # prefix hit: the fixed-width scatter writes the suffix
+                # into private pages (trash at aliased positions) and the
+                # FULL table row — shared fulls, COW tail, decode tail —
+                # in one go (one trace for every hit shape)
+                self.cache = self._pages_insert_prefix(
+                    self.cache, cache1, jnp.asarray(info.scatter_pages),
+                    jnp.asarray(info.table_pages), np.int32(slot),
+                    np.int32(req.prompt_len))
+                self._pos_h[slot] = req.prompt_len
+                self._tabled[slot] = info.n_tabled
+            else:
+                # scatter the prompt into the reservation's LEADING pages;
+                # the decode-tail pages (also reserved) enter the table
+                # row lazily as the stream grows, so pages_insert keeps
+                # one trace per bucket regardless of each token budget
+                n_pref = self.allocator.pages_for(self._prefill_len(req))
+                pages = jnp.asarray(self.allocator.owned(slot)[:n_pref],
+                                    jnp.int32)
+                self.cache = self._pages_insert(
+                    self.cache, cache1, pages, np.int32(slot),
+                    np.int32(req.prompt_len))
+                self._pos_h[slot] = req.prompt_len
+                self._tabled[slot] = n_pref
+            if self.prefix_index is not None:
+                # register the finished prompt's FULL pages (only spans
+                # entirely inside the prompt: an indexed page is never
+                # appended to again — the COW invariant)
+                n_full = req.prompt_len // self.page_size
+                owned = self.allocator.owned(slot)
+                if n_full:
+                    self.prefix_index.register(req.prompt, owned[:n_full])
             # the page table caps a request's lifetime tokens at max_seq;
             # surface the truncation on the request instead of failing
             cap = max(1, self.max_seq - req.prompt_len)
@@ -799,9 +1058,10 @@ class ServingEngine:
         to the allocator and neutralize its device page-table row."""
         self.active[slot] = None
         self.decoding[slot] = False
+        self._hit_pending.pop(slot, None)
         if self.paged:
             self.cache = self._release(self.cache, np.int32(slot))
-            self.allocator.free_slot(slot)
+            self.allocator.free_slot(slot)  # decref: shared pages survive
             self._pos_h[slot] = 0
             self._tabled[slot] = 0
 
@@ -859,11 +1119,30 @@ class ServingEngine:
             if self.active[i] is not None:
                 self.release_slot(i)
         self._jobs.clear()
+        self._hit_pending.clear()
+        if self.prefix_index is not None:
+            self.prefix_index.clear()  # cached pages back to the pool
         self.backlog.clear()
         self.admission.flush()
         self._unsynced = []
         self._finished = []
         self.metrics = ServeMetrics()
+
+    # -- prefix cache ------------------------------------------------------
+    def prefix_match_len(self, tokens) -> int:
+        """Cached-prefix length a prompt would hit HERE (0 when the index
+        is off) — the cluster frontend's affinity probe. Read-only: no
+        LRU touch, no counters."""
+        if self.prefix_index is None:
+            return 0
+        return self.prefix_index.match_len(tokens)
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every cached prefix (pages with no live alias return to
+        the pool immediately). Returns pages freed."""
+        if self.prefix_index is None:
+            return 0
+        return self.prefix_index.clear()
 
     # -- telemetry ---------------------------------------------------------
     def load_report(self) -> LoadReport:
@@ -897,6 +1176,7 @@ class ServingEngine:
             self.cfg, queued_prefill_tokens=0,
             decode_tokens_remaining=dec_rem, slots=self.slots,
             context=self.window, n_chips=self.n_chips)
+        idx = self.prefix_index
         return LoadReport(
             slots=self.slots,
             free_slots=sum(r is None for r in self.active),
@@ -909,7 +1189,11 @@ class ServingEngine:
             tick_est_s=self._tick_est_s,
             queued_prefill_s=pre_s,
             active_remaining=tuple(remaining),
-            queued_budgets=tuple(r.max_new_tokens for r in queued))
+            queued_budgets=tuple(r.max_new_tokens for r in queued),
+            prefix_cached_pages=idx.cached_pages if idx else 0,
+            prefix_cached_tokens=idx.cached_tokens if idx else 0,
+            prefix_hits=self.metrics.prefix_hits,
+            prefix_hit_tokens=self.metrics.prefix_hit_tokens)
 
     @property
     def idle(self) -> bool:

@@ -34,6 +34,9 @@ class Request:
     # token capacity (paged KV: prompt + output <= max_seq) — the stream
     # ends early by budget, not by eos.
     budget_capped: bool = False
+    # prompt tokens served from the shared-prefix KV cache (their prefill
+    # was skipped: the pages were aliased from the PrefixIndex); 0 = cold
+    prefix_hit_tokens: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -96,6 +99,9 @@ class ServeMetrics:
     decode_ticks: int = 0  # batched decode steps executed
     host_syncs: int = 0  # device->host token transfers (1 per N ticks)
     prefill_chunks: int = 0  # chunked-prefill pieces interleaved with decode
+    # --- shared-prefix KV cache ---
+    prefix_hits: int = 0  # admissions that aliased cached prefix pages
+    prefix_hit_tokens: int = 0  # prompt tokens whose prefill was skipped
     # --- SLO attainment (requests declaring ttft_slo_s / tpot_slo_s) ---
     slo_tracked: int = 0  # finished requests that declared any SLO
     slo_met: int = 0  # ...that met every declared SLO
@@ -159,6 +165,8 @@ class ServeMetrics:
         self.decode_ticks += other.decode_ticks
         self.host_syncs += other.host_syncs
         self.prefill_chunks += other.prefill_chunks
+        self.prefix_hits += other.prefix_hits
+        self.prefix_hit_tokens += other.prefix_hit_tokens
         self.slo_tracked += other.slo_tracked
         self.slo_met += other.slo_met
         self.ttft_slo_misses += other.ttft_slo_misses

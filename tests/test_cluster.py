@@ -367,6 +367,69 @@ def test_cluster_edf_frontend_dispatch_order(pair):
     assert tight.prefill_done <= mid.prefill_done <= loose.prefill_done
 
 
+def test_heterogeneous_pool_routes_more_to_bigger_replica(granite):
+    """Satellite: per-replica n_chips flows through EngineInstance into
+    predicted-completion routing — a 4-chip replica's cost-model service
+    is cheaper, so it should absorb clearly more of the traffic than its
+    1-chip sibling (and the pool still drains correctly)."""
+    cfg, params = granite
+    engines = [ServingEngine(cfg, params, slots=2, window=64, max_seq=128,
+                             sync_every=4, n_chips=c) for c in (1, 4)]
+    fe = ClusterFrontend(engines, policy="predicted", seed=0)
+    small, big = fe.instances
+    assert small.device.speed == 1.0 and big.device.speed == 4.0
+    reqs = [Request(i, _prompt(12 + (i % 5), seed=i), max_new_tokens=6)
+            for i in range(12)]
+    # trickle arrivals so routing reacts to load, not just an empty tie
+    t, done, pending = 0.0, 0, list(reqs)
+    while done < len(reqs):
+        if pending:
+            fe.submit(pending.pop(0), t)
+        t += 1.0
+        done += len(fe.step(t))
+        assert t < 5000
+    fe.drain(t)
+    assert small.routed + big.routed == len(reqs)
+    assert big.routed > small.routed  # more chips -> more traffic
+    for eng in engines:
+        assert eng.allocator.pages_in_use == 0
+
+
+def test_prefix_affinity_routes_template_to_warm_replica(granite):
+    """Satellite/tentpole: with prefix caching on, predicted-completion
+    routing includes the affinity term — requests sharing a template land
+    on the replica that already holds its pages (and actually hit)."""
+    cfg, params = granite
+    engines = [ServingEngine(cfg, params, slots=2, window=64, max_seq=128,
+                             sync_every=4, prefix_cache=True)
+               for _ in range(2)]
+    fe = ClusterFrontend(engines, policy="predicted", seed=0)
+    tpl = _prompt(48, seed=40)
+    # warm the SECOND replica directly: on an idle cluster the routing
+    # tie-break alone would pick e0, so landing on e1 proves the
+    # affinity term (not registration order) steered the choice
+    primer = Request(0, tpl.copy(), max_new_tokens=1)
+    assert engines[1].try_admit(primer, 0.0)
+    engines[1].drain(0.0)
+    home = fe.instances[1].name
+    followups = [Request(1 + i,
+                         np.concatenate([tpl, _prompt(4 + i, seed=41 + i)]
+                                        ).astype(np.int32),
+                         max_new_tokens=2) for i in range(4)]
+    t = 1000.0
+    for r in followups:  # idle cluster each time: affinity is the tiebreak
+        t = _drive(fe, [r], t0=t) + 1.0
+    assert all(r.routed_to == home for r in followups)
+    assert all(r.prefix_hit_tokens == 48 for r in followups)
+    # unrelated traffic is NOT pulled toward the warm replica's pages
+    stranger = Request(99, _prompt(20, seed=77), max_new_tokens=2)
+    probe_inst = next(i for i in fe.instances if i.name == home)
+    job = fe._job_for(stranger, t)
+    assert probe_inst.prefix_hit_s(job) == 0.0
+    for eng in engines:
+        assert eng.allocator.pages_in_use == eng.prefix_index.cached_pages
+
+
 def test_cluster_closed_loop_observes(pair):
     """Serving traffic populates each instance's corrector with residual
     observations (predicted vs observed TTFT/JCT)."""

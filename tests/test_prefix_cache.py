@@ -1,0 +1,366 @@
+"""Shared-prefix KV cache: refcounted page sharing, the radix PrefixIndex
+(lookup / register / COW tail / LRU eviction), suffix-offset prefill
+stream identity, trace stability across hit lengths, eviction under pool
+pressure, and zero-leak drains."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (
+    PageAllocator,
+    PrefixIndex,
+    Request,
+    ServingEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 500, n).astype(np.int32)
+
+
+def _drive(eng, reqs, t=0.0):
+    for r in reqs:
+        assert eng.try_admit(r, t)
+    while not all(r.done for r in reqs):
+        t += 1.0
+        eng.step(t)
+    eng.drain(t)
+    return t
+
+
+def _serve_each(eng, prompts, budget=4, t=0.0):
+    """Admit + fully serve prompts one at a time; returns requests."""
+    out = []
+    for i, p in enumerate(prompts):
+        r = Request(1000 + i, np.asarray(p, np.int32), max_new_tokens=budget)
+        t = _drive(eng, [r], t) + 1.0
+        out.append(r)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# refcounted allocator edges
+# ---------------------------------------------------------------------------
+
+
+def test_share_then_free_in_both_orders():
+    """Double-share then free in both orders: a page returns to the free
+    list exactly when its LAST holder drops, regardless of order."""
+    for first, second in ((0, 1), (1, 0)):
+        a = PageAllocator(9, 16)
+        pages = a.alloc(0, 2)
+        a.share(1, pages)
+        assert all(a.refcount(p) == 2 for p in pages)
+        assert a.pages_in_use == 2
+        assert a.free_slot(first) == []  # still held by the other slot
+        assert a.pages_in_use == 2
+        assert all(a.refcount(p) == 1 for p in pages)
+        freed = a.free_slot(second)
+        assert sorted(freed) == sorted(pages)
+        assert a.pages_in_use == 0 and a.total_refs == 0
+
+
+def test_share_and_retain_reject_dead_pages():
+    a = PageAllocator(5, 16)
+    pages = a.alloc(0, 1)
+    with pytest.raises(ValueError, match="not live"):
+        a.share(1, [pages[0] + 1])  # never granted
+    with pytest.raises(ValueError, match="not live"):
+        a.retain(a.TRASH_PAGE)
+    a.retain(pages[0])
+    a.free_slot(0)
+    assert a.refcount(pages[0]) == 1  # the retain survives the slot
+    assert a.release(pages[0]) is True
+    with pytest.raises(ValueError, match="not live"):
+        a.release(pages[0])
+
+
+def test_alloc_exclusive_vs_shared_accounting():
+    """alloc spends pool pages; share does not (aliases cost nothing)."""
+    a = PageAllocator(5, 16)  # 4 usable
+    pages = a.alloc(0, 4)
+    assert a.free_pages == 0
+    a.share(1, pages)
+    a.share(2, pages[:2])
+    assert a.free_pages == 0 and a.pages_in_use == 4
+    assert a.owned(1) == pages and a.owned(2) == pages[:2]
+    a.free_slot(0)
+    a.free_slot(1)
+    assert a.pages_in_use == 2  # slot 2 still aliases two pages
+    a.free_slot(2)
+    assert a.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex (host-side radix tree)
+# ---------------------------------------------------------------------------
+
+
+def _mk_index(ps=4, pool=33):
+    a = PageAllocator(pool, ps)
+    return a, PrefixIndex(a, ps)
+
+
+def test_index_register_lookup_full_and_tail():
+    a, idx = _mk_index(ps=4)
+    prompt = np.arange(12, dtype=np.int32)  # 3 full pages
+    pages = a.alloc(0, 3)
+    assert idx.register(prompt, pages) == 3
+    assert idx.cached_pages == 3 and idx.cached_tokens == 12
+    # full match capped at plen-1: the last page converts to a COW tail
+    hit = idx.lookup(prompt)
+    assert hit.tokens == 11
+    assert list(hit.full_pages) == pages[:2]
+    assert hit.tail_page == pages[2] and hit.tail_tokens == 3
+    # longer prompt sharing 2 pages + 2 tokens of the third
+    other = np.concatenate([np.arange(10), [99, 98, 97, 96]]).astype(np.int32)
+    hit = idx.lookup(other)
+    assert hit.tokens == 10 and list(hit.full_pages) == pages[:2]
+    assert hit.tail_page == pages[2] and hit.tail_tokens == 2
+    # diverging first page: no full page matches -> miss
+    assert idx.lookup(np.asarray([7, 7, 7, 7, 8], np.int32)) is None
+    # match_len mirrors lookup without LRU/counter effects
+    assert idx.match_len(prompt) == 11 and idx.match_len(other) == 10
+    assert idx.match_len(np.asarray([7, 7, 7, 7, 8], np.int32)) == 0
+
+
+def test_index_register_keeps_existing_nodes():
+    """A concurrent duplicate registration must not replace the cached
+    chain (the second requester's private pages stay exclusive)."""
+    a, idx = _mk_index(ps=4)
+    prompt = np.arange(8, dtype=np.int32)
+    first = a.alloc(0, 2)
+    idx.register(prompt, first)
+    second = a.alloc(1, 2)
+    assert idx.register(prompt, second) == 0  # nothing new
+    assert list(idx.lookup(prompt).full_pages) == first[:1]
+    assert a.refcount(second[0]) == 1  # no index hold on the duplicate
+
+
+def test_eviction_never_frees_shared_pages():
+    """Satellite: eviction only reclaims pages whose sole reference is
+    the index's own — a chain aliased by a live slot survives any evict."""
+    a, idx = _mk_index(ps=4, pool=9)
+    p1 = a.alloc(0, 2)
+    idx.register(np.arange(8, dtype=np.int32), p1)
+    a.free_slot(0)  # now held only by the index
+    p2 = a.alloc(1, 2)
+    idx.register(np.arange(100, 108, dtype=np.int32), p2)
+    # slot 1 stays live: its chain must survive any eviction demand
+    freed = idx.evict(100)
+    assert freed == 2  # only the idle chain went
+    assert a.pages_in_use == 2
+    assert idx.lookup(np.arange(100, 108, dtype=np.int32)) is not None
+    assert idx.lookup(np.arange(8, dtype=np.int32)) is None
+    a.free_slot(1)
+    assert idx.evict(100) == 2
+    assert a.pages_in_use == 0 and a.total_refs == 0
+
+
+def test_eviction_lru_order_leaves_first():
+    """Oldest-stamped chains evict first, leaves inward; a lookup hit
+    refreshes the chain so hot templates survive."""
+    a, idx = _mk_index(ps=4, pool=17)
+    old = a.alloc(0, 2)
+    idx.register(np.arange(8, dtype=np.int32), old)
+    new = a.alloc(1, 2)
+    idx.register(np.arange(50, 58, dtype=np.int32), new)
+    a.free_slot(0)
+    a.free_slot(1)
+    idx.lookup(np.arange(8, dtype=np.int32))  # refresh the OLD chain
+    assert idx.match_len(np.arange(50, 58, dtype=np.int32)) == 7
+    assert idx.evict(1) == 1  # one page: the now-older 50.. chain's LEAF
+    # the evicted chain shrank to its surviving root page; the refreshed
+    # chain is untouched
+    assert idx.match_len(np.arange(50, 58, dtype=np.int32)) == 4
+    assert idx.match_len(np.arange(8, dtype=np.int32)) == 7
+
+
+# ---------------------------------------------------------------------------
+# engine: suffix-offset prefill correctness
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_hit_streams_identical_sync_suffix(granite):
+    """Acceptance: template+suffix admissions served from the cache are
+    bit-identical to a cold engine's streams (synchronous suffix path)."""
+    cfg, params = granite
+    tpl = _prompt(48, seed=3)
+    prompts = [tpl] + [np.concatenate([tpl, _prompt(n, seed=10 + n)])
+                       for n in (5, 9, 17)]
+    kw = dict(slots=1, window=64, max_seq=128, chunk_prefill=0, sync_every=2)
+    cold = ServingEngine(cfg, params, **kw)
+    warm = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    rc = _serve_each(cold, prompts)
+    rw = _serve_each(warm, prompts)
+    assert [r.output for r in rw] == [r.output for r in rc]
+    assert [r.prefix_hit_tokens for r in rw] == [0, 48, 48, 48]
+    assert warm.metrics.prefix_hits == 3
+    assert warm.metrics.prefix_hit_tokens == 144
+
+
+def test_prefix_hit_streams_identical_chunked_suffix(granite):
+    """A long suffix behind a cached template rides the interleaved
+    chunk path from a nonzero offset — streams still bit-identical."""
+    cfg, params = granite
+    tpl = _prompt(64, seed=4)
+    long = np.concatenate([tpl, _prompt(40, seed=5)])
+    kw = dict(slots=2, window=64, max_seq=256, chunk_prefill=16)
+    cold = ServingEngine(cfg, params, **kw)
+    warm = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    rc = _serve_each(cold, [tpl, long])
+    rw = _serve_each(warm, [tpl, long])
+    assert [r.output for r in rw] == [r.output for r in rc]
+    assert rw[1].prefix_hit_tokens == 64
+    assert warm.metrics.prefill_chunks < cold.metrics.prefill_chunks
+
+
+def test_cow_tail_page_shared_three_ways(granite):
+    """Satellite: three concurrent requests aliasing one tail page each
+    get a private copy-on-write replacement; the shared page itself is
+    never written (the original owner's stream and later hits stay
+    intact), and refcounts drain to the index's hold alone."""
+    cfg, params = granite
+    p = _prompt(32, seed=6)  # exactly 2 pages: duplicates share a COW tail
+    kw = dict(slots=3, window=64, chunk_prefill=0, sync_every=2)
+    cold = ServingEngine(cfg, params, **kw)
+    ref = [Request(i, p.copy(), max_new_tokens=6) for i in range(3)]
+    _drive(cold, ref)
+
+    warm = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    primer = Request(9, p.copy(), max_new_tokens=1)
+    assert warm.try_admit(primer, 0.0)  # registers both pages, releases
+    tail = warm.prefix_index.lookup(p).tail_page
+    reqs = [Request(i, p.copy(), max_new_tokens=6) for i in range(3)]
+    for r in reqs:
+        assert warm.try_admit(r, 0.0)
+    # all three alias the first page and drew a COW copy of the tail:
+    # first page refcount = index + 3 slots; tail page stays index-only +
+    # the three transient gathers already released
+    first_page = warm.prefix_index.lookup(p).full_pages[0]
+    assert warm.allocator.refcount(first_page) == 4
+    assert warm.allocator.refcount(tail) == 1
+    t = 0.0
+    while not all(r.done for r in reqs):
+        t += 1.0
+        warm.step(t)
+    warm.drain(t)
+    assert [r.output for r in reqs] == [r.output for r in ref]
+    assert all(r.prefix_hit_tokens == 31 for r in reqs)
+    # drained: only the index holds pages; a fresh duplicate still hits
+    assert warm.allocator.refcount(first_page) == 1
+    assert warm.allocator.pages_in_use == warm.prefix_index.cached_pages
+    again = Request(20, p.copy(), max_new_tokens=6)
+    _drive(warm, [again], t + 1.0)
+    assert again.output == ref[0].output
+
+
+def test_suffix_prefill_reuses_bucket_traces(granite):
+    """Acceptance probe: hit admissions cost one seed/suffix trace per
+    SUFFIX bucket — different hit lengths and suffix lengths inside one
+    bucket must not retrace (prefill_traces stays flat)."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, max_seq=128,
+                        chunk_prefill=0, prefix_cache=True)
+    base = _prompt(48, seed=7)
+    _serve_each(eng, [base], budget=2)
+    _serve_each(eng, [np.concatenate([base, _prompt(3, seed=70)])], budget=2)
+    flat = eng.prefill_traces  # cold bucket + first suffix bucket
+    hits = [np.concatenate([base, _prompt(n, seed=71 + n)])
+            for n in (5, 9, 11, 14)]
+    reqs = _serve_each(eng, hits, budget=2)
+    assert all(r.prefix_hit_tokens > 0 for r in reqs)
+    assert eng.prefill_traces == flat  # zero new compiles across hits
+
+
+def test_eviction_under_pool_pressure_admits(granite):
+    """A pool filled with cached prefixes must evict (oldest chain first)
+    to admit fresh work rather than backpressure forever."""
+    cfg, params = granite
+    # 1 slot x 4 pages working set + tiny cache headroom
+    eng = ServingEngine(cfg, params, slots=1, window=64, pool_pages=7,
+                        chunk_prefill=0, prefix_cache=True)
+    a = _prompt(30, seed=8)
+    _serve_each(eng, [a], budget=2)
+    assert eng.prefix_index.cached_pages == 1  # 30 tokens -> 1 full page
+    # an unrelated prompt needing the whole pool forces eviction
+    b = Request(50, _prompt(40, seed=9), max_new_tokens=20)
+    assert eng.try_admit(b, 0.0)
+    t = 0.0
+    while not b.done:
+        t += 1.0
+        eng.step(t)
+    eng.drain(t)
+    assert eng.metrics.prefix_hits == 0  # b was cold
+    assert eng.allocator.pages_in_use == eng.prefix_index.cached_pages
+
+
+def test_zero_leaks_after_churned_workload(granite):
+    """Satellite: waves of mixed cold/hit/evict traffic conserve pages
+    exactly — after drain the pool holds only the index's pages, and a
+    cache clear returns every refcount to zero."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=2, window=64, max_seq=64,
+                        pool_pages=17, chunk_prefill=0, sync_every=2,
+                        prefix_cache=True)
+    tpls = [_prompt(32, seed=s) for s in (20, 21)]
+    rng = np.random.default_rng(0)
+    t = 0.0
+    for wave in range(4):
+        reqs = []
+        for i in range(3):
+            tpl = tpls[int(rng.integers(0, 2))]
+            sfx = rng.integers(0, 500, int(rng.integers(0, 9)))
+            p = np.concatenate([tpl, sfx]).astype(np.int32)
+            reqs.append(Request(100 * wave + i, p,
+                                max_new_tokens=int(rng.integers(1, 5))))
+        for r in reqs:
+            eng.submit(r, t)
+        while not all(r.done for r in reqs):
+            t += 1.0
+            eng.step(t)
+        eng.drain(t)
+        assert eng.allocator.pages_in_use == eng.prefix_index.cached_pages
+    assert eng.metrics.prefix_hits > 0
+    freed = eng.clear_prefix_cache()
+    assert freed >= 0 and eng.allocator.pages_in_use == 0
+    assert eng.allocator.total_refs == 0 and eng.allocator.free_pages == 16
+
+
+# ---------------------------------------------------------------------------
+# plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_cache_requires_paged():
+    cfg = get_config("recurrentgemma-9b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServingEngine(cfg, params, slots=1, prefix_cache=True)
+
+
+def test_load_report_and_reset_prefix_stats(granite):
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, chunk_prefill=0,
+                        prefix_cache=True)
+    p = _prompt(32, seed=11)
+    _serve_each(eng, [p, p], budget=2)
+    rep = eng.load_report()
+    assert rep.prefix_hits == 1 and rep.prefix_hit_tokens == 31
+    assert rep.prefix_cached_pages == eng.prefix_index.cached_pages > 0
+    assert rep.prefix_cached_tokens == rep.prefix_cached_pages * 16
+    assert eng.prefix_match_len(p) == 31
+    eng.reset()  # clears the index and every refcount
+    assert eng.allocator.pages_in_use == 0 and eng.allocator.total_refs == 0
+    rep = eng.load_report()
+    assert rep.prefix_cached_pages == 0 and rep.prefix_hits == 0

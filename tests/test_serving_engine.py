@@ -261,6 +261,42 @@ def test_adaptive_slot_plan(granite):
     assert eng.admission.deadline_s == plan.flush_deadline_s > 0
 
 
+def test_chunk_beyond_min_kv_ring_falls_back_to_single_shot(granite):
+    """ROADMAP regression (rolling-window chunk safety): when a chunked
+    prompt's padded length exceeds the SMALLEST KV ring (a local-attention
+    block's window), multi-query chunks would alias overwritten ring slots
+    — the engine must fall back to exact single-shot prefill and still
+    produce correct streams. A prompt that does fit the ring keeps the
+    chunked path."""
+    import dataclasses
+
+    cfg = dataclasses.replace(get_config("granite-8b").reduced(),
+                              arch_type="hybrid",
+                              block_pattern=("dense", "local_attn"),
+                              local_window=16)
+    params = init_params(cfg, jax.random.key(0))
+    eng = ServingEngine(cfg, params, slots=2, window=128, chunk_prefill=8)
+    assert not eng.paged and eng._min_window == 16  # ring < window
+    # padded(40, 8) = 40 > 16: chunking would wrap the local ring
+    unsafe = Request(0, _prompt(40, seed=1), max_new_tokens=4)
+    assert eng.try_admit(unsafe, 0.0)
+    assert eng.n_prefilling == 0  # fell back: no chunk job was queued
+    # padded(12, 8) = 16 <= 16: chunked path stays on
+    safe = Request(1, _prompt(12, seed=2), max_new_tokens=4)
+    assert eng.try_admit(safe, 0.0)
+    assert eng.n_prefilling == 1
+    t = 0.0
+    while not (unsafe.done and safe.done):
+        t += 1.0
+        eng.step(t)
+    # both streams match a no-chunking engine exactly
+    ref_u = Request(2, _prompt(40, seed=1), max_new_tokens=4)
+    ref_s = Request(3, _prompt(12, seed=2), max_new_tokens=4)
+    _run(cfg, params, [ref_u, ref_s], slots=2, window=128, chunk_prefill=0)
+    assert unsafe.output == ref_u.output
+    assert safe.output == ref_s.output
+
+
 def test_recurrent_arch_falls_back_to_exact_prefill(granite):
     """Archs with recurrent state (no end-paddable KV) must skip bucketing
     and chunking but still serve correctly."""
