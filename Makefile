@@ -2,7 +2,8 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test lint bench bench-smoke bench-cluster bench-cluster-smoke \
-	bench-prefix bench-prefix-smoke serve-bench micro
+	bench-prefix bench-prefix-smoke bench-sampling bench-sampling-smoke \
+	serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -37,6 +38,15 @@ bench-prefix:
 # stream identity, page/refcount leaks, or suffix-trace growth
 bench-prefix-smoke:
 	$(PY) benchmarks/prefix_bench.py --smoke --out BENCH_prefix_smoke.json
+
+# stochastic vs greedy decode A/B (equal batch) -> BENCH_sampling.json
+bench-sampling:
+	$(PY) benchmarks/sampling_bench.py
+
+# CI gate: seeded sampled workload replayed across slot orders + an
+# engine restart; fails on stream divergence or decode-trace growth
+bench-sampling-smoke:
+	$(PY) benchmarks/sampling_bench.py --smoke
 
 # wall-clock microbenchmarks of the jitted steps
 micro:

@@ -11,6 +11,11 @@ else the host runs. Two mitigations:
   * ``loadavg()`` — record the 1/5/15-minute load averages into every
     BENCH_*.json, so cross-PR comparisons can be qualified ("was the box
     busy when this number was taken?").
+
+Every benchmark (and every new one) routes through this module —
+``pin_host_threads()`` before its first jax import, ``noise_report()``
+into its BENCH_*.json — instead of re-pinning BLAS threads or reading
+loadavg by hand, so the mitigation story stays in one place.
 """
 from __future__ import annotations
 
@@ -18,6 +23,7 @@ import os
 import sys
 
 _EIGEN_FLAG = "--xla_cpu_multi_thread_eigen=false"
+_PINNED = False
 
 
 def pin_host_threads() -> bool:
@@ -27,16 +33,23 @@ def pin_host_threads() -> bool:
     importing several benchmarks into one process — pinning is skipped
     with a warning rather than failing the harness. Returns whether the
     pins apply to this process's jax."""
+    global _PINNED
     if "jax" in sys.modules:
-        print("bench_noise: jax already imported; host-thread pinning "
-              "skipped (numbers may be noisier)", file=sys.stderr)
-        return False
+        if not _PINNED:
+            print("bench_noise: jax already imported; host-thread pinning "
+                  "skipped (numbers may be noisier)", file=sys.stderr)
+        return _PINNED
     os.environ.setdefault("OMP_NUM_THREADS", "1")
     os.environ.setdefault("OPENBLAS_NUM_THREADS", "1")
     flags = os.environ.get("XLA_FLAGS", "")
     if _EIGEN_FLAG not in flags:
         os.environ["XLA_FLAGS"] = f"{flags} {_EIGEN_FLAG}".strip()
-    return True
+    # report what actually holds: a pre-existing OMP_NUM_THREADS=8 export
+    # survives the setdefault, and the JSON must say so
+    _PINNED = (os.environ["OMP_NUM_THREADS"] == "1"
+               and os.environ["OPENBLAS_NUM_THREADS"] == "1"
+               and _EIGEN_FLAG in os.environ["XLA_FLAGS"])
+    return _PINNED
 
 
 def loadavg() -> list:
@@ -46,3 +59,10 @@ def loadavg() -> list:
         return [round(x, 3) for x in os.getloadavg()]
     except (AttributeError, OSError):  # pragma: no cover - non-POSIX
         return []
+
+
+def noise_report() -> dict:
+    """The host-noise block every BENCH_*.json records: current load
+    averages plus whether this process's jax actually runs with the
+    pinned host-thread settings."""
+    return {"loadavg": loadavg(), "threads_pinned": _PINNED}

@@ -36,7 +36,7 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
-from bench_noise import loadavg, pin_host_threads
+from bench_noise import noise_report, pin_host_threads
 
 pin_host_threads()  # must precede the first jax import
 
@@ -213,7 +213,7 @@ def run(report, *, arch="granite-8b", replicas=2, slots=2, window=128,
                "sync_every": sync_every, "requests": requests,
                "rate": rate, "seed": seed, "pools": pools,
                "tick_s": tick_s,
-               "loadavg": loadavg(),  # host business when measured
+               **noise_report(),  # loadavg + thread pinning when measured
                "note": "virtual-time drive: one step per cost-model decode "
                        "tick; latencies reported in ticks, not CPU wall "
                        "clock",

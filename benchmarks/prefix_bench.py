@@ -35,7 +35,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
-from bench_noise import loadavg, pin_host_threads
+from bench_noise import noise_report, pin_host_threads
 
 pin_host_threads()  # must precede the first jax import
 
@@ -189,7 +189,7 @@ def run(report, *, arch: str = "granite-8b", n_templates: int = 2,
         "suffix_tokens": [suffix_lo, suffix_hi], "rounds": rounds,
         "budget": budget, "max_seq": max_seq, "page_size": page_size,
         "seed": seed,
-        "loadavg": loadavg(),  # host business when measured
+        **noise_report(),  # loadavg + thread pinning when measured
         "ttft": {
             "cold_p50_ms": cold_ms,
             "warm_hit_p50_ms": hit_ms,

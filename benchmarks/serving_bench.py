@@ -24,7 +24,7 @@ from typing import List, Optional
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.dirname(__file__))
 
-from bench_noise import loadavg, pin_host_threads
+from bench_noise import noise_report, pin_host_threads
 
 pin_host_threads()  # must precede the first jax import
 
@@ -217,7 +217,7 @@ def run(report, *, arch: str = "granite-8b", slot_counts=(2, 4, 8),
     results = {"arch": arch, "window": window, "ticks": ticks,
                "rounds": rounds, "sync_every": sync_every,
                "slot_counts": list(slot_counts),
-               "loadavg": loadavg(),  # host business when measured
+               **noise_report(),  # loadavg + thread pinning when measured
                "baseline": {}, "engine": {}, "speedup": {}}
 
     # per-round stream budget: warmup + measured ticks (with fused-scan

@@ -16,6 +16,7 @@ from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import int8_matmul as _im
 from repro.kernels import rglru_scan as _rs
+from repro.kernels import topk_sample as _ts
 
 
 def _default_interpret() -> bool:
@@ -85,6 +86,22 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
         interpret=interpret)
     return (o.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4)
             .reshape(b, sq, h, d))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def topk_sample(logits, k, temperature, uniform, *, interpret: bool = None):
+    """Fused top-k + softmax sampling: one categorical draw per row from
+    the temperature-scaled softmax restricted to the ``k`` largest logits
+    (radix select over float bits + Gumbel argmax, one VMEM pass — no
+    sort). logits (B, V); k (B,) int32 in [1, V]; temperature (B,) > 0;
+    uniform (B, V) noise in [0, 1) — the caller keys it (the engine uses
+    per-slot PRNG keys folded with the token position). Returns (B,)
+    int32. Model-layout twin with top-p and the greedy mask:
+    ``repro.models.layers.sample_tokens``."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ts.topk_sample(logits, k, temperature, uniform,
+                           interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -67,6 +67,23 @@ def ref_rglru_scan(a, x, h0):
     return h.astype(a.dtype), h[:, -1].astype(h0.dtype)
 
 
+def ref_topk_sample(logits, k, temperature, uniform):
+    """Sort-based oracle for the radix-select sampling kernel: one
+    categorical draw per row from the temperature-scaled softmax
+    restricted to the k largest logits, via Gumbel argmax. Threshold
+    semantics are ``x >= kth`` (value ties all survive), and the noise is
+    an input — kernel-vs-oracle equality is exact, not distributional.
+    logits (B, V); k (B,) int32 in [1, V]; temperature (B,) > 0;
+    uniform (B, V) in [0, 1)."""
+    x = logits.astype(F32) / temperature.astype(F32)[:, None]
+    srt = jnp.sort(x, axis=-1)[:, ::-1]
+    kth = jnp.take_along_axis(srt, (k.astype(jnp.int32) - 1)[:, None],
+                              axis=-1)
+    g = -jnp.log(-jnp.log(jnp.maximum(uniform.astype(F32), 1e-12)))
+    z = jnp.where(x >= kth, x + g, -jnp.inf)
+    return jnp.argmax(z, axis=-1).astype(jnp.int32)
+
+
 def ref_int8_matmul(x, w_q, scales):
     w = w_q.astype(F32) * scales[None, :].astype(F32)
     return (x.astype(F32) @ w).astype(x.dtype)

@@ -13,10 +13,16 @@ cluster frontend (repro.serving.cluster): N ServingEngine replicas behind
 one SLO-aware (EDF) frontend queue, routed by ``--route-policy``
 (round-robin | least-loaded | p2c | predicted). ``--ttft-slo-ms`` tags
 every request with a TTFT deadline so the report includes SLO goodput.
+
+``--temperature`` > 0 switches every request to stochastic decode
+(optionally bounded by ``--top-k`` / ``--top-p``); request i samples with
+seed ``--sample-seed + i``, so a rerun — or the same workload routed to
+different replicas — reproduces every stream bit-for-bit.
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -25,7 +31,12 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.mimd.router import POLICIES
 from repro.models import init_params
-from repro.serving import ClusterFrontend, Request, ServingEngine
+from repro.serving import (
+    ClusterFrontend,
+    Request,
+    SamplingParams,
+    ServingEngine,
+)
 
 
 def _build_engine(cfg, params, args):
@@ -82,6 +93,15 @@ def main():
                     help="per-request TTFT deadline; 0 = untracked")
     ap.add_argument("--tpot-slo-ms", type=float, default=0.0,
                     help="per-request mean TPOT bound; 0 = untracked")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="decode sampling temperature; 0 = greedy argmax")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="sample from the k largest logits; 0 = no cut")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass; 1 = no cut")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed+i "
+                         "(streams reproduce across runs and replicas)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -90,6 +110,10 @@ def main():
         cfg = cfg.reduced()
     if cfg.is_encoder:
         raise SystemExit("encoder-only arch: no autoregressive serving")
+    if args.temperature <= 0 and (args.top_k > 0 or args.top_p < 1.0):
+        print("warning: --top-k/--top-p have no effect with "
+              "--temperature 0 (greedy decode); pass --temperature > 0 "
+              "to sample", file=sys.stderr)
 
     rng = np.random.default_rng(args.seed)
     params = init_params(cfg, jax.random.key(args.seed))
@@ -122,6 +146,9 @@ def main():
             arrival_time=float(arrivals[i]),
             ttft_slo_s=args.ttft_slo_ms / 1e3,
             tpot_slo_s=args.tpot_slo_ms / 1e3,
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, top_p=args.top_p,
+                                    seed=args.sample_seed + i),
         )
         for i in range(args.requests)
     ]
@@ -155,6 +182,10 @@ def main():
     if m.prefix_hits:
         print(f"prefix cache: {m.prefix_hits} hits, "
               f"{m.prefix_hit_tokens} prompt tokens skipped")
+    if m.sampled_requests:
+        print(f"sampled decode: {m.sampled_requests} requests "
+              f"(T={args.temperature} top_k={args.top_k} "
+              f"top_p={args.top_p}, seeds {args.sample_seed}+rid)")
     print(f"latency p50={np.percentile(lats,50)*1e3:.0f}ms "
           f"p99={np.percentile(lats,99)*1e3:.0f}ms  "
           f"mean_jct={np.mean(lats)*1e3:.0f}ms  "

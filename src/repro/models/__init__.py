@@ -1,3 +1,4 @@
+from repro.models.layers import process_logits, sample_tokens
 from repro.models.model import (
     block_program,
     cache_specs,
@@ -22,4 +23,6 @@ __all__ = [
     "paged_ok",
     "param_count_tree",
     "param_specs",
+    "process_logits",
+    "sample_tokens",
 ]

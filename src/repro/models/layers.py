@@ -417,3 +417,139 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):
     out = jnp.einsum("bcgqw,bwcd->bqcgd", probs.astype(q.dtype), v,
                      preferred_element_type=F32)
     return out.astype(q.dtype).reshape(b, sq, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Logit processor — per-slot stochastic decode (temperature / top-k / top-p)
+# ---------------------------------------------------------------------------
+
+
+def _float_bits_descending(x):
+    """Order-isomorphic uint32 image of f32: bigger float <=> bigger
+    unsigned int (sign bit flipped for positives, all bits inverted for
+    negatives; +0.0 canonicalizes -0.0 first)."""
+    bits = jax.lax.bitcast_convert_type(x + 0.0, jnp.uint32)
+    return jnp.where(bits >> 31 == 0, bits | jnp.uint32(0x80000000), ~bits)
+
+
+def _radix_threshold(weights, mapped, target):
+    """Per row, the maximal representable value t (as a mapped uint32)
+    with ``sum(weights where mapped >= t) >= target``: 32 rounds of
+    MSB-first bit building over the float-bit image — an exact order
+    statistic in O(32 V) vector work, no sort (XLA's CPU sort is ~15x
+    slower and this is the decode hot path). ``weights`` of 1 recover
+    "count >= k" (the k-th largest); softmax probs recover the nucleus
+    boundary (smallest probability the top-p mass still needs)."""
+
+    def body(b, t):
+        cand = t | jax.lax.shift_left(jnp.uint32(1), jnp.uint32(31 - b))
+        acc = jnp.sum(jnp.where(mapped >= cand[:, None], weights, 0.0),
+                      axis=-1)
+        return jnp.where(acc >= target, cand, t)
+
+    t0 = jnp.zeros((weights.shape[0],), jnp.uint32)
+    return jax.lax.fori_loop(0, 32, body, t0)
+
+
+def _restricted_probs(x, top_k, top_p):
+    """The shared restriction recipe, both cuts as thresholds over ONE
+    LOGIT-bit image: the k-th largest logit by a count radix, then the
+    nucleus boundary by a mass radix — the maximal logit value whose
+    restricted tail still carries ``top_p`` of the restricted mass
+    (entries outside the top-k carry zero weight, so candidates below
+    the k-th threshold see no mass). Cutting in logit space matters:
+    float32 softmax collapses near-tied logits to bit-equal
+    probabilities, so a probability-space cut could not separate them.
+    Returns (keep mask, softmax weights with 0 outside the mask — the
+    restricted distribution up to one shared normalizer).
+    ``process_logits`` and the ``sample_tokens`` hot path both call
+    this, so their masks are identical by construction."""
+    v = x.shape[1]
+    b = x.shape[0]
+    mapped = _float_bits_descending(x)
+    no_thresh = jnp.zeros((b,), jnp.uint32)  # mapped >= 0: keeps all
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, v), v).astype(F32)
+    # a batch with no top-k (or no top-p) rows skips that 32-round radix
+    # at runtime — temperature-only sampling pays for neither loop — while
+    # staying inside the same trace (lax.cond, not a retrace)
+    kth = jax.lax.cond(
+        jnp.all(top_k <= 0), lambda _: no_thresh,
+        lambda _: _radix_threshold(jnp.ones_like(x), mapped, k), None)
+    keep = mapped >= kth[:, None]
+    w = jnp.where(keep, jax.nn.softmax(x, axis=-1), 0.0)
+    pth = jax.lax.cond(
+        jnp.all(top_p >= 1.0), lambda _: no_thresh,
+        lambda _: _radix_threshold(w, mapped, jnp.clip(top_p, 1e-30, 1.0)
+                                   * jnp.sum(w, axis=-1)), None)
+    keep &= (mapped >= pth[:, None]) | (top_p >= 1.0)[:, None]
+    return keep, jnp.where(keep, w, 0.0)
+
+
+def process_logits(logits, temperature, top_k, top_p):
+    """Per-row logit processor: temperature scale, then top-k and top-p
+    (nucleus) restriction. logits (B,V); temperature (B,) > 0; top_k (B,)
+    int32 (0 = no top-k cut); top_p (B,) (>= 1 = no top-p cut). Every
+    parameter is a traced per-row array, so one trace serves any mix of
+    restrictions in the batch. Removed entries come back -inf; each row
+    keeps at least its argmax (top-k clamps to >= 1, the nucleus boundary
+    never exceeds the largest probability).
+
+    Both cuts are value thresholds found by radix select over float bits
+    (same algorithm as the fused Pallas op in ``kernels/topk_sample.py``;
+    the sort-based oracle is ``kernels/ref.py``): entries tied with the
+    k-th largest logit / the nucleus-boundary probability all survive,
+    and the thresholds are exact bit patterns — no epsilon, so every
+    engine configuration computes the identical mask."""
+    x = logits.astype(F32) / jnp.maximum(temperature, 1e-6)[:, None]
+    keep, _ = _restricted_probs(x, top_k, top_p)
+    return jnp.where(keep, x, -jnp.inf)
+
+
+def sample_tokens(logits, samp, pos):
+    """Engine-facing masked composition: greedy rows take pure argmax,
+    stochastic rows draw one token from the temperature-scaled,
+    top-k/top-p-restricted softmax — ONE trace for any greedy/stochastic
+    mix (every parameter is a per-slot traced array). Semantics twin of
+    ``process_logits`` + a categorical draw (and of the fused Pallas op
+    ``repro.kernels.ops.topk_sample``), but built for the decode hot
+    path: the kept set is computed by the exact ``process_logits``
+    recipe (top-k radix over LOGIT bits — a prob-space cut would merge
+    near-tied logits that float32 softmax collapses to bit-equal
+    probabilities — then the nucleus radix over the renormalized
+    restricted probabilities), and the draw is inverse-CDF — ONE uniform
+    per row against the cumulative masked distribution, instead of a
+    vocab-wide Gumbel field (the per-slot threefry work was the single
+    biggest cost of the stochastic tick).
+
+    logits (B,V); pos (B,) absolute position of the token being drawn;
+    ``samp`` leaves (all (B,...)): greedy bool, temperature f32, top_k
+    i32, top_p f32, key uint32 (B,2) per-slot PRNG key material. The
+    uniform is keyed by ``fold_in(key, pos)`` — a pure function of (seed,
+    position), never of slot index, batch composition, or tick count —
+    which is what makes seeded streams bit-reproducible across restarts,
+    slot assignments, and cluster replicas. An all-greedy batch skips the
+    whole branch at runtime (lax.cond), so deterministic serving pays
+    nothing per tick."""
+    last = logits.astype(F32)
+    greedy_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+
+    def draw(_):
+        x = last / jnp.maximum(samp["temperature"], 1e-6)[:, None]
+        _, pk = _restricted_probs(x, samp["top_k"], samp["top_p"])
+
+        def row_u(key, pp):
+            return jax.random.uniform(jax.random.fold_in(key, pp), (), F32)
+
+        u = jax.vmap(row_u)(samp["key"], pos.astype(jnp.int32))
+        c = jnp.cumsum(pk, axis=-1)
+        total = c[:, -1]
+        # u * total can round UP to total (leaving no CDF entry strictly
+        # above the threshold -> argmax of all-False would emit token 0);
+        # cap at the largest float below total — bias bounded by one ulp,
+        # not a truncated tail of the distribution
+        thresh = jnp.minimum(u * total, jnp.nextafter(total, 0.0))
+        stoch = jnp.argmax(c > thresh[:, None], axis=-1).astype(jnp.int32)
+        return jnp.where(samp["greedy"], greedy_tok, stoch)
+
+    return jax.lax.cond(jnp.all(samp["greedy"]),
+                        lambda _: greedy_tok, draw, None)

@@ -30,6 +30,13 @@ invariants — all-or-nothing page reservation, single-trace probes,
 bit-identical token streams — hold unchanged under the cluster. A retired
 replica keeps being stepped until it drains empty; it just stops
 receiving routes.
+
+Per-request ``SamplingParams`` ride the ``Request`` across the frontend
+untouched, and a stochastic stream is a pure function of (seed, token
+position) — never of the replica, slot, or batch the router lands it in —
+so seeded sampled streams are bit-identical under every routing policy,
+autoscale event, and replica count (tested:
+``test_cluster_sampled_streams_stable_under_routing``).
 """
 from __future__ import annotations
 

@@ -24,7 +24,14 @@ The steady-state decode loop is zero-copy and zero-recompile:
     finished prompts' full pages stay in a radix ``PrefixIndex``; a new
     request aliases the longest cached prefix (refcounted pages, zero
     prefill compute for the hit) and prefills only its suffix from a
-    nonzero offset, with copy-on-write for a partially-matched tail page.
+    nonzero offset, with copy-on-write for a partially-matched tail page;
+  * device-resident sampling — per-request ``SamplingParams``
+    (temperature / top-k / top-p / seed; greedy is the degenerate
+    default) live in a per-slot device state next to the token carry:
+    greedy and stochastic slots compose by masking inside the SAME
+    decode trace and the SAME fused scan window (no per-config retrace),
+    and noise is keyed by (seed, absolute position) so seeded streams
+    are bit-identical across restarts, slot assignments, and replicas.
 
 All steps are pure jit functions; the executor is the only stateful part.
 """
@@ -56,6 +63,7 @@ from repro.models import (
     paged_ok,
 )
 from repro.models.blocks import KV_CACHE_BLOCKS
+from repro.models.layers import sample_tokens
 from repro.models.model import block_program
 from repro.serving.paging import (
     OutOfPagesError,
@@ -63,7 +71,7 @@ from repro.serving.paging import (
     PrefixHit,
     PrefixIndex,
 )
-from repro.serving.request import Request, ServeMetrics
+from repro.serving.request import Request, SamplingParams, ServeMetrics
 
 
 # ---------------------------------------------------------------------------
@@ -262,32 +270,94 @@ def serve_step(cfg, params, cache, batch):
     return nxt, logits[:, -1], new_cache
 
 
-def decode_tick(cfg, params, cache, tokens):
+def init_sampling_state(slots: int) -> dict:
+    """Per-slot device-resident sampling state: the greedy mask, the logit-
+    processor parameters, and each slot's PRNG key material (raw uint32
+    pairs, scatterable like any other carry leaf). Defaults are all-greedy,
+    so a fresh engine's decode pays no sampling work."""
+    return {
+        "greedy": jnp.ones((slots,), jnp.bool_),
+        "temperature": jnp.ones((slots,), jnp.float32),
+        "top_k": jnp.zeros((slots,), jnp.int32),
+        "top_p": jnp.ones((slots,), jnp.float32),
+        "key": jnp.zeros((slots, 2), jnp.uint32),
+    }
+
+
+_GREEDY_KEY = np.zeros((2,), np.uint32)
+
+
+def sampling_row(sp: Optional[SamplingParams]) -> dict:
+    """Host-side one-slot update for ``init_sampling_state`` leaves. Every
+    value is passed traced, so one ``sampling_set`` trace covers every
+    request configuration (no per-config retrace). Greedy rows skip the
+    PRNG key init — their lane never draws."""
+    sp = sp or SamplingParams()
+    greedy = sp.greedy
+    return {
+        "greedy": np.bool_(greedy),
+        "temperature": np.float32(1.0 if greedy
+                                  else max(sp.temperature, 1e-6)),
+        "top_k": np.int32(0 if greedy else sp.top_k),
+        "top_p": np.float32(1.0 if greedy else sp.top_p),
+        "key": (_GREEDY_KEY if greedy
+                else np.asarray(jax.random.PRNGKey(sp.seed), np.uint32)),
+    }
+
+
+def sampling_set(samp, slot, row):
+    """Scatter one slot's sampling params into the per-slot state. ``slot``
+    and every ``row`` value may be traced — one trace covers every slot
+    index and parameter setting."""
+    out = {}
+    for name, leaf in samp.items():
+        val = jnp.asarray(row[name], leaf.dtype)
+        out[name] = jax.lax.dynamic_update_slice(
+            leaf, val[None] if leaf.ndim == 1 else val[None, :],
+            (slot,) + (0,) * (leaf.ndim - 1))
+    return out
+
+
+def decode_tick(cfg, params, cache, tokens, samp=None):
     """The engine's steady-state step: ``tokens`` (B,) is the device-resident
     last-token carry; (m)rope positions are built on device from the cache's
-    ``pos`` leaf — no host round-trip. Returns (next_tokens (B,), new_cache).
-    Jitted with the cache donated: the KV pytree updates in place."""
+    ``pos`` leaf — no host round-trip. ``samp`` (optional) is the per-slot
+    sampling state: greedy slots take argmax, stochastic slots draw from the
+    processed distribution with noise keyed by (seed, absolute position) —
+    masked composition, so ONE trace serves any mix. Returns
+    (next_tokens (B,), new_cache). Jitted with the cache donated: the KV
+    pytree updates in place."""
     batch = {"tokens": tokens[:, None]}
     if cfg.rope_variant == "mrope":
         b = tokens.shape[0]
         batch["positions"] = jnp.broadcast_to(
             cache["pos"][None, :, None], (3, b, 1))
     logits, new_cache = decode_step(cfg, params, cache, batch)
-    nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    last = logits[:, -1]
+    if samp is None:
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    else:
+        # the token being drawn lands at absolute position new_pos - 1 +
+        # 1 == the post-step pos: the same fold key the prefill paths use
+        # for the first token (pos = prompt_len), advanced per tick
+        nxt = sample_tokens(last, samp, new_cache["pos"])
     return nxt, new_cache
 
 
-def decode_scan_step(cfg, params, cache, tokens, *, n: int):
+def decode_scan_step(cfg, params, cache, tokens, samp=None, *, n: int):
     """``n`` fused decode ticks as one jitted ``lax.scan``: one dispatch and
     one host sync per ``n`` tokens instead of per token. The engine uses
     this whenever nothing interrupts the window (no pending admissions, no
     prefill chunks, every active request has >= n tokens to go), falling
-    back to single ticks at scheduling boundaries. Returns
+    back to single ticks at scheduling boundaries. ``samp`` is scan-
+    invariant (slot membership is fixed across the window; per-tick noise
+    comes from the advancing cache ``pos``), so stochastic slots survive
+    multi-tick fusion with the SAME single trace. Returns
     (final_tokens (B,), token_history (n, B), new_cache)."""
 
     def body(carry, _):
         toks, c = carry
-        nxt, c = decode_tick(cfg, params, c, toks)
+        nxt, c = decode_tick(cfg, params, c, toks, samp)
         return (nxt, c), nxt
 
     (toks, cache), hist = jax.lax.scan(body, (tokens, cache), None, length=n)
@@ -401,8 +471,11 @@ class _PrefillJob:
     next_off: int = 0
     # first-token logits come from the chunk containing position
     # true_len-1, which is NOT always the last chunk (the padded buffer
-    # is quantum-aligned; trailing chunks can be pure pad) — stash it
+    # is quantum-aligned; trailing chunks can be pure pad) — stash both
+    # the greedy token and the logits (a sampled request draws its first
+    # token from these at activation)
     tok: Optional[jnp.ndarray] = None
+    logits: Optional[jnp.ndarray] = None
 
 
 @dataclass
@@ -534,6 +607,12 @@ class ServingEngine:
         # activation; see _HitAdmission)
         self._hit_pending: Dict[int, _HitAdmission] = {}
         self._tokens = jnp.zeros((slots,), jnp.int32)
+        # per-slot sampling state rides next to the token carry: scattered
+        # at activation, reset to greedy on release (so a vacated slot's
+        # garbage lane never re-enters the stochastic branch); the host
+        # mirror of the greedy flags makes release a no-op for greedy slots
+        self._samp = init_sampling_state(slots)
+        self._samp_greedy_h: List[bool] = [True] * slots
         self.active: List[Optional[Request]] = [None] * slots
         self.decoding: List[bool] = [False] * slots
         self._unsynced: List[jnp.ndarray] = []  # per-tick (B,) token arrays
@@ -550,13 +629,13 @@ class ServingEngine:
         self.decode_traces = 0
         donate_cache = (1,) if donate else ()
 
-        def _probed_decode(params, cache, tokens):
+        def _probed_decode(params, cache, tokens, samp):
             self.decode_traces += 1
-            return decode_tick(cfg, params, cache, tokens)
+            return decode_tick(cfg, params, cache, tokens, samp)
 
-        def _probed_scan(params, cache, tokens):
+        def _probed_scan(params, cache, tokens, samp):
             self.decode_traces += 1
-            return decode_scan_step(cfg, params, cache, tokens,
+            return decode_scan_step(cfg, params, cache, tokens, samp,
                                     n=self.sync_every)
 
         def _probed_bucketed(params, batch, true_len):
@@ -603,6 +682,12 @@ class ServingEngine:
         self._table_append = jax.jit(page_table_append, donate_argnums=donate0)
         self._release = jax.jit(slot_release, donate_argnums=donate0)
         self._set_token = jax.jit(_token_set)
+        # sampling: one scatter trace for every (slot, params) setting; one
+        # B=1 sampler trace for every sampled request's FIRST token (the
+        # decode ticks sample in-trace — see decode_tick)
+        self._samp_set = jax.jit(sampling_set, donate_argnums=donate0)
+        self._sample_first = jax.jit(
+            lambda logits, samp1, pos: sample_tokens(logits, samp1, pos))
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request, now: float):
@@ -785,7 +870,7 @@ class ServingEngine:
             if self.cfg.rope_variant == "mrope":
                 batch["positions"] = jnp.broadcast_to(
                     jnp.arange(padded_len, dtype=jnp.int32), (3, 1, padded_len))
-            tok, _, cache1 = self._prefill_paged(
+            tok, last, cache1 = self._prefill_paged(
                 self.params, batch, np.int32(plen))
         elif bucket is not None:
             padded = np.zeros((1, bucket), np.int32)
@@ -794,16 +879,16 @@ class ServingEngine:
             if self.cfg.rope_variant == "mrope":
                 batch["positions"] = jnp.broadcast_to(
                     jnp.arange(bucket, dtype=jnp.int32), (3, 1, bucket))
-            tok, _, cache1 = self._prefill_bucketed(
+            tok, last, cache1 = self._prefill_bucketed(
                 self.params, batch, np.int32(plen))
         else:
             batch = {"tokens": jnp.asarray(req.prompt[None, :], jnp.int32)}
             if self.cfg.rope_variant == "mrope":
                 batch["positions"] = jnp.broadcast_to(
                     jnp.arange(plen, dtype=jnp.int32), (3, 1, plen))
-            logits, cache1 = self._prefill_exact(self.params, batch)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._activate(req, slot, tok, cache1, now)
+            last, cache1 = self._prefill_exact(self.params, batch)
+            tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        self._activate(req, slot, tok, last, cache1, now)
 
     def _admit_prefix(self, req: Request, slot: int, hit: PrefixHit,
                       now: float):
@@ -851,9 +936,9 @@ class ServingEngine:
             self.active[slot] = req  # reserve (decoding stays False)
             return
         toks = jnp.asarray(padded[:, start:end])
-        tok, _, cache1 = self._prefill_suffix(self.params, cache1, toks,
-                                              np.int32(plen))
-        self._activate(req, slot, tok, cache1, now)
+        tok, last, cache1 = self._prefill_suffix(self.params, cache1, toks,
+                                                 np.int32(plen))
+        self._activate(req, slot, tok, last, cache1, now)
 
     def _start_chunked(self, req: Request, slot: int):
         padded_len = self._prefill_len(req)
@@ -884,7 +969,7 @@ class ServingEngine:
             job = self._jobs[0]
             chunk_toks = jax.lax.slice_in_dim(
                 job.tokens, job.next_off, job.next_off + self.chunk, axis=1)
-            tok, _, job.cache = self._prefill_chunk(
+            tok, last, job.cache = self._prefill_chunk(
                 self.params, job.cache, chunk_toks, job.true_len)
             prev_off = job.next_off
             job.next_off += self.chunk
@@ -893,21 +978,44 @@ class ServingEngine:
                 # true_len-1; later chunks (pure quantum padding) return
                 # a clamped garbage index — keep the real one
                 job.tok = tok
+                job.logits = last
             self.metrics.prefill_chunks += 1
             if job.next_off >= job.tokens.shape[1]:
                 self._jobs.popleft()
                 self._activate(job.req, job.slot,
                                tok if job.tok is None else job.tok,
+                               last if job.logits is None else job.logits,
                                job.cache, now)
 
-    def _activate(self, req: Request, slot: int, tok, cache1, now: float):
+    def _activate(self, req: Request, slot: int, tok, last, cache1,
+                  now: float):
         """Install a prefilled request into its slot: scatter the B=1 cache
         (donated, in-place), set the device token carry, record the first
         token. Forces a token flush first so the deferred-sync window only
         ever spans a fixed slot membership. Paged mode scatters into the
         slot's reserved pool pages and writes its page-table row instead of
-        copying into a per-slot window."""
+        copying into a per-slot window.
+
+        ``last`` is the prompt's last-true-position logits (1, V): a
+        stochastic request draws its first token from them here, with the
+        same (seed, position=prompt_len) noise key every admission path —
+        full, bucketed, chunked, or prefix-hit suffix — would produce, so
+        a prompt's stream is independent of HOW it was prefilled. The
+        slot's sampling state is scattered before the first decode tick
+        can read it."""
         self._flush(now)
+        sp = req.sampling or SamplingParams()
+        if not (sp.greedy and self._samp_greedy_h[slot]):
+            # greedy request on an already-greedy lane: no row to build,
+            # no scatter — the default path stays key-init-free
+            row = sampling_row(sp)
+            self._samp = self._samp_set(self._samp, np.int32(slot), row)
+        self._samp_greedy_h[slot] = sp.greedy
+        if not sp.greedy:
+            self.metrics.sampled_requests += 1
+            samp1 = {k: jnp.asarray(v)[None] for k, v in row.items()}
+            tok = self._sample_first(last, samp1,
+                                     np.full((1,), req.prompt_len, np.int32))
         if self.paged:
             info = self._hit_pending.pop(slot, None)
             if info is not None:
@@ -981,7 +1089,7 @@ class ServingEngine:
             if self.paged:
                 self._ensure_headroom(self.sync_every)
             toks, hist, self.cache = self._decode_scan(
-                self.params, self.cache, self._tokens)
+                self.params, self.cache, self._tokens, self._samp)
             self._tokens = toks
             self.metrics.decode_ticks += self.sync_every
             self._advance_pos(self.sync_every)
@@ -989,7 +1097,8 @@ class ServingEngine:
             return self._take_finished()
         if self.paged:
             self._ensure_headroom(1)
-        nxt, self.cache = self._decode(self.params, self.cache, self._tokens)
+        nxt, self.cache = self._decode(self.params, self.cache, self._tokens,
+                                       self._samp)
         self._tokens = nxt
         self._unsynced.append(nxt)
         self.metrics.decode_ticks += 1
@@ -1059,6 +1168,13 @@ class ServingEngine:
         self.active[slot] = None
         self.decoding[slot] = False
         self._hit_pending.pop(slot, None)
+        if not bool(self._samp_greedy_h[slot]):
+            # reset the lane to greedy so an all-greedy batch's decode
+            # skips the sampling branch again (the lane's draws were
+            # already inert: a vacated slot's tokens go nowhere)
+            self._samp = self._samp_set(self._samp, np.int32(slot),
+                                        sampling_row(None))
+            self._samp_greedy_h[slot] = True
         if self.paged:
             self.cache = self._release(self.cache, np.int32(slot))
             self.allocator.free_slot(slot)  # decref: shared pages survive
@@ -1219,10 +1335,12 @@ def _padded_len(n: int, chunk: int) -> int:
 
 
 def generate(cfg, params, prompt: np.ndarray, max_new_tokens: int,
-             *, window: int = 512) -> List[int]:
+             *, window: int = 512,
+             sampling: Optional[SamplingParams] = None) -> List[int]:
     """Simple single-request generation helper (examples/quickstart)."""
     eng = ServingEngine(cfg, params, slots=1, window=window)
-    req = Request(rid=0, prompt=prompt, max_new_tokens=max_new_tokens)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=max_new_tokens,
+                  sampling=sampling or SamplingParams())
     assert eng.try_admit(req, now=0.0)
     t = 0.0
     while not req.done:

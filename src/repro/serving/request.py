@@ -13,6 +13,30 @@ from typing import List, Optional
 import numpy as np
 
 
+@dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decode sampling configuration (survey: widening the
+    workload mix a serving stack can host beyond deterministic decode).
+
+    Greedy argmax is the degenerate case ``temperature <= 0`` — the
+    default, so every existing caller keeps deterministic streams. A
+    stochastic request's token stream is a pure function of ``seed`` and
+    the absolute token position (the engine keys its PRNG noise by
+    ``fold_in(key(seed), position)``), so a fixed seed reproduces the
+    stream bit-for-bit across engine restarts, slot assignments, batch
+    compositions, and cluster replicas.
+    """
+
+    temperature: float = 0.0  # <= 0: greedy argmax (deterministic)
+    top_k: int = 0  # keep the k largest logits; 0 = no top-k cut
+    top_p: float = 1.0  # nucleus mass; >= 1 = no top-p cut
+    seed: int = 0  # PRNG stream identity (stable under routing)
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
 @dataclass
 class Request:
     rid: int
@@ -37,6 +61,8 @@ class Request:
     # prompt tokens served from the shared-prefix KV cache (their prefill
     # was skipped: the pages were aliased from the PrefixIndex); 0 = cold
     prefix_hit_tokens: int = 0
+    # decode sampling configuration; the default is greedy argmax
+    sampling: SamplingParams = field(default_factory=SamplingParams)
 
     @property
     def prompt_len(self) -> int:
@@ -102,6 +128,8 @@ class ServeMetrics:
     # --- shared-prefix KV cache ---
     prefix_hits: int = 0  # admissions that aliased cached prefix pages
     prefix_hit_tokens: int = 0  # prompt tokens whose prefill was skipped
+    # --- stochastic decode ---
+    sampled_requests: int = 0  # admissions with non-greedy SamplingParams
     # --- SLO attainment (requests declaring ttft_slo_s / tpot_slo_s) ---
     slo_tracked: int = 0  # finished requests that declared any SLO
     slo_met: int = 0  # ...that met every declared SLO
@@ -167,6 +195,7 @@ class ServeMetrics:
         self.prefill_chunks += other.prefill_chunks
         self.prefix_hits += other.prefix_hits
         self.prefix_hit_tokens += other.prefix_hit_tokens
+        self.sampled_requests += other.sampled_requests
         self.slo_tracked += other.slo_tracked
         self.slo_met += other.slo_met
         self.ttft_slo_misses += other.ttft_slo_misses

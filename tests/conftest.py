@@ -10,6 +10,63 @@ import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config
 
+# ---------------------------------------------------------------------------
+# CI config-matrix knob (ISSUE 5 satellite): the same tier-1 suite runs under
+# {paged, rolling, prefix_cache} x {greedy, sampled} engine configurations so
+# a regression confined to one configuration cannot hide behind the default.
+# Tests that build engines through ``make_engine`` / requests through
+# ``make_request`` pick the matrix cell up from the environment; explicit
+# kwargs always win, so tests pinning a specific configuration (e.g. the
+# paged-vs-rolling A/Bs) are unaffected by the knob.
+# ---------------------------------------------------------------------------
+
+ENGINE_CACHE = os.environ.get("REPRO_ENGINE_CACHE", "")  # ""|paged|rolling|prefix_cache
+ENGINE_SAMPLING = os.environ.get("REPRO_ENGINE_SAMPLING", "")  # ""|greedy|sampled
+
+
+def engine_overrides(cfg) -> dict:
+    """ServingEngine kwargs for the active matrix cell. Non-pageable archs
+    keep their rolling fallback in every cell (paged/prefix demands would
+    be construction errors, not coverage)."""
+    from repro.models import paged_ok
+
+    kw = {}
+    if ENGINE_CACHE == "rolling":
+        kw["paged"] = False
+    elif ENGINE_CACHE == "paged" and paged_ok(cfg):
+        kw["paged"] = True
+    elif ENGINE_CACHE == "prefix_cache" and paged_ok(cfg):
+        kw["prefix_cache"] = True
+    return kw
+
+
+def matrix_sampling(rid: int = 0):
+    """Per-request SamplingParams for the active matrix cell. The sampled
+    cell exercises the stochastic decode path with a request-stable seed,
+    so every determinism assertion (same config => identical streams)
+    still holds."""
+    from repro.serving import SamplingParams
+
+    if ENGINE_SAMPLING == "sampled":
+        return SamplingParams(temperature=0.7, top_k=20, top_p=0.95,
+                              seed=1000 + rid)
+    return SamplingParams()
+
+
+def make_engine(cfg, params, **kw):
+    """ServingEngine honoring the matrix cell; explicit kwargs win."""
+    from repro.serving import ServingEngine
+
+    return ServingEngine(cfg, params, **{**engine_overrides(cfg), **kw})
+
+
+def make_request(rid, prompt, max_new_tokens, **kw):
+    """Request honoring the matrix cell's sampling; explicit kwargs win."""
+    from repro.serving import Request
+
+    kw.setdefault("sampling", matrix_sampling(rid))
+    return Request(rid, prompt, max_new_tokens, **kw)
+
 
 def make_batch(cfg, b, s, *, labels=False, key=0):
     """Batch matching cfg's modality at (b, s)."""

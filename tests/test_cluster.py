@@ -10,7 +10,13 @@ from repro.configs import get_config
 from repro.core.costmodel import estimate_backlog_s
 from repro.core.misd.interference import InterferencePredictor
 from repro.models import init_params
-from repro.serving import ClusterFrontend, Request, ServeMetrics, ServingEngine
+from repro.serving import ClusterFrontend, ServeMetrics, ServingEngine
+
+# Requests ride the CI config matrix (rid-stable sampled seeds under
+# REPRO_ENGINE_SAMPLING=sampled; conftest.make_request shares Request's
+# positional signature), so routing/SLO/stream-identity invariants are
+# exercised under stochastic decode as well.
+from conftest import make_request as Request
 
 
 @pytest.fixture(scope="module")
@@ -456,3 +462,41 @@ def test_cluster_closed_loop_observes(pair):
     util = fe.utilization()
     assert set(util) == {i.name for i in fe.instances}
     assert all(0.0 <= u <= 1.0 for u in util.values())
+
+
+def test_cluster_sampled_streams_stable_under_routing(pair):
+    """ISSUE 5 acceptance: a seeded sampled request produces the SAME
+    token stream no matter which replica the policy lands it on — noise
+    is keyed by (seed, position), never by placement. Streams also match
+    single-engine serving, and per-replica compile counts stay at the
+    single-trace budget with mixed greedy/sampled traffic."""
+    from repro.serving import SamplingParams
+
+    cfg, params, engines = pair
+
+    def mk_reqs():
+        return [Request(i, _prompt(10 + 3 * i, seed=i), max_new_tokens=5,
+                        arrival_time=0.0,
+                        sampling=(SamplingParams(temperature=0.9, top_k=30,
+                                                 top_p=0.95, seed=40 + i)
+                                  if i % 2 else SamplingParams()))
+                for i in range(6)]
+
+    _reset(engines[0])
+    ref = mk_reqs()
+    _drive(engines[0], ref)
+    ref_out = {r.rid: r.output for r in ref}
+    placements = set()
+    for policy in ("round-robin", "p2c", "predicted"):
+        for eng in engines:
+            _reset(eng)
+        fe = ClusterFrontend(engines, policy=policy, seed=1)
+        reqs = mk_reqs()
+        _drive(fe, reqs)
+        assert {r.rid: r.output for r in reqs} == ref_out, policy
+        placements.add(tuple(r.routed_to for r in reqs))
+        for eng in engines:
+            assert eng.decode_traces <= 2, policy
+    assert len(placements) > 1  # the policies really did place differently
+    m = fe.merged_metrics()
+    assert m.sampled_requests == 3  # cluster rollup counts sampled traffic

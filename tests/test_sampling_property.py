@@ -1,0 +1,95 @@
+"""Property-based sampling guarantees (hypothesis; optional dep).
+
+Greedy is the exact degenerate case of the sampling subsystem:
+temperature -> 0 converges to the greedy stream and top-k = 1 equals it
+outright, across paged and rolling caches and any noise seed."""
+import jax
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't fail
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import SamplingParams, ServingEngine
+from test_sampling import _streams
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**20), lseed=st.integers(0, 2**20),
+       temp=st.floats(1e-7, 1e-5), v=st.integers(16, 300))
+def test_temperature_to_zero_converges_to_greedy(seed, lseed, temp, v):
+    """As temperature -> 0 the scaled logit gaps dwarf any Gumbel draw:
+    the sampled token equals argmax for every seed."""
+    import jax.numpy as jnp
+
+    from repro.models.layers import sample_tokens
+
+    rng = np.random.default_rng(lseed)
+    logits = jnp.asarray(rng.standard_normal((2, v)), jnp.float32)
+    samp = {
+        "greedy": jnp.zeros((2,), jnp.bool_),
+        "temperature": jnp.full((2,), temp, jnp.float32),
+        "top_k": jnp.zeros((2,), jnp.int32),
+        "top_p": jnp.ones((2,), jnp.float32),
+        "key": jnp.stack([jnp.asarray(jax.random.PRNGKey(seed + i))
+                          for i in range(2)]).astype(jnp.uint32),
+    }
+    pos = jnp.asarray([11, 29], jnp.int32)
+    tok = sample_tokens(logits, samp, pos)
+    np.testing.assert_array_equal(np.asarray(tok),
+                                  np.asarray(jnp.argmax(logits, -1)))
+
+
+@pytest.fixture(scope="module")
+def cache_pair(granite):
+    """One warm engine per cache layout (reused via reset across
+    hypothesis examples — jit caches stay hot) plus the memoized greedy
+    reference streams."""
+    cfg, params = granite
+    engines = {
+        "paged": ServingEngine(cfg, params, slots=2, window=64,
+                               sync_every=4, paged=True),
+        "rolling": ServingEngine(cfg, params, slots=2, window=64,
+                                 sync_every=4, paged=False),
+    }
+    greedy = {}
+    for name, eng in engines.items():
+        greedy[name], _ = _streams(cfg, params, [0, 1], engine=eng)
+    return engines, greedy
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_topk_one_equals_greedy_stream(granite, cache_pair, seed):
+    """top-k = 1 restricts every draw to the argmax: the whole ENGINE
+    stream equals the greedy stream exactly, across paged and rolling
+    caches and any noise seed."""
+    cfg, params = granite
+    engines, greedy = cache_pair
+    sp = SamplingParams(temperature=1.3, top_k=1, seed=seed)
+    for name, eng in engines.items():
+        sampled, _ = _streams(cfg, params, [0, 1], sampling=sp, engine=eng)
+        assert sampled == greedy[name]
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**20))
+def test_tiny_temperature_engine_stream_converges(granite, cache_pair, seed):
+    """Engine-level convergence: temperature 1e-6 reproduces the greedy
+    stream across paged and rolling caches."""
+    cfg, params = granite
+    engines, greedy = cache_pair
+    sp = SamplingParams(temperature=1e-6, seed=seed)
+    for name, eng in engines.items():
+        sampled, _ = _streams(cfg, params, [0, 1], sampling=sp, engine=eng)
+        assert sampled == greedy[name]

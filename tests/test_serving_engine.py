@@ -1,13 +1,18 @@
 """Zero-copy continuous-batching engine: donation round-trips, bucketed
-prefill, chunked prefill, deferred host sync, and admission isolation."""
+prefill, chunked prefill, deferred host sync, and admission isolation.
+
+Engine-level tests build engines/requests through the conftest
+``make_engine`` / ``make_request`` helpers, so the CI config matrix
+({paged, rolling, prefix_cache} x {greedy, sampled}) replays them under
+every configuration; raw-step tests (exact logits math) stay pinned."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import make_engine, make_request
 
 from repro.configs import get_config
 from repro.models import forward, init_cache, init_params
-from repro.serving import Request, ServingEngine
 from repro.serving.engine import (
     bucketed_prefill_step,
     cache_insert,
@@ -30,7 +35,7 @@ def _prompt(n, seed=0):
 
 
 def _run(cfg, params, reqs, **kw):
-    eng = ServingEngine(cfg, params, **kw)
+    eng = make_engine(cfg, params, **kw)
     for r in reqs:
         assert eng.try_admit(r, 0.0)
     t = 0.0
@@ -116,14 +121,14 @@ def test_bucketed_prefill_single_trace(granite):
     """Acceptance probe: every prompt length inside one power-of-two bucket
     shares exactly one trace of the prefill step."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=4, window=128, chunk_prefill=0)
+    eng = make_engine(cfg, params, slots=4, window=128, chunk_prefill=0)
     for i, plen in enumerate((9, 12, 15, 16)):
-        assert eng.try_admit(Request(i, _prompt(plen, seed=i), 4), 0.0)
+        assert eng.try_admit(make_request(i, _prompt(plen, seed=i), 4), 0.0)
     assert eng.prefill_traces == 1
     # a new bucket costs exactly one more trace
-    eng2 = ServingEngine(cfg, params, slots=4, window=128, chunk_prefill=0)
+    eng2 = make_engine(cfg, params, slots=4, window=128, chunk_prefill=0)
     for i, plen in enumerate((9, 17)):
-        assert eng2.try_admit(Request(i, _prompt(plen, seed=i), 4), 0.0)
+        assert eng2.try_admit(make_request(i, _prompt(plen, seed=i), 4), 0.0)
     assert eng2.prefill_traces == 2
 
 
@@ -132,7 +137,7 @@ def test_bucketed_engine_outputs_match_exact(granite):
     cfg, params = granite
     out = {}
     for bucketed in (True, False):
-        req = Request(0, _prompt(13), max_new_tokens=6)
+        req = make_request(0, _prompt(13), max_new_tokens=6)
         _run(cfg, params, [req], slots=2, window=64,
              bucket_prompts=bucketed, chunk_prefill=0)
         out[bucketed] = req.output
@@ -178,7 +183,7 @@ def test_chunked_engine_outputs_match_single_shot(granite):
     cfg, params = granite
     out = {}
     for chunk in (16, 0):
-        req = Request(0, _prompt(40), max_new_tokens=6)
+        req = make_request(0, _prompt(40), max_new_tokens=6)
         _run(cfg, params, [req], slots=2, window=128, chunk_prefill=chunk)
         out[chunk] = req.output
     assert out[16] == out[0]
@@ -190,10 +195,10 @@ def test_admission_during_decode_no_interference(granite):
     cfg, params = granite
 
     def run_pair(with_admission):
-        eng = ServingEngine(cfg, params, slots=3, window=128,
-                            chunk_prefill=16, sync_every=4)
-        a = Request(0, _prompt(12, seed=1), max_new_tokens=24)
-        b = Request(1, _prompt(9, seed=2), max_new_tokens=24)
+        eng = make_engine(cfg, params, slots=3, window=128,
+                          chunk_prefill=16, sync_every=4)
+        a = make_request(0, _prompt(12, seed=1), max_new_tokens=24)
+        b = make_request(1, _prompt(9, seed=2), max_new_tokens=24)
         assert eng.try_admit(a, 0.0) and eng.try_admit(b, 0.0)
         t = 0.0
         for _ in range(4):  # both slots decoding
@@ -201,7 +206,7 @@ def test_admission_during_decode_no_interference(granite):
             eng.step(t)
         late = None
         if with_admission:
-            late = Request(2, _prompt(48, seed=3), max_new_tokens=4)
+            late = make_request(2, _prompt(48, seed=3), max_new_tokens=4)
             assert eng.try_admit(late, t)
             assert eng.n_prefilling == 1  # chunked: decode keeps running
         while not (a.done and b.done and (late is None or late.done)):
@@ -226,7 +231,7 @@ def test_deferred_sync_matches_per_tick(granite):
     cfg, params = granite
     outs, engines = {}, {}
     for sync in (1, 8):
-        req = Request(0, _prompt(12), max_new_tokens=20)
+        req = make_request(0, _prompt(12), max_new_tokens=20)
         engines[sync] = _run(cfg, params, [req], slots=1, window=64,
                              sync_every=sync)
         outs[sync] = req.output
@@ -239,7 +244,7 @@ def test_mrope_decode_on_device(granite):
     device (no per-tick host round-trip) and still decodes correctly."""
     cfg = get_config("qwen2-vl-7b").reduced()
     params = init_params(cfg, jax.random.key(0))
-    req = Request(0, _prompt(10), max_new_tokens=8)
+    req = make_request(0, _prompt(10), max_new_tokens=8)
     eng = _run(cfg, params, [req], slots=2, window=64, sync_every=4)
     assert len(req.output) == 8
     assert eng.metrics.host_syncs <= eng.metrics.decode_ticks / 2
@@ -256,7 +261,7 @@ def test_adaptive_slot_plan(granite):
 
     cfg, params = granite
     plan = plan_admission(cfg, context=128, sla_s=0.05)
-    eng = ServingEngine(cfg, params, slots=0, window=128, sla_s=0.05)
+    eng = make_engine(cfg, params, slots=0, window=128, sla_s=0.05)
     assert eng.slots == plan.slots > 0
     assert eng.admission.deadline_s == plan.flush_deadline_s > 0
 
@@ -275,14 +280,14 @@ def test_chunk_beyond_min_kv_ring_falls_back_to_single_shot(granite):
                               block_pattern=("dense", "local_attn"),
                               local_window=16)
     params = init_params(cfg, jax.random.key(0))
-    eng = ServingEngine(cfg, params, slots=2, window=128, chunk_prefill=8)
+    eng = make_engine(cfg, params, slots=2, window=128, chunk_prefill=8)
     assert not eng.paged and eng._min_window == 16  # ring < window
     # padded(40, 8) = 40 > 16: chunking would wrap the local ring
-    unsafe = Request(0, _prompt(40, seed=1), max_new_tokens=4)
+    unsafe = make_request(0, _prompt(40, seed=1), max_new_tokens=4)
     assert eng.try_admit(unsafe, 0.0)
     assert eng.n_prefilling == 0  # fell back: no chunk job was queued
     # padded(12, 8) = 16 <= 16: chunked path stays on
-    safe = Request(1, _prompt(12, seed=2), max_new_tokens=4)
+    safe = make_request(1, _prompt(12, seed=2), max_new_tokens=4)
     assert eng.try_admit(safe, 0.0)
     assert eng.n_prefilling == 1
     t = 0.0
@@ -290,8 +295,12 @@ def test_chunk_beyond_min_kv_ring_falls_back_to_single_shot(granite):
         t += 1.0
         eng.step(t)
     # both streams match a no-chunking engine exactly
-    ref_u = Request(2, _prompt(40, seed=1), max_new_tokens=4)
-    ref_s = Request(3, _prompt(12, seed=2), max_new_tokens=4)
+    # same sampling identity as the chunked originals: the comparison is
+    # chunking on/off, everything else equal
+    ref_u = make_request(2, _prompt(40, seed=1), max_new_tokens=4,
+                         sampling=unsafe.sampling)
+    ref_s = make_request(3, _prompt(12, seed=2), max_new_tokens=4,
+                         sampling=safe.sampling)
     _run(cfg, params, [ref_u, ref_s], slots=2, window=128, chunk_prefill=0)
     assert unsafe.output == ref_u.output
     assert safe.output == ref_s.output
@@ -302,9 +311,9 @@ def test_recurrent_arch_falls_back_to_exact_prefill(granite):
     and chunking but still serve correctly."""
     cfg = get_config("recurrentgemma-9b").reduced()
     params = init_params(cfg, jax.random.key(0))
-    eng = ServingEngine(cfg, params, slots=2, window=64)
+    eng = make_engine(cfg, params, slots=2, window=64)
     assert not eng.bucket_prompts and eng.chunk == 0
-    req = Request(0, _prompt(12), max_new_tokens=5)
+    req = make_request(0, _prompt(12), max_new_tokens=5)
     assert eng.try_admit(req, 0.0)
     t = 0.0
     while not req.done:
