@@ -3,7 +3,7 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test lint bench bench-smoke bench-cluster bench-cluster-smoke \
 	bench-prefix bench-prefix-smoke bench-sampling bench-sampling-smoke \
-	serve-bench micro
+	bench-chaos bench-chaos-smoke serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -47,6 +47,17 @@ bench-sampling:
 # engine restart; fails on stream divergence or decode-trace growth
 bench-sampling-smoke:
 	$(PY) benchmarks/sampling_bench.py --smoke
+
+# chaos harness: kill/hang/slow one of four replicas mid-workload plus a
+# preemption-churn round -> BENCH_chaos.json
+bench-chaos:
+	$(PY) benchmarks/chaos_bench.py
+
+# CI gate: tiny chaos run failing on lost requests, non-bit-identical
+# failed-over streams, survivor page/refcount leaks, unbounded retries,
+# goodput retention < 0.70, or a watchdog mis-verdict (slow declared dead)
+bench-chaos-smoke:
+	$(PY) benchmarks/chaos_bench.py --smoke
 
 # wall-clock microbenchmarks of the jitted steps
 micro:

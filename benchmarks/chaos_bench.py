@@ -1,0 +1,423 @@
+"""Chaos benchmark: the fault-tolerance layer under injected failures.
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py [--replicas 4]
+        [--requests 48] [--rate 0.8] [--out BENCH_chaos.json]
+    PYTHONPATH=src python benchmarks/chaos_bench.py --smoke   # CI gate
+
+A Poisson, fully-SAMPLED workload (every stream is stochastic — the
+strong replay claim) runs through a 4-replica cluster frontend four
+times on the same engines (reset between rounds, jit caches warm):
+
+  baseline — failure-free reference: outputs + goodput + TTFT tail;
+  kill     — one replica crashes mid-workload (``EngineFailure`` on its
+             next step); the frontend harvests its outstanding ledger
+             and replays on survivors;
+  hang     — one replica wedges (accepts work, makes no progress); only
+             the staleness watchdog can catch it, after
+             ``health_timeout_s`` of frozen progress signature;
+  slow     — one replica drops to 1/4 speed but keeps making progress:
+             it must NOT be declared failed (the closed-loop residual
+             absorbs it), and nothing is lost or replayed.
+
+Plus a single-engine ``preempt-churn`` round: a tight-slot prefix-cache
+engine where late high-priority arrivals evict decoding victims
+(generated prefix cached → suffix-only restore), asserting zero page
+leaks and bit-identical victim streams.
+
+Time is VIRTUAL (one cost-model decode tick per cluster step — same
+determinism trick as cluster_bench), so the fault schedule, detection
+latency, and recovery cost are exactly reproducible from the seed.
+
+Gates (--smoke, wired into CI):
+  * zero lost requests: every request resolves FINISHED with a full
+    token budget, across kill AND hang AND slow;
+  * bit-identical: every stream — including failed-over ones — matches
+    the failure-free baseline token-for-token;
+  * zero page leaks on survivors (pages_in_use == 0, total_refs == 0
+    after clearing the prefix cache);
+  * bounded retries: no request exceeds its retry budget, and total
+    retries stay under the in-flight ceiling of the dead replica;
+  * goodput retention: chaos-round token throughput >= 0.70x baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from bench_noise import noise_report, pin_host_threads
+
+pin_host_threads()  # must precede the first jax import
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.costmodel import estimate_decode, suggest_health_timeout_s
+from repro.models import init_params
+from repro.serving import (
+    ClusterFrontend,
+    FaultInjector,
+    FaultyEngine,
+    Request,
+    RequestState,
+    SamplingParams,
+    ServingEngine,
+)
+
+
+# ---------------------------------------------------------------------------
+# workload
+# ---------------------------------------------------------------------------
+
+
+def make_workload(n: int, *, rate: float, vocab: int, seed: int,
+                  tick_s: float = 1.0, priority_frac: float = 0.0):
+    """Poisson arrivals, every request SAMPLED (seed 7000+rid): the replay
+    gates then prove the strong claim — stochastic streams survive
+    preemption and failover bit-identically. ``priority_frac`` > 0 marks
+    a late fraction high-priority with tight deadlines (preemption
+    bait for the churn round)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n)) * tick_s
+    reqs = []
+    for i in range(n):
+        hot = priority_frac > 0 and rng.random() < priority_frac and i >= n // 3
+        plen = int(rng.integers(8, 33))
+        budget = int(rng.integers(8, 17))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=budget,
+            arrival_time=float(arrivals[i]),
+            ttft_slo_s=(4.0 if hot else 24.0) * tick_s,
+            priority=1 if hot else 0,
+            sampling=SamplingParams(temperature=0.7, top_k=20, top_p=0.95,
+                                    seed=7000 + i),
+        ))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# virtual-time drive with a fault schedule
+# ---------------------------------------------------------------------------
+
+
+def drive(server, reqs, *, injector=None, dt: float = 1.0,
+          max_steps: int = 200_000):
+    """Open-loop replay in virtual time: fire due fault events, submit
+    arrivals as the clock passes them, step once per dt, and collect
+    EVERY resolved request (finished, failed, aborted) — the zero-lost
+    ledger. Returns (resolved_by_rid, makespan)."""
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    resolved = {}
+    i, now = 0, 0.0
+    for _ in range(max_steps):
+        if injector is not None:
+            injector.tick(now)
+        while i < len(pending) and pending[i].arrival_time <= now:
+            server.submit(pending[i], now)
+            i += 1
+        for req in server.step(now):
+            resolved[req.rid] = req
+        if len(resolved) >= len(reqs):
+            break
+        now += dt
+    else:
+        raise RuntimeError(
+            f"workload did not drain in {max_steps} steps "
+            f"({len(resolved)}/{len(reqs)} resolved — requests LOST)")
+    for req in server.drain(now):
+        resolved[req.rid] = req
+    return resolved, now
+
+
+# ---------------------------------------------------------------------------
+# rounds
+# ---------------------------------------------------------------------------
+
+
+def build_proxies(cfg, params, *, replicas, slots, window, max_seq,
+                  sync_every, tick_s):
+    return [FaultyEngine(ServingEngine(cfg, params, slots=slots,
+                                       window=window, max_seq=max_seq,
+                                       sync_every=sync_every,
+                                       sla_s=4.0 * tick_s))
+            for _ in range(replicas)]
+
+
+def run_round(proxies, reqs, *, fault, victim, t_fault, seed, tick_s,
+              health_s, max_retries=3, slow_every=4):
+    """One chaos round on shared engines: reset, arm the schedule, drive."""
+    for p in proxies:
+        p.inject("recover")
+        p.engine.reset()
+    cluster = ClusterFrontend(proxies, policy="predicted", seed=seed,
+                              health_timeout_s=health_s,
+                              max_retries=max_retries,
+                              retry_backoff_s=tick_s)
+    injector = None
+    if fault is not None:
+        name = cluster.instances[victim].name
+        injector = FaultInjector({name: proxies[victim]})
+        injector.schedule(t_fault, name, fault, slow_every=slow_every)
+    resolved, makespan = drive(cluster, reqs, injector=injector, dt=tick_s)
+    m = cluster.merged_metrics()
+    survivors = [inst.engine for inst in
+                 cluster.instances + cluster.draining + cluster.retired]
+    leaks = []
+    for eng in survivors:
+        if eng.paged:
+            eng.clear_prefix_cache()
+            leaks.append((eng.allocator.pages_in_use,
+                          eng.allocator.total_refs))
+    ttfts = np.asarray([r.ttft for r in reqs if r.ttft >= 0]) / tick_s
+    ticks = makespan / tick_s
+    # useful output only: tokens DELIVERED to clients per tick (work the
+    # dead replica generated and lost does not count toward goodput)
+    tokens_out = sum(len(r.output) for r in resolved.values())
+    return {
+        "fault": fault or "none",
+        "resolved": len(resolved),
+        "finished": sum(r.state is RequestState.FINISHED
+                        for r in resolved.values()),
+        "full_budget": sum(len(r.output) == r.max_new_tokens
+                           for r in resolved.values()),
+        "ttft_p50": float(np.percentile(ttfts, 50)) if len(ttfts) else -1.0,
+        "ttft_p99": float(np.percentile(ttfts, 99)) if len(ttfts) else -1.0,
+        "makespan_ticks": ticks,
+        "throughput_tpt": tokens_out / ticks if ticks else 0.0,
+        "goodput": m.goodput,
+        "retried": m.retried,
+        "failed_over": m.failed_over,
+        "max_request_retries": max((r.retries for r in resolved.values()),
+                                   default=0),
+        "preempted": m.preempted,
+        "preempt_restores": m.preempt_restores,
+        "failed_replicas": [i.name for i in cluster.failed],
+        "survivor_leaks": leaks,  # (pages_in_use, total_refs) per survivor
+        "outputs": {r.rid: list(map(int, r.output))
+                    for r in resolved.values()},
+    }
+
+
+def run_churn(cfg, params, *, requests, rate, seed, tick_s, slots=2,
+              window=128, max_seq=192, sync_every=4):
+    """Single-engine preemption churn: tight slots + late high-priority
+    arrivals evict decoding victims; the restore path (cached generated
+    prefix -> suffix-only prefill) must reproduce every stream."""
+    reqs = make_workload(requests, rate=rate, vocab=cfg.vocab_size,
+                         seed=seed + 1, tick_s=tick_s, priority_frac=0.5)
+
+    def build(preemption):
+        return ServingEngine(cfg, params, slots=slots, window=window,
+                             max_seq=max_seq, sync_every=sync_every,
+                             sla_s=4.0 * tick_s, prefix_cache=True,
+                             preemption=preemption, edf_backlog=True)
+
+    ref_reqs = copy.deepcopy(reqs)
+    ref, _ = drive(build(False), ref_reqs, dt=tick_s)
+    eng = build(True)
+    resolved, makespan = drive(eng, reqs, dt=tick_s)
+    eng.clear_prefix_cache()
+    return {
+        "resolved": len(resolved),
+        "finished": sum(r.state is RequestState.FINISHED
+                        for r in resolved.values()),
+        "preempted": eng.metrics.preempted,
+        "preempt_restores": eng.metrics.preempt_restores,
+        "bit_identical_to_unpreempted": all(
+            list(resolved[rid].output) == list(ref[rid].output)
+            for rid in ref),
+        "pages_in_use": eng.allocator.pages_in_use,
+        "total_refs": eng.allocator.total_refs,
+        "makespan_ticks": makespan / tick_s,
+    }
+
+
+# ---------------------------------------------------------------------------
+# full bench
+# ---------------------------------------------------------------------------
+
+
+def run(report, *, arch="granite-8b", replicas=4, slots=2, window=128,
+        max_seq=192, sync_every=4, requests=48, rate=0.8, seed=0,
+        rounds=("kill", "hang", "slow"), churn=True, out=""):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(seed))
+    tick_s = estimate_decode(cfg, slots, window).latency_s
+    health_s = suggest_health_timeout_s(cfg, slots=slots, context=window)
+    proxies = build_proxies(cfg, params, replicas=replicas, slots=slots,
+                            window=window, max_seq=max_seq,
+                            sync_every=sync_every, tick_s=tick_s)
+
+    def workload():
+        return make_workload(requests, rate=rate, vocab=cfg.vocab_size,
+                             seed=seed, tick_s=tick_s)
+
+    # the fault lands mid-workload: at the median arrival
+    arrivals = sorted(r.arrival_time for r in workload())
+    t_fault = arrivals[len(arrivals) // 2]
+
+    results = {"arch": arch, "replicas": replicas, "slots": slots,
+               "window": window, "max_seq": max_seq,
+               "sync_every": sync_every, "requests": requests,
+               "rate": rate, "seed": seed, "tick_s": tick_s,
+               "health_timeout_ticks": health_s / tick_s,
+               "t_fault_ticks": t_fault / tick_s,
+               **noise_report(),
+               "note": "virtual-time drive; latencies in cost-model decode "
+                       "ticks; every request stochastic (seeded sampling) "
+                       "so replay gates cover the strong claim",
+               "rounds": {}}
+
+    base = run_round(proxies, workload(), fault=None, victim=0,
+                     t_fault=0.0, seed=seed, tick_s=tick_s,
+                     health_s=health_s)
+    baseline_outputs = base.pop("outputs")
+    results["rounds"]["baseline"] = base
+    report("chaos_baseline_ttft_p99", round(base["ttft_p99"], 2),
+           f"tpt={base['throughput_tpt']:.2f} goodput={base['goodput']:.3f}")
+
+    for fault in rounds:
+        r = run_round(proxies, workload(), fault=fault, victim=0,
+                      t_fault=t_fault, seed=seed, tick_s=tick_s,
+                      health_s=health_s)
+        r["bit_identical_to_baseline"] = r.pop("outputs") == baseline_outputs
+        r["goodput_retention"] = (r["throughput_tpt"] / base["throughput_tpt"]
+                                  if base["throughput_tpt"] else 0.0)
+        r["ttft_p99_inflation"] = (r["ttft_p99"] / base["ttft_p99"]
+                                   if base["ttft_p99"] else 1.0)
+        results["rounds"][fault] = r
+        report(f"chaos_{fault}_goodput_retention",
+               round(r["goodput_retention"], 3),
+               f"ttft_p99 x{r['ttft_p99_inflation']:.2f} "
+               f"retried={r['retried']} failed_over={r['failed_over']} "
+               f"bit_identical={r['bit_identical_to_baseline']}")
+
+    if churn:
+        c = run_churn(cfg, params, requests=max(12, requests // 2),
+                      rate=rate, seed=seed, tick_s=tick_s, slots=slots,
+                      window=window, max_seq=max_seq,
+                      sync_every=sync_every)
+        results["preempt_churn"] = c
+        report("chaos_churn_preemptions", c["preempted"],
+               f"restores={c['preempt_restores']} "
+               f"bit_identical={c['bit_identical_to_unpreempted']} "
+               f"leaks={c['pages_in_use']}p/{c['total_refs']}r")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        report("chaos_bench_json", out, "full results")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# CI smoke gate
+# ---------------------------------------------------------------------------
+
+
+def smoke(*, arch="granite-8b") -> int:
+    """Seeded kill-one-of-4 scenario (+hang/slow/churn): fail on any lost
+    request, page leak, unbounded retry, diverged stream, or goodput
+    collapse."""
+    res = run(lambda *a: None, arch=arch, replicas=4, slots=2, window=128,
+              max_seq=192, sync_every=4, requests=24, rate=0.8, seed=0)
+    failures = []
+
+    def check(name, ok, got):
+        print(f"smoke:{name}: {'ok' if ok else 'FAIL'} ({got})")
+        if not ok:
+            failures.append(name)
+
+    n = res["requests"]
+    for fault in ("kill", "hang", "slow"):
+        r = res["rounds"][fault]
+        check(f"{fault}_zero_lost",
+              r["resolved"] == n and r["finished"] == n
+              and r["full_budget"] == n,
+              f"resolved={r['resolved']} finished={r['finished']} "
+              f"full_budget={r['full_budget']} of {n}")
+        check(f"{fault}_bit_identical", r["bit_identical_to_baseline"],
+              "streams vs failure-free baseline")
+        check(f"{fault}_no_survivor_leaks",
+              all(l == [0, 0] or l == (0, 0) for l in r["survivor_leaks"]),
+              f"(pages_in_use, total_refs)={r['survivor_leaks']}")
+        check(f"{fault}_bounded_retries",
+              r["max_request_retries"] <= 3 and r["retried"] <= n,
+              f"max={r['max_request_retries']} total={r['retried']}")
+        check(f"{fault}_goodput_retention",
+              r["goodput_retention"] >= 0.70,
+              f"{r['goodput_retention']:.3f} (gate 0.70)")
+    check("kill_replica_failed",
+          res["rounds"]["kill"]["failed_replicas"] != [],
+          res["rounds"]["kill"]["failed_replicas"])
+    check("hang_watchdog_tripped",
+          res["rounds"]["hang"]["failed_replicas"] != [],
+          res["rounds"]["hang"]["failed_replicas"])
+    check("slow_not_declared_dead",
+          res["rounds"]["slow"]["failed_replicas"] == []
+          and res["rounds"]["slow"]["failed_over"] == 0,
+          f"failed={res['rounds']['slow']['failed_replicas']} "
+          f"failed_over={res['rounds']['slow']['failed_over']}")
+    c = res["preempt_churn"]
+    check("churn_preempts", c["preempted"] > 0 and c["preempt_restores"] > 0,
+          f"preempted={c['preempted']} restores={c['preempt_restores']}")
+    check("churn_bit_identical", c["bit_identical_to_unpreempted"],
+          "victim streams vs unpreempted run")
+    check("churn_zero_leaks",
+          c["pages_in_use"] == 0 and c["total_refs"] == 0,
+          f"pages_in_use={c['pages_in_use']} total_refs={c['total_refs']}")
+    check("churn_all_finish", c["finished"] == c["resolved"],
+          f"{c['finished']}/{c['resolved']}")
+    if failures:
+        print(f"smoke: FAILED ({', '.join(failures)})")
+        return 1
+    print("smoke: chaos gates green — zero lost, bit-identical replay, "
+          "zero leaks, bounded retries")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--window", type=int, default=128)
+    ap.add_argument("--max-seq", type=int, default=192)
+    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--rate", type=float, default=0.8,
+                    help="Poisson arrivals per virtual second")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: seeded kill/hang/slow/churn scenario")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_chaos.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(arch=args.arch))
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}")
+
+    print("name,value,derived")
+    res = run(report, arch=args.arch, replicas=args.replicas,
+              slots=args.slots, window=args.window, max_seq=args.max_seq,
+              sync_every=args.sync_every, requests=args.requests,
+              rate=args.rate, seed=args.seed, out=args.out)
+    k = res["rounds"]["kill"]
+    print(f"# kill 1/{args.replicas}: goodput retention "
+          f"{k['goodput_retention']:.3f}, ttft p99 "
+          f"x{k['ttft_p99_inflation']:.2f}, {k['retried']} retries, "
+          f"bit_identical={k['bit_identical_to_baseline']}")
+
+
+if __name__ == "__main__":
+    main()

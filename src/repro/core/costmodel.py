@@ -192,6 +192,21 @@ def estimate_backlog_s(cfg, *, queued_prefill_tokens: int,
     return s
 
 
+def suggest_health_timeout_s(cfg, *, slots: int, context: int,
+                             chip: Chip = TPU_V5E, n_chips: int = 1,
+                             ticks: int = 8) -> float:
+    """Health-watchdog staleness budget for a replica of this shape: the
+    cost-model time for ``ticks`` full-batch decode ticks. A healthy
+    replica holding work advances its progress signature at least once
+    per decode tick, so ``ticks`` missed ticks in a row is decisive
+    evidence of a wedge, while transient stalls (a slow host at 2-4x)
+    stay under the bar. Used by ``ClusterFrontend(health_timeout_s=...)``
+    and ``launch/serve.py``."""
+    per_tick = estimate_decode(cfg, max(1, slots), context, chip=chip,
+                               n_chips=n_chips).latency_s
+    return max(1, ticks) * per_tick
+
+
 def estimate(cfg, shape, *, chip: Chip = TPU_V5E, n_chips: int = 1) -> WorkEstimate:
     """Estimate for an assigned ShapeConfig."""
     if shape.kind == "train":

@@ -42,6 +42,7 @@ class Instance:
     device: Device
     queue_s: float = 0.0  # predicted backlog seconds
     draining: bool = False  # deregistered: finish in-flight, take no routes
+    failed: bool = False  # declared dead (crash/hang): work fails over
     order: int = -1  # registration sequence (deterministic tie-break key)
 
     def load(self) -> float:

@@ -29,6 +29,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.costmodel import suggest_health_timeout_s
 from repro.core.mimd.router import POLICIES
 from repro.models import init_params
 from repro.serving import (
@@ -48,7 +49,8 @@ def _build_engine(cfg, params, args):
                          page_size=args.page_size,
                          max_seq=args.max_seq or None,
                          pool_pages=args.pool_pages or None,
-                         prefix_cache=args.prefix_cache)
+                         prefix_cache=args.prefix_cache,
+                         preemption=args.preemption)
 
 
 def main():
@@ -102,6 +104,17 @@ def main():
     ap.add_argument("--sample-seed", type=int, default=0,
                     help="base sampling seed; request i uses seed+i "
                          "(streams reproduce across runs and replicas)")
+    ap.add_argument("--request-timeout-s", type=float, default=0.0,
+                    help="per-request JCT deadline; overdue requests are "
+                         "aborted and their slot/pages freed (0 = none)")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="per-request failover budget at the cluster "
+                         "frontend (with --replicas > 1)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="allow evicting a decoding slot for a more "
+                         "urgent arrival; the victim's generated prefix "
+                         "is cached and its stream restored bit-identical "
+                         "(paged engines only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -131,10 +144,19 @@ def main():
     if args.replicas > 1:
         engines = [eng] + [_build_engine(cfg, params, args)
                            for _ in range(args.replicas - 1)]
+        # cost-model ticks model the target chip, not this host: floor the
+        # wall-clock watchdog so a CPU run never trips on modeled speed
+        health_s = max(1.0, suggest_health_timeout_s(cfg, slots=eng.slots,
+                                                     context=eng.window,
+                                                     n_chips=eng.n_chips))
         cluster = ClusterFrontend(engines, policy=args.route_policy,
-                                  seed=args.seed)
+                                  seed=args.seed,
+                                  health_timeout_s=health_s,
+                                  max_retries=args.max_retries)
         print(f"cluster frontend: {args.replicas} replicas, "
-              f"policy={args.route_policy}, EDF frontend queue")
+              f"policy={args.route_policy}, EDF frontend queue, "
+              f"health_timeout={health_s*1e3:.0f}ms "
+              f"max_retries={args.max_retries}")
 
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
     reqs = [
@@ -146,6 +168,7 @@ def main():
             arrival_time=float(arrivals[i]),
             ttft_slo_s=args.ttft_slo_ms / 1e3,
             tpot_slo_s=args.tpot_slo_ms / 1e3,
+            timeout_s=args.request_timeout_s,
             sampling=SamplingParams(temperature=args.temperature,
                                     top_k=args.top_k, top_p=args.top_p,
                                     seed=args.sample_seed + i),
@@ -196,6 +219,13 @@ def main():
               f"({m.slo_met}/{m.slo_tracked} in SLO; "
               f"ttft_misses={m.ttft_slo_misses} "
               f"tpot_misses={m.tpot_slo_misses})")
+    lifecycle = (m.rejected, m.cancelled, m.timed_out, m.shed, m.failed,
+                 m.preempted, m.retried, m.failed_over)
+    if any(lifecycle):
+        print(f"lifecycle: rejected={m.rejected} cancelled={m.cancelled} "
+              f"timed_out={m.timed_out} shed={m.shed} failed={m.failed} "
+              f"preempted={m.preempted} (restored={m.preempt_restores}) "
+              f"retried={m.retried} failed_over={m.failed_over}")
     if cluster is not None:
         for inst in cluster.instances:
             print(f"  {inst.name}: routed={inst.routed} "

@@ -37,6 +37,16 @@ position) — never of the replica, slot, or batch the router lands it in —
 so seeded sampled streams are bit-identical under every routing policy,
 autoscale event, and replica count (tested:
 ``test_cluster_sampled_streams_stable_under_routing``).
+
+Fault tolerance (see serving/README.md "Failure semantics"): the frontend
+keeps its own per-replica ledger of dispatched-but-unresolved requests.
+A replica that raises ``EngineFailure`` (crash) or whose progress
+signature freezes past ``health_timeout_s`` while holding work (hang) is
+deregistered, and every request on its ledger is replayed on survivors —
+``reset_for_retry`` + position-keyed seeded sampling make the replayed
+streams bit-identical — under a per-request retry budget with
+exponential backoff. Typed rejections (unknown model, oversize prompt)
+resolve as FAILED outcomes instead of exceptions.
 """
 from __future__ import annotations
 
@@ -49,7 +59,8 @@ from repro.core.mimd.router import Instance, ServiceRouter
 from repro.core.misd.interference import InterferencePredictor
 from repro.core.misd.scheduler import Device, Job
 from repro.serving.engine import ServingEngine
-from repro.serving.request import Request, ServeMetrics
+from repro.serving.faults import EngineFailure
+from repro.serving.request import Request, RequestState, ServeMetrics
 
 DEFAULT_POOL = ""  # model tag for homogeneous (single-model) clusters
 
@@ -78,6 +89,10 @@ class EngineInstance(Instance):
         self.routed = 0
         self.ticks = 0
         self.busy_ticks = 0
+        # health-watchdog state: last virtual time the engine's progress
+        # signature changed while it had work (None until first observed)
+        self.last_progress_t = 0.0
+        self._progress_sig = None
 
     def sync(self):
         self.queue_s = self.engine.load_report().backlog_s
@@ -185,15 +200,33 @@ class ClusterFrontend:
                  engines: Union[Sequence[ServingEngine],
                                 Mapping[str, Sequence[ServingEngine]]],
                  *, policy: str = "predicted", seed: int = 0,
-                 edf: bool = True):
+                 edf: bool = True, health_timeout_s: float = 0.0,
+                 max_retries: int = 3, retry_backoff_s: float = 0.0):
         self.router = ServiceRouter(policy=policy, seed=seed)
         self.edf = edf
+        # fault tolerance: a replica whose progress signature freezes for
+        # longer than health_timeout_s while it holds work is declared
+        # failed (0 disables the watchdog — crashes are still caught via
+        # EngineFailure); its requests fail over to survivors with at most
+        # max_retries re-submissions per request, exponentially backed off
+        # from retry_backoff_s (0 = immediate requeue).
+        self.health_timeout_s = health_timeout_s
+        self.max_retries = max_retries
+        self.retry_backoff_s = retry_backoff_s
         self.instances: List[EngineInstance] = []
         self.draining: List[EngineInstance] = []
         self.retired: List[EngineInstance] = []  # drained + reaped
+        self.failed: List[EngineInstance] = []  # declared dead
         self._queue: List = []  # heap of (deadline_key, seq, Request)
         self._seq = itertools.count()
         self._names = itertools.count()
+        # per-replica ledger of dispatched-but-unresolved requests: the
+        # frontend's own copy of what each replica owes it, harvested on
+        # failure (a dead machine's memory cannot be read back)
+        self._outstanding: Dict[str, Dict[int, Request]] = {}
+        self._held_retries: List = []  # heap of (release_t, seq, Request)
+        self._resolved: List[Request] = []  # frontend-resolved (no engine)
+        self.metrics = ServeMetrics()  # frontend-level counters
         if isinstance(engines, Mapping):
             for model, pool in engines.items():
                 for eng in pool:
@@ -218,13 +251,23 @@ class ClusterFrontend:
 
     def retire(self, inst_or_name) -> Optional[EngineInstance]:
         """Deregister a replica (autoscale shrink path): it stops receiving
-        routes NOW, keeps being stepped until its in-flight work drains,
+        routes NOW, its queued-but-unstarted backlog migrates back through
+        the frontend queue to be re-routed across survivors, and it keeps
+        being stepped until its in-flight (slot-resident) work drains,
         then drops out of the cluster. Returns the retiring instance."""
         inst = self.router.deregister(inst_or_name)
         if inst is None:
             return None
         self.instances.remove(inst)
         self.draining.append(inst)
+        # migrate unstarted work: the same requeue primitive failover
+        # uses, minus the retry accounting (nothing was lost — these
+        # requests never touched a slot on the retiree)
+        ledger = self._outstanding.get(inst.name, {})
+        for req in inst.engine.takeover_queue():
+            ledger.pop(req.rid, None)
+            req.routed_to = ""
+            self._enqueue(req)
         return inst
 
     def pool(self, model: str = DEFAULT_POOL) -> List[EngineInstance]:
@@ -235,17 +278,38 @@ class ClusterFrontend:
         return [i.engine for i in self.instances]
 
     # -- request path ------------------------------------------------------
-    def submit(self, req: Request, now: float):
+    def submit(self, req: Request, now: float) -> bool:
         """Enqueue a request at the frontend queue. Routing happens at the
         next ``step``: every request submitted inside one tick is dispatched
         in EDF order (earliest TTFT deadline routes first — and therefore
-        lands earliest in its engine's own queue), not arrival order."""
+        lands earliest in its engine's own queue), not arrival order.
+
+        An unroutable request (unknown model tag) is a typed REJECTION,
+        not an exception: it resolves as FAILED with a reason, counts in
+        the frontend's ``metrics.rejected``, and surfaces from the next
+        ``step`` — one bad request must never kill the frontend loop.
+        Returns True iff the request was accepted into the queue."""
         if req.model not in self.router.pools or not self.router.pools[req.model]:
-            raise ValueError(
-                f"request {req.rid}: no engine pool for model "
-                f"{req.model!r} (pools: {list(self.router.pools)})")
+            self._resolve(req, now, RequestState.FAILED,
+                          f"rejected: no engine pool for model "
+                          f"{req.model!r} (pools: {list(self.router.pools)})")
+            self.metrics.rejected += 1
+            return False
+        self._enqueue(req)
+        return True
+
+    def _enqueue(self, req: Request):
         key = req.ttft_deadline if self.edf else 0.0
         heapq.heappush(self._queue, (key, next(self._seq), req))
+
+    def _resolve(self, req: Request, now: float, state: RequestState,
+                 reason: str):
+        """Terminally resolve a request at the frontend (it never reaches —
+        or never returns from — an engine); surfaced by the next step."""
+        req.state = state
+        req.fail_reason = reason
+        req.finish_time = now
+        self._resolved.append(req)
 
     def _dispatch(self, now: float):
         """Drain the frontend queue in EDF order, routing each request to
@@ -255,11 +319,23 @@ class ClusterFrontend:
         held = []
         while self._queue:
             _, _, req = heapq.heappop(self._queue)
+            doomed = req.overdue(now)
+            if doomed is not None:
+                # cancelled / JCT-expired while still queued at the
+                # frontend: resolve here, never spend a route on it
+                if doomed is RequestState.CANCELLED:
+                    self.metrics.cancelled += 1
+                    self._resolve(req, now, doomed, "cancelled at frontend")
+                else:
+                    self.metrics.timed_out += 1
+                    self._resolve(req, now, doomed,
+                                  "deadline passed while queued at frontend")
+                continue
             if not self.router.pools.get(req.model):
-                # pool emptied (every replica retired) after this request
-                # was accepted: hold it at the frontend — it dispatches
-                # the moment add_engine repopulates the pool — rather than
-                # crashing the step and losing the request
+                # pool emptied (every replica retired or failed) after
+                # this request was accepted: hold it at the frontend — it
+                # dispatches the moment add_engine repopulates the pool —
+                # rather than crashing the step and losing the request
                 held.append(req)
                 continue
             job = self._job_for(req, now)
@@ -288,10 +364,22 @@ class ClusterFrontend:
             req._dispatch_t = now
             req.routed_to = inst.name
             inst.routed += 1
-            inst.engine.submit(req, now)
+            try:
+                accepted = inst.engine.submit(req, now)
+            except EngineFailure:
+                # the chosen replica died between routing decisions: fail
+                # it over and re-run this request through the (now
+                # smaller) pool — survivors pick it up this same tick
+                self._fail_instance(inst, now)
+                self._retry(req, now)
+                continue
+            if accepted is not False:
+                # ledger entry until the engine resolves it (engine-side
+                # typed rejections return False and self-report through
+                # the engine's own finished stream)
+                self._outstanding.setdefault(inst.name, {})[req.rid] = req
         for req in held:
-            key = req.ttft_deadline if self.edf else 0.0
-            heapq.heappush(self._queue, (key, next(self._seq), req))
+            self._enqueue(req)
 
     def _job_for(self, req: Request, now: float) -> Job:
         pool = self.router.pools[req.model]
@@ -311,20 +399,37 @@ class ClusterFrontend:
                    new_tokens=req.max_new_tokens, tokens=req.prompt)
 
     def step(self, now: float) -> List[Request]:
-        """One cluster tick: dispatch anything queued, step every replica
-        (live and draining), observe finished requests into each replica's
-        closed-loop corrector, and reap fully-drained retirees."""
+        """One cluster tick: release due retries, dispatch anything queued,
+        step every replica (live and draining) catching replica death,
+        watchdog wedged replicas, observe finished requests into each
+        replica's closed-loop corrector, and reap fully-drained retirees.
+        The returned list carries every request resolved this tick —
+        finished, rejected, aborted, or failed over to exhaustion."""
+        while self._held_retries and self._held_retries[0][0] <= now:
+            _, _, req = heapq.heappop(self._held_retries)
+            self._enqueue(req)
         self._dispatch(now)
         finished: List[Request] = []
         for inst in list(self.instances) + list(self.draining):
             eng = inst.engine
             inst.ticks += 1
-            if (eng.n_decoding or eng.n_prefilling or eng.backlog
-                    or eng.admission.pending):
+            busy = bool(eng.n_decoding or eng.n_prefilling or eng.backlog
+                        or eng.admission.pending)
+            if busy:
                 inst.busy_ticks += 1
-            for req in eng.step(now):
+            try:
+                out = eng.step(now)
+            except EngineFailure:
+                self._fail_instance(inst, now)
+                continue
+            ledger = self._outstanding.get(inst.name, {})
+            for req in out:
+                ledger.pop(req.rid, None)
                 self._observe(inst, req)
                 finished.append(req)
+            if self._wedged(inst, now, busy):
+                self._fail_instance(inst, now)
+                continue
             inst.sync()
         reaped = [i for i in self.draining if i.engine.idle]
         if reaped:
@@ -333,11 +438,76 @@ class ClusterFrontend:
             self.retired.extend(reaped)
             self.draining = [i for i in self.draining
                              if not i.engine.idle]
+        if self._resolved:
+            finished.extend(self._resolved)
+            self._resolved = []
         return finished
+
+    # -- failure detection + failover --------------------------------------
+    def _wedged(self, inst: EngineInstance, now: float, busy: bool) -> bool:
+        """Staleness watchdog over the replica's progress signature: a
+        replica that HOLDS work but whose observable counters have not
+        moved for health_timeout_s is wedged (hung host, livelocked
+        runtime) — indistinguishable from slow until the timeout, exactly
+        as in production. Idle replicas are healthy by definition."""
+        if self.health_timeout_s <= 0:
+            return False
+        eng, m = inst.engine, inst.engine.metrics
+        sig = (m.decode_ticks, m.prefill_chunks, m.completed, m.rejected,
+               m.cancelled, m.timed_out, m.shed, m.failed, m.preempted,
+               eng.n_decoding, eng.n_prefilling, len(eng.backlog),
+               len(eng.admission.pending))
+        if sig != inst._progress_sig or not busy:
+            inst._progress_sig = sig
+            inst.last_progress_t = now
+            return False
+        return now - inst.last_progress_t > self.health_timeout_s
+
+    def _fail_instance(self, inst: EngineInstance, now: float):
+        """Declare a replica dead: deregister it from routing, and fail
+        over every request the ledger says it still owes — its in-flight
+        AND queued work — to the survivors. The dead engine is never
+        touched again (a crashed machine's memory is unreadable); requests
+        are replayed from the frontend's own copies."""
+        self.router.deregister(inst)
+        if inst in self.instances:
+            self.instances.remove(inst)
+        if inst in self.draining:
+            self.draining.remove(inst)
+        inst.failed = True
+        self.failed.append(inst)
+        for req in list(self._outstanding.pop(inst.name, {}).values()):
+            self.metrics.failed_over += 1
+            self._retry(req, now)
+
+    def _retry(self, req: Request, now: float):
+        """Re-submit a harvested request to the survivors, within its
+        retry budget. ``reset_for_retry`` rewinds the request to its
+        original submission state (un-folding any preemption fold), so
+        the survivor replays it from scratch — and seeded sampling keyed
+        on (seed, absolute position) makes the replayed stream
+        bit-identical to the one the dead replica was producing."""
+        if req.retries >= self.max_retries:
+            self.metrics.failed += 1
+            self._resolve(req, now, RequestState.FAILED,
+                          f"retry budget exhausted ({self.max_retries})")
+            return
+        req.retries += 1
+        self.metrics.retried += 1
+        req.reset_for_retry()
+        if self.retry_backoff_s > 0:
+            delay = min(self.retry_backoff_s * (2 ** (req.retries - 1)),
+                        8 * self.retry_backoff_s)
+            heapq.heappush(self._held_retries,
+                           (now + delay, next(self._seq), req))
+        else:
+            self._enqueue(req)
 
     def _observe(self, inst: EngineInstance, req: Request):
         """Close the loop: predicted vs observed wait (TTFT) and completion
         latency, measured from dispatch, feed the instance's residual."""
+        if req.state is not RequestState.FINISHED:
+            return  # aborted/rejected requests carry no latency signal
         t0 = getattr(req, "_dispatch_t", None)
         if t0 is None:
             return
@@ -349,10 +519,15 @@ class ClusterFrontend:
                                            req.finish_time - t0)
 
     def drain(self, now: float) -> List[Request]:
-        """Flush every replica's deferred tokens (end-of-run bookkeeping)."""
-        out: List[Request] = []
+        """Flush every replica's deferred tokens (end-of-run bookkeeping),
+        plus any frontend-resolved requests not yet surfaced."""
+        out: List[Request] = list(self._resolved)
+        self._resolved = []
         for inst in self.instances + self.draining:
-            out.extend(inst.engine.drain(now))
+            ledger = self._outstanding.get(inst.name, {})
+            for req in inst.engine.drain(now):
+                ledger.pop(req.rid, None)
+                out.append(req)
         return out
 
     # -- autoscaling -------------------------------------------------------
@@ -377,18 +552,23 @@ class ClusterFrontend:
     # -- rollups -----------------------------------------------------------
     def merged_metrics(self) -> ServeMetrics:
         """Cluster-wide ServeMetrics: every replica's counters summed —
-        including replicas retired (and reaped) along the way."""
+        including replicas retired (reaped) or failed along the way —
+        plus the frontend's own lifecycle counters (rejections, retries,
+        failovers, frontend-queue aborts)."""
         m = ServeMetrics()
-        for inst in self.instances + self.draining + self.retired:
+        m.merge(self.metrics)
+        for inst in (self.instances + self.draining + self.retired
+                     + self.failed):
             m.merge(inst.engine.metrics)
         return m
 
     def utilization(self) -> Dict[str, float]:
         return {i.name: i.utilization
-                for i in self.instances + self.draining + self.retired}
+                for i in (self.instances + self.draining + self.retired
+                          + self.failed)}
 
     @property
     def idle(self) -> bool:
-        return (not self._queue
+        return (not self._queue and not self._held_retries
                 and all(i.engine.idle
                         for i in self.instances + self.draining))

@@ -65,13 +65,14 @@ from repro.models import (
 from repro.models.blocks import KV_CACHE_BLOCKS
 from repro.models.layers import sample_tokens
 from repro.models.model import block_program
-from repro.serving.paging import (
-    OutOfPagesError,
-    PageAllocator,
-    PrefixHit,
-    PrefixIndex,
+from repro.serving.paging import PageAllocator, PrefixHit, PrefixIndex
+from repro.serving.request import (
+    Request,
+    RequestRejected,
+    RequestState,
+    SamplingParams,
+    ServeMetrics,
 )
-from repro.serving.request import Request, SamplingParams, ServeMetrics
 
 
 # ---------------------------------------------------------------------------
@@ -451,6 +452,15 @@ class LoadReport:
     prefix_cached_tokens: int = 0
     prefix_hits: int = 0  # cumulative admissions served from the cache
     prefix_hit_tokens: int = 0  # cumulative prompt tokens skipped
+    # --- lifecycle / fault tolerance (cumulative ServeMetrics mirrors;
+    # the cluster watchdog also reads report freshness as the replica's
+    # health signal) ---
+    rejected: int = 0
+    cancelled: int = 0
+    timed_out: int = 0
+    shed: int = 0
+    failed: int = 0
+    preempted: int = 0
 
     @property
     def saturated(self) -> bool:
@@ -487,6 +497,39 @@ class _HitAdmission:
     scatter_pages: np.ndarray  # (max_pages,) trash at aliased positions
     table_pages: np.ndarray  # (max_pages,) the slot's full table row
     n_tabled: int  # owned pages written into the row (incl. decode tail)
+
+
+# ---------------------------------------------------------------------------
+# preemption victim policies (pluggable: name -> chooser)
+# ---------------------------------------------------------------------------
+
+
+def _urgency(req: Request):
+    """Total order on request urgency: higher priority beats any deadline,
+    then earlier TTFT deadline wins. Smaller tuple = more urgent."""
+    return (-req.priority, req.ttft_deadline)
+
+
+def _victim_latest_deadline(engine, eligible: List[int]) -> int:
+    """Latest-deadline-first: evict the slot whose request is least urgent
+    (ties: most remaining budget — it has paid the least per page)."""
+    return max(eligible,
+               key=lambda i: (_urgency(engine.active[i]),
+                              engine.active[i].remaining_tokens, i))
+
+
+def _victim_most_remaining(engine, eligible: List[int]) -> int:
+    """Most-remaining-first: evict the slot with the most budget left —
+    it frees decode capacity the longest (ties: latest deadline)."""
+    return max(eligible,
+               key=lambda i: (engine.active[i].remaining_tokens,
+                              _urgency(engine.active[i]), i))
+
+
+PREEMPT_POLICIES = {
+    "latest-deadline": _victim_latest_deadline,
+    "most-remaining": _victim_most_remaining,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -539,7 +582,10 @@ class ServingEngine:
                  kv_hbm_budget: Optional[float] = None,
                  expected_len: Optional[int] = None,
                  edf_backlog: bool = False,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False,
+                 preemption: bool = False,
+                 preempt_policy: str = "latest-deadline",
+                 shed_overdue: bool = False):
         self.cfg = cfg
         self.params = params
         self.n_chips = n_chips
@@ -589,6 +635,22 @@ class ServingEngine:
             raise ValueError(
                 f"{cfg.name}: prefix_cache requires the paged KV cache "
                 f"(rolling windows cannot alias another slot's KV)")
+        # --- fault tolerance / lifecycle knobs ---
+        if preemption and not self.paged:
+            raise ValueError(
+                f"{cfg.name}: preemption requires the paged KV cache (a "
+                f"victim's pages must be releasable mid-stream)")
+        if preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"unknown preempt_policy {preempt_policy!r} "
+                             f"(want one of {sorted(PREEMPT_POLICIES)})")
+        self.preemption = preemption
+        self.preempt_policy = preempt_policy
+        self._preempt_victim_fn = PREEMPT_POLICIES[preempt_policy]
+        # shed queued requests whose TTFT deadline already passed (graceful
+        # degradation under overload: stop burning prefill/decode budget on
+        # requests that can no longer meet their SLO). Off by default —
+        # SLO-miss accounting tests rely on late requests still finishing.
+        self.shed_overdue = shed_overdue
         if self.paged:
             self.pool_pages = pool_pages or slots * self.max_pages + 1
             self.allocator = PageAllocator(self.pool_pages, page_size)
@@ -690,22 +752,39 @@ class ServingEngine:
             lambda logits, samp1, pos: sample_tokens(logits, samp1, pos))
 
     # -- admission ---------------------------------------------------------
-    def submit(self, req: Request, now: float):
+    def submit(self, req: Request, now: float) -> bool:
         """Admit immediately while free capacity exists (holding a request
         back from an idle slot buys nothing); once saturated, queue and
         batch admissions up to the cost-model deadline (``plan_admission``)
         so freed slots refill in groups. Unservable requests (prompt beyond
         max_seq) are rejected HERE, before queueing — a poison request must
         never reach the backlog, where its admission failure would abort
-        every subsequent tick."""
-        self._check_servable(req)
+        every subsequent tick. Rejection is a typed OUTCOME, not an
+        exception: the request comes back FAILED (with ``fail_reason``)
+        from the next ``step``, and ``False`` is returned so a frontend
+        never tracks it as in-flight."""
+        try:
+            self._check_servable(req)
+        except RequestRejected as e:
+            self._reject(req, now, str(e))
+            return False
         if (not self.backlog and not self.admission.pending
                 and self.try_admit(req, now)):
-            return
+            return True
         flushed = self.admission.add(req, now)
         if flushed:
             self.backlog.extend(flushed)
             self._drain_backlog(now)
+        return True
+
+    def _reject(self, req: Request, now: float, reason: str):
+        """Turn an unservable submission into a terminal FAILED outcome
+        (surfaced by the next ``step`` like any finished request)."""
+        req.state = RequestState.FAILED
+        req.fail_reason = reason
+        req.finish_time = now
+        self.metrics.rejected += 1
+        self._finished.append(req)
 
     def _pump_admissions(self, now: float):
         flushed = self.admission.poll(now)
@@ -722,9 +801,74 @@ class ServingEngine:
                 # after every SLO-tracked one)
                 idx = min(range(len(self.backlog)),
                           key=lambda k: (self.backlog[k].ttft_deadline, k))
-            if not self.try_admit(self.backlog[idx], now):
+            if not self._admit_or_preempt(self.backlog[idx], now):
                 break
             del self.backlog[idx]
+
+    def _admit_or_preempt(self, req: Request, now: float) -> bool:
+        """Admit ``req``; when admission backpressures (no slot / no pages)
+        and preemption is on, evict strictly-less-urgent victims (policy-
+        chosen) until it fits or no eligible victim remains. Victims
+        requeue at the back of the backlog; strictness of the urgency
+        comparison bounds preemption chains and prevents two requests
+        from evicting each other forever."""
+        if self.try_admit(req, now):
+            return True
+        if not self.preemption:
+            return False
+        while True:
+            slot = self._choose_victim(req)
+            if slot is None:
+                return False
+            victim = self.preempt(slot, now)
+            if victim is not None:
+                self.backlog.append(victim)
+            if self.try_admit(req, now):
+                return True
+
+    def _choose_victim(self, cand: Request) -> Optional[int]:
+        """Slot to evict so ``cand`` can run: decoding slots whose request
+        is STRICTLY less urgent are eligible; the configured policy picks
+        among them (default latest-deadline-first). None = don't preempt."""
+        eligible = [i for i, (r, d) in enumerate(zip(self.active,
+                                                     self.decoding))
+                    if r is not None and d and _urgency(cand) < _urgency(r)]
+        if not eligible:
+            return None
+        return self._preempt_victim_fn(self, eligible)
+
+    def preempt(self, slot: int, now: float) -> Optional[Request]:
+        """Evict the decoding request in ``slot`` mid-stream and return it
+        for requeueing (state PREEMPTED). Deferred tokens are flushed
+        first, so the victim's ``output`` is complete up to its cache
+        position; the generated tokens fold into its prompt
+        (``fold_output_into_prompt``) and — when the prefix cache is on —
+        every full page of now-valid KV is registered in the
+        ``PrefixIndex`` BEFORE the slot's references drop, so re-admission
+        restores the stream with suffix-only prefill (recompute-free).
+        Seeded sampling keys noise by absolute position, so the restored
+        stream is bit-identical to an unpreempted run. Returns None when
+        the flush finished the request (nothing to evict)."""
+        assert self.paged, "preemption requires the paged KV cache"
+        self._flush(now)
+        req = self.active[slot]
+        if req is None or not self.decoding[slot]:
+            return None
+        req.fold_output_into_prompt()
+        if self.prefix_index is not None:
+            # KV is valid through position pos-1 (= prompt_len-2 after the
+            # fold: the newest token lives only in the device carry), so
+            # only pages fully inside that span are indexable
+            ps = self.page_size
+            owned = self.allocator.owned(slot)
+            n = min(self._pos_h[slot] // ps, len(owned))
+            if n > 0:
+                self.prefix_index.register(req.prompt[:n * ps], owned[:n])
+        self.release_slot(slot)
+        req.state = RequestState.PREEMPTED
+        req.preemptions += 1
+        self.metrics.preempted += 1
+        return req
 
     def try_admit(self, req: Request, now: float) -> bool:
         """Claim a free slot for ``req``. Long prompts (when chunking is on
@@ -754,7 +898,7 @@ class ServingEngine:
 
     def _check_servable(self, req: Request):
         if self.paged and req.prompt_len > self.max_seq:
-            raise ValueError(
+            raise RequestRejected(
                 f"prompt of {req.prompt_len} tokens exceeds max_seq="
                 f"{self.max_seq}; raise ServingEngine(max_seq=...)")
 
@@ -840,7 +984,11 @@ class ServingEngine:
             self._pos_h[slot] = 0
             self._tabled[slot] = 0
             self._hit_pending.pop(slot, None)
-        lifetime = min(req.prompt_len + req.max_new_tokens - 1, self.max_seq)
+        # restore-aware lifetime: a preempted request's folded tokens are
+        # already inside prompt_len AND inside max_new_tokens (its output
+        # keeps them), so only the REMAINING budget extends the stream
+        lifetime = min(req.prompt_len + max(1, req.remaining_tokens) - 1,
+                       self.max_seq)
         if hit is None:
             n = self.allocator.pages_for(max(self._prefill_len(req), lifetime))
             return self._alloc_evicting(slot, n)
@@ -933,6 +1081,7 @@ class ServingEngine:
                 req=req, slot=slot, cache=cache1,
                 tokens=jnp.asarray(padded), true_len=np.int32(plen),
                 next_off=start))
+            req.state = RequestState.PREFILL
             self.active[slot] = req  # reserve (decoding stays False)
             return
         toks = jnp.asarray(padded[:, start:end])
@@ -953,6 +1102,7 @@ class ServingEngine:
             cache=init_cache(self.cfg, 1, buf),
             tokens=jnp.asarray(padded),
             true_len=np.int32(req.prompt_len)))
+        req.state = RequestState.PREFILL
         self.active[slot] = req  # reserve (decoding stays False)
 
     def _run_prefill_chunks(self, now: float):
@@ -1051,17 +1201,25 @@ class ServingEngine:
                 if n_full:
                     self.prefix_index.register(req.prompt, owned[:n_full])
             # the page table caps a request's lifetime tokens at max_seq;
-            # surface the truncation on the request instead of failing
+            # surface the truncation on the request instead of failing.
+            # Restore-aware: a preempted request's folded tokens already
+            # count against both prompt_len and output, so only the
+            # REMAINING budget is compared against the cap.
+            already = len(req.output)
             cap = max(1, self.max_seq - req.prompt_len)
-            if req.max_new_tokens > cap:
-                req.max_new_tokens = cap
+            if req.max_new_tokens - already > cap:
+                req.max_new_tokens = already + cap
                 req.budget_capped = True
         else:
             self.cache = self._insert(self.cache, cache1, np.int32(slot))
         self._tokens = self._set_token(self._tokens, tok, np.int32(slot))
         req.output.append(int(tok[0]))
-        req.prefill_done = now
-        self.metrics.ttfts.append(req.ttft)
+        if req.prefill_done < 0:
+            req.prefill_done = now
+            self.metrics.ttfts.append(req.ttft)
+        if req.state is RequestState.PREEMPTED:
+            self.metrics.preempt_restores += 1
+        req.state = RequestState.DECODE
         self.active[slot] = req
         self.decoding[slot] = True
         if req.done:
@@ -1080,14 +1238,18 @@ class ServingEngine:
         sync_every tokens to go) the whole deferred-sync window runs as ONE
         fused jitted scan — one dispatch and one host transfer per
         sync_every tokens. Scheduling boundaries fall back to single ticks.
-        Returns the requests that finished (host-visible) this tick."""
+        Returns the requests that finished (host-visible) this tick —
+        including aborted ones (cancelled / timed out / shed / failed),
+        which come back in a terminal ``RequestState`` with
+        ``fail_reason`` set."""
+        self._reap_doomed(now)
         self._pump_admissions(now)
         self._run_prefill_chunks(now)
         if not any(self.decoding):
             return self._take_finished()
         if self._fusable():
             if self.paged:
-                self._ensure_headroom(self.sync_every)
+                self._ensure_headroom(self.sync_every, now)
             toks, hist, self.cache = self._decode_scan(
                 self.params, self.cache, self._tokens, self._samp)
             self._tokens = toks
@@ -1096,7 +1258,7 @@ class ServingEngine:
             self._distribute(np.asarray(hist), now)
             return self._take_finished()
         if self.paged:
-            self._ensure_headroom(1)
+            self._ensure_headroom(1, now)
         nxt, self.cache = self._decode(self.params, self.cache, self._tokens,
                                        self._samp)
         self._tokens = nxt
@@ -1111,6 +1273,94 @@ class ServingEngine:
             self._flush(now)
         return self._take_finished()
 
+    # -- lifecycle: deadline-abort / cancel / shed --------------------------
+    def _reap_doomed(self, now: float):
+        """Abort every doomed request — client-cancelled, past its
+        whole-request deadline, or (``shed_overdue``) queued past its TTFT
+        deadline — wherever it sits: frontend-visible queues, chunked
+        prefill, or a live decode slot. Freed slots and pages go back to
+        the pool the same tick, so a doomed request never burns another
+        decode step's budget."""
+
+        def doom(req: Request) -> Optional[RequestState]:
+            d = req.overdue(now)
+            if d is not None:
+                return d
+            if (self.shed_overdue and req.prefill_done < 0
+                    and now > req.ttft_deadline):
+                return RequestState.TIMED_OUT  # shed (counted separately)
+            return None
+
+        # queued (backlog + admission accumulator): no resources held
+        for queue in (self.backlog, self.admission.pending):
+            doomed = [r for r in queue if doom(r) is not None]
+            for req in doomed:
+                queue.remove(req)
+                self._abort(req, now, doom(req))
+        # chunked prefill jobs: slot + page reservation held
+        for job in [j for j in self._jobs if doom(j.req) is not None]:
+            self._jobs.remove(job)
+            state = doom(job.req)
+            self.release_slot(job.slot)
+            self._abort(job.req, now, state)
+        # live decode slots: flush deferred tokens first so the abort
+        # decision (and every OTHER slot's stream) sees a complete output
+        if any(r is not None and d and doom(r) is not None
+               for r, d in zip(self.active, self.decoding)):
+            self._flush(now)
+            for i, (r, d) in enumerate(zip(self.active, self.decoding)):
+                if r is None or not d:
+                    continue
+                state = doom(r)
+                if state is not None:
+                    self.release_slot(i)
+                    self._abort(r, now, state)
+
+    def _abort(self, req: Request, now: float, state: RequestState):
+        """Terminal bookkeeping for an aborted request (slot/pages already
+        released by the caller)."""
+        shed = (state is RequestState.TIMED_OUT
+                and not req.cancel_requested and now <= req.jct_deadline)
+        req.state = state
+        req.finish_time = now
+        if state is RequestState.CANCELLED:
+            req.fail_reason = req.fail_reason or "cancelled by client"
+            self.metrics.cancelled += 1
+        elif shed:
+            req.fail_reason = (f"shed: TTFT deadline "
+                               f"{req.ttft_deadline:.4f} unreachable at "
+                               f"{now:.4f} (overload)")
+            self.metrics.shed += 1
+        else:
+            req.fail_reason = req.fail_reason or (
+                f"timed out: exceeded timeout_s={req.timeout_s:.4f} "
+                f"after arrival")
+            self.metrics.timed_out += 1
+        self._finished.append(req)
+
+    def _fail_slot(self, slot: int, now: float, reason: str):
+        """Fail ONLY the request in ``slot`` (mid-stream resource loss —
+        e.g. a bypassed page reservation surfacing as pool exhaustion):
+        the engine and every other stream keep running."""
+        req = self.active[slot]
+        self.release_slot(slot)
+        req.state = RequestState.FAILED
+        req.fail_reason = reason
+        req.finish_time = now
+        self.metrics.failed += 1
+        self._finished.append(req)
+
+    def takeover_queue(self) -> List[Request]:
+        """Hand back every queued-but-unstarted request (backlog +
+        admission accumulator, in drain order) — the migration primitive:
+        a retiring replica's queue moves through the cluster frontend to
+        survivors instead of waiting out the drain here. In-flight work
+        (decode slots, chunk jobs) stays and finishes locally."""
+        out = list(self.backlog)
+        self.backlog.clear()
+        out.extend(self.admission.flush())
+        return out
+
     def _advance_pos(self, n: int):
         """Advance the host mirror of each decoding slot's cache position
         (paged mode tracks it to pre-allocate decode pages without a
@@ -1121,13 +1371,16 @@ class ServingEngine:
             if d:
                 self._pos_h[i] += n
 
-    def _ensure_headroom(self, n: int):
+    def _ensure_headroom(self, n: int, now: float = 0.0):
         """Write every decoding slot enough page-table entries to absorb
         ``n`` more tokens BEFORE the fused window runs — table writes are
         host decisions and cannot happen inside the scan. The pages come
         from the slot's admission-time reservation; allocating here is a
         defensive fallback (reachable only when the reservation lifecycle
-        was bypassed), hence the loud error instead of backpressure."""
+        was bypassed). A shortage — after evicting idle cached prefixes —
+        fails ONLY the starved request (loud ``OutOfPagesError`` text in
+        its ``fail_reason``, naming the sizing fix); the engine and every
+        other stream keep serving."""
         for i, (r, d) in enumerate(zip(self.active, self.decoding)):
             if r is None or not d:
                 continue
@@ -1137,14 +1390,15 @@ class ServingEngine:
                 continue
             owned = self.allocator.owned(i)
             if need > len(owned):
-                if self.allocator.alloc(i, need - len(owned)) is None:
-                    raise OutOfPagesError(
-                        f"slot {i} needs {need - len(owned)} page(s) "
-                        f"mid-decode but the pool is exhausted "
-                        f"({self.allocator.pages_in_use}/"
+                if not self._alloc_evicting(i, need - len(owned)):
+                    self._fail_slot(i, now, (
+                        f"OutOfPagesError: slot {i} needs "
+                        f"{need - len(owned)} page(s) mid-decode but the "
+                        f"pool is exhausted ({self.allocator.pages_in_use}/"
                         f"{self.allocator.capacity} in use); size pool_pages "
                         f"for decode headroom "
-                        f"(slots * max_seq / page_size + 1)")
+                        f"(slots * max_seq / page_size + 1)"))
+                    continue
                 owned = self.allocator.owned(i)
             for k in range(self._tabled[i], need):
                 self.cache = self._table_append(
@@ -1154,6 +1408,7 @@ class ServingEngine:
     def _finalize_request(self, req: Request, slot: int, now: float):
         """Retire a finished request: record metrics, free the slot (and
         its pages), and stage it for the caller."""
+        req.state = RequestState.FINISHED
         req.finish_time = now
         self._finished.append(req)
         self.release_slot(slot)
@@ -1309,7 +1564,13 @@ class ServingEngine:
             prefix_cached_pages=idx.cached_pages if idx else 0,
             prefix_cached_tokens=idx.cached_tokens if idx else 0,
             prefix_hits=self.metrics.prefix_hits,
-            prefix_hit_tokens=self.metrics.prefix_hit_tokens)
+            prefix_hit_tokens=self.metrics.prefix_hit_tokens,
+            rejected=self.metrics.rejected,
+            cancelled=self.metrics.cancelled,
+            timed_out=self.metrics.timed_out,
+            shed=self.metrics.shed,
+            failed=self.metrics.failed,
+            preempted=self.metrics.preempted)
 
     @property
     def idle(self) -> bool:

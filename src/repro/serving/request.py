@@ -7,10 +7,61 @@ schedulers (repro.core) operate on ``Request`` metadata; the engine
 """
 from __future__ import annotations
 
+import enum
 from dataclasses import dataclass, field
 from typing import List, Optional
 
 import numpy as np
+
+
+class RequestState(str, enum.Enum):
+    """Explicit request lifecycle (survey: availability and tail latency,
+    not just throughput, define serving quality — a request must be
+    cancellable, abortable, and preemptible at every stage).
+
+    ::
+
+        QUEUED -> PREFILL -> DECODE -> FINISHED
+           |         |         |----> CANCELLED   (client cancel())
+           |         |         |----> TIMED_OUT   (deadline-abort / shed)
+           |         |         |----> FAILED      (rejection, replica loss,
+           |         |         |                   retry budget exhausted)
+           |         |         '----> PREEMPTED -> QUEUED  (restore)
+           |         '---- same terminal edges ----'
+           '------- same terminal edges -----------'
+
+    PREEMPTED is the only non-terminal exit: the victim's generated
+    tokens fold into its prompt and it requeues; the prefix-cache hit
+    path restores it with suffix-only prefill, bit-identical to an
+    unpreempted run (seeded sampling is keyed by absolute position).
+    """
+
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    FINISHED = "finished"
+    CANCELLED = "cancelled"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
+    PREEMPTED = "preempted"
+
+    @property
+    def terminal(self) -> bool:
+        return self in _TERMINAL
+
+
+_TERMINAL = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
+                       RequestState.TIMED_OUT, RequestState.FAILED})
+
+
+class RequestRejected(ValueError):
+    """A request that can never be served as submitted (oversize prompt,
+    unknown model pool). ``ServingEngine.submit`` / ``ClusterFrontend.submit``
+    catch it and turn the request into a FAILED outcome with
+    ``fail_reason`` set (counted in ``ServeMetrics.rejected``) instead of
+    letting one poison request crash the serving loop; the low-level
+    ``try_admit`` path still raises it for direct callers. Subclasses
+    ``ValueError`` for backward compatibility."""
 
 
 @dataclass(frozen=True)
@@ -63,6 +114,18 @@ class Request:
     prefix_hit_tokens: int = 0
     # decode sampling configuration; the default is greedy argmax
     sampling: SamplingParams = field(default_factory=SamplingParams)
+    # --- lifecycle (fault tolerance) ---
+    state: RequestState = RequestState.QUEUED
+    # whole-request deadline after arrival; 0 = never times out
+    timeout_s: float = 0.0
+    fail_reason: str = ""  # set with CANCELLED/TIMED_OUT/FAILED
+    cancel_requested: bool = False  # set by cancel(); acted on next tick
+    retries: int = 0  # failover re-submissions consumed (cluster frontend)
+    preemptions: int = 0  # times this request was evicted mid-stream
+    # generated tokens folded into ``prompt`` by preemption (restore
+    # context); ``output`` keeps them too, so the client-visible stream
+    # is unchanged and ``done`` keeps counting against the full budget
+    restored_tokens: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -110,6 +173,67 @@ class Request:
             ok = ok and 0 <= self.tpot <= self.tpot_slo_s
         return ok
 
+    # -- lifecycle ---------------------------------------------------------
+    @property
+    def remaining_tokens(self) -> int:
+        """Tokens still owed against the budget (restore-aware: a
+        preempted request's folded tokens are already in ``output``)."""
+        return max(0, self.max_new_tokens - len(self.output))
+
+    @property
+    def jct_deadline(self) -> float:
+        """Absolute whole-request abort deadline (inf = never)."""
+        if self.timeout_s <= 0:
+            return float("inf")
+        return self.arrival_time + self.timeout_s
+
+    def cancel(self):
+        """Client-side cancellation: flags the request; the engine (or the
+        frontend, if still queued there) aborts it at its next tick and
+        frees the slot and pages it holds. Idempotent; a no-op once the
+        request reached a terminal state."""
+        self.cancel_requested = True
+
+    def overdue(self, now: float) -> Optional["RequestState"]:
+        """The terminal state a doomed request should abort into at
+        ``now`` — CANCELLED beats TIMED_OUT — or None while healthy."""
+        if self.cancel_requested:
+            return RequestState.CANCELLED
+        if now > self.jct_deadline:
+            return RequestState.TIMED_OUT
+        return None
+
+    def fold_output_into_prompt(self):
+        """Preemption support: generated-but-unfolded tokens become prompt
+        context, so re-admission treats them as prefill input (and the
+        prefix-cache hit path can restore them with zero recompute). The
+        tokens stay in ``output`` — the client-visible stream and the
+        ``done`` budget arithmetic are unchanged."""
+        new = self.output[self.restored_tokens:]
+        if new:
+            self.prompt = np.concatenate(
+                [np.asarray(self.prompt, np.int32),
+                 np.asarray(new, np.int32)])
+            self.restored_tokens = len(self.output)
+
+    def reset_for_retry(self):
+        """Rewind to a just-submitted state for failover replay on a
+        surviving replica: unfold any preemption context and drop every
+        generated token. Seeded sampling keys noise by (seed, absolute
+        position), so the replayed stream is bit-identical to the lost
+        one — replay is safe to stream to a deduplicating client."""
+        if self.restored_tokens:
+            self.prompt = np.asarray(
+                self.prompt[:self.prompt_len - self.restored_tokens],
+                np.int32)
+            self.restored_tokens = 0
+        self.output = []
+        self.prefill_done = -1.0
+        self.finish_time = -1.0
+        self.routed_to = ""
+        self.prefix_hit_tokens = 0
+        self.state = RequestState.QUEUED
+
 
 @dataclass
 class ServeMetrics:
@@ -135,6 +259,16 @@ class ServeMetrics:
     slo_met: int = 0  # ...that met every declared SLO
     ttft_slo_misses: int = 0
     tpot_slo_misses: int = 0
+    # --- fault tolerance / lifecycle ---
+    rejected: int = 0  # typed RequestRejected outcomes (never admitted)
+    cancelled: int = 0  # client cancel() honored
+    timed_out: int = 0  # whole-request deadline aborts
+    shed: int = 0  # SLO-doomed requests dropped under overload
+    failed: int = 0  # mid-stream failures (e.g. bypassed reservation)
+    preempted: int = 0  # slot evictions (victim requeued for restore)
+    preempt_restores: int = 0  # preempted requests re-admitted
+    retried: int = 0  # failover re-submissions (cluster frontend)
+    failed_over: int = 0  # requests harvested from a failed replica
 
     @property
     def qps(self) -> float:
@@ -200,3 +334,12 @@ class ServeMetrics:
         self.slo_met += other.slo_met
         self.ttft_slo_misses += other.ttft_slo_misses
         self.tpot_slo_misses += other.tpot_slo_misses
+        self.rejected += other.rejected
+        self.cancelled += other.cancelled
+        self.timed_out += other.timed_out
+        self.shed += other.shed
+        self.failed += other.failed
+        self.preempted += other.preempted
+        self.preempt_restores += other.preempt_restores
+        self.retried += other.retried
+        self.failed_over += other.failed_over

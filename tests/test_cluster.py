@@ -10,7 +10,12 @@ from repro.configs import get_config
 from repro.core.costmodel import estimate_backlog_s
 from repro.core.misd.interference import InterferencePredictor
 from repro.models import init_params
-from repro.serving import ClusterFrontend, ServeMetrics, ServingEngine
+from repro.serving import (
+    ClusterFrontend,
+    RequestState,
+    ServeMetrics,
+    ServingEngine,
+)
 
 # Requests ride the CI config matrix (rid-stable sampled seeds under
 # REPRO_ENGINE_SAMPLING=sampled; conftest.make_request shares Request's
@@ -280,6 +285,44 @@ def test_cluster_retire_drains_without_new_routes(pair):
     assert victim.engine.allocator.pages_in_use == 0
 
 
+def test_cluster_retire_requeues_unstarted_backlog(pair):
+    """Satellite fix: retiring a replica used to strand its queued-but-
+    unstarted backlog behind the drain (they'd finish, but only on the
+    retiree, defeating the retire). Now `retire` pulls that backlog back
+    through the frontend and re-routes it to live replicas; the retiree
+    only finishes what it had actually started."""
+    _, _, engines = pair
+    for eng in engines:
+        _reset(eng)
+    fe = ClusterFrontend(engines[:1], policy="round-robin", seed=0)
+    reqs = [Request(i, _prompt(10 + i, seed=i), max_new_tokens=4)
+            for i in range(6)]
+    for r in reqs:
+        fe.submit(r, 0.0)
+    fe.step(1.0)  # slots=2: two started, four queued on the lone replica
+    victim_name = fe.instances[0].name
+    started = [r for r in reqs if r.prefill_done >= 0]
+    assert 0 < len(started) <= 2
+    fe.add_engine(engines[1])
+    victim = fe.retire(victim_name)
+    assert victim is not None and victim.draining
+    # the retiree's queue was taken over, not left to drain
+    assert len(victim.engine.backlog) == 0
+    assert len(victim.engine.admission.pending) == 0
+    t = 1.0
+    while not all(r.done for r in reqs):
+        t += 1.0
+        fe.step(t)
+        assert t < 200
+    fe.drain(t)
+    assert all(len(r.output) == 4 for r in reqs)
+    unstarted = [r for r in reqs if r not in started]
+    assert all(r.routed_to != victim_name for r in unstarted)
+    assert fe.merged_metrics().completed == 6
+    for eng in engines[:2]:
+        assert eng.allocator.pages_in_use == 0
+
+
 def test_cluster_autoscale_hooks(pair):
     """Queue pressure grows the pool via the spawn callback; an idle pool
     shrinks by retiring (and draining) the least-loaded replica."""
@@ -346,8 +389,14 @@ def test_cluster_multi_model_pools(pair):
     _drive(fe, chat + code)
     assert {r.routed_to for r in chat} == {"chat/e0"}
     assert {r.routed_to for r in code} == {"code/e1"}
-    with pytest.raises(ValueError, match="no engine pool"):
-        fe.submit(Request(99, _prompt(8), 2, model="missing"), 0.0)
+    # an unroutable model tag is a typed rejection, not a frontend crash:
+    # the request resolves FAILED through the next step and is counted
+    stray = Request(99, _prompt(8), 2, model="missing")
+    assert fe.submit(stray, 0.0) is False
+    assert stray.state is RequestState.FAILED
+    assert "no engine pool" in stray.fail_reason
+    assert stray in fe.step(0.0)
+    assert fe.merged_metrics().rejected == 1
 
 
 def test_cluster_edf_frontend_dispatch_order(pair):

@@ -1,0 +1,215 @@
+"""Request lifecycle: the state machine, cancel/deadline-abort/shed,
+typed rejections, and preemption with bit-identical restore."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (
+    PREEMPT_POLICIES,
+    RequestRejected,
+    RequestState,
+    SamplingParams,
+    ServingEngine,
+)
+
+# rid-stable sampled seeds under REPRO_ENGINE_SAMPLING=sampled: the
+# lifecycle machinery is exercised under stochastic decode as well
+from conftest import make_request as Request
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    params = init_params(cfg, jax.random.key(0))
+    return cfg, params
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 500, n).astype(np.int32)
+
+
+def _drive(eng, reqs, *, t0=0.0, max_steps=500):
+    done, t = [], t0
+    while len(done) < len(reqs):
+        t += 1.0
+        done += eng.step(t)
+        assert t - t0 < max_steps, f"{len(done)}/{len(reqs)} resolved"
+    return done, t
+
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+
+def test_state_machine_progression(granite):
+    """QUEUED -> PREFILL -> DECODE -> FINISHED, observable at each stage
+    (chunked prefill makes the PREFILL stage span multiple ticks)."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
+                        chunk_prefill=8)
+    req = Request(0, _prompt(32), max_new_tokens=3)
+    assert req.state is RequestState.QUEUED and not req.state.terminal
+    assert eng.submit(req, 0.0)
+    assert req.state is RequestState.PREFILL
+    t = 0.0
+    while req.state is RequestState.PREFILL:
+        t += 1.0
+        eng.step(t)
+        assert t < 50
+    assert req.state is RequestState.DECODE
+    while not req.done:
+        t += 1.0
+        eng.step(t)
+        assert t < 50
+    assert req.state is RequestState.FINISHED and req.state.terminal
+    assert len(req.output) == 3 and req.fail_reason == ""
+
+
+def test_cancel_frees_slot_and_pages(granite):
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
+                        chunk_prefill=0)
+    req = Request(0, _prompt(12), max_new_tokens=40)
+    other = Request(1, _prompt(10, seed=1), max_new_tokens=4)
+    assert eng.try_admit(req, 0.0)
+    eng.submit(other, 0.0)  # queued behind the doomed request
+    eng.step(1.0)
+    assert 0 < len(req.output) < 40
+    req.cancel()
+    out = eng.step(2.0)
+    assert req in out
+    assert req.state is RequestState.CANCELLED
+    assert "cancel" in req.fail_reason
+    assert eng.metrics.cancelled == 1
+    # the freed slot admits the queued request, which runs to completion
+    done, _ = _drive(eng, [other], t0=2.0)
+    assert other in done and len(other.output) == 4
+    assert eng.n_active == 0 and eng.allocator.pages_in_use == 0
+
+
+def test_timeout_aborts_mid_decode(granite):
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
+                        chunk_prefill=0)
+    req = Request(0, _prompt(12), max_new_tokens=200, timeout_s=3.0)
+    assert eng.try_admit(req, 0.0)
+    for t in (1.0, 2.0, 3.0):  # within deadline: keeps decoding
+        eng.step(t)
+    assert req.state is RequestState.DECODE
+    out = eng.step(4.5)  # now > arrival + timeout_s
+    assert req in out and req.state is RequestState.TIMED_OUT
+    assert "timed out" in req.fail_reason
+    assert eng.metrics.timed_out == 1
+    assert 0 < len(req.output) < 200  # partial stream, then the abort
+    assert eng.n_active == 0 and eng.allocator.pages_in_use == 0
+
+
+def test_shed_overdue_queued_request_under_overload(granite):
+    """With shed_overdue on, a QUEUED request whose TTFT deadline already
+    passed is dropped before burning prefill budget; the occupant is
+    untouched. Off by default (late requests still finish)."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
+                        chunk_prefill=0, shed_overdue=True)
+    hog = Request(0, _prompt(12), max_new_tokens=30)
+    late = Request(1, _prompt(10, seed=1), max_new_tokens=4, ttft_slo_s=2.0)
+    assert eng.try_admit(hog, 0.0)
+    eng.submit(late, 0.0)
+    out = []
+    for t in (1.0, 2.0, 3.0):
+        out += eng.step(t)
+    assert late in out and late.state is RequestState.TIMED_OUT
+    assert "shed" in late.fail_reason
+    assert eng.metrics.shed == 1 and eng.metrics.timed_out == 0
+    assert late.prefill_done < 0  # never prefillled: no budget burned
+    done, _ = _drive(eng, [hog], t0=3.0)
+    assert hog in done and len(hog.output) == 30
+
+
+def test_typed_rejection_is_a_valueerror_subclass():
+    """Backward compat: callers catching ValueError keep working."""
+    assert issubclass(RequestRejected, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# preemption + bit-identical restore
+# ---------------------------------------------------------------------------
+
+
+def test_preemption_requires_paged(granite):
+    cfg, params = granite
+    with pytest.raises(ValueError, match="preemption requires"):
+        ServingEngine(cfg, params, slots=1, paged=False, preemption=True)
+    with pytest.raises(ValueError, match="preempt_policy"):
+        ServingEngine(cfg, params, slots=1, preemption=True,
+                      preempt_policy="coin-flip")
+    assert set(PREEMPT_POLICIES) == {"latest-deadline", "most-remaining"}
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True],
+                         ids=["paged", "prefix_cache"])
+def test_preempt_restore_bit_identical(granite, prefix_cache):
+    """A request preempted mid-decode by a higher-priority arrival resumes
+    with a stream bit-identical to an undisturbed run — the restore path
+    is suffix-only prefill over the cached generated prefix when the
+    prefix cache is on, full recompute of the folded prompt otherwise;
+    position-keyed seeded sampling makes both exact."""
+    cfg, params = granite
+    kw = dict(slots=1, window=64, max_seq=64, sync_every=1, chunk_prefill=0)
+    samp = SamplingParams(temperature=0.7, top_k=20, top_p=0.95, seed=77)
+
+    ref_eng = ServingEngine(cfg, params, **kw)
+    ref = Request(0, _prompt(20), max_new_tokens=10, sampling=samp)
+    assert ref_eng.try_admit(ref, 0.0)
+    _drive(ref_eng, [ref])
+
+    eng = ServingEngine(cfg, params, **kw, preemption=True,
+                        prefix_cache=prefix_cache)
+    victim = Request(0, _prompt(20), max_new_tokens=10, sampling=samp,
+                     ttft_slo_s=100.0)
+    assert eng.try_admit(victim, 0.0)
+    for t in (1.0, 2.0, 3.0):
+        eng.step(t)
+    assert len(victim.output) >= 2  # mid-decode when the preemptor lands
+    hot = Request(1, _prompt(10, seed=9), max_new_tokens=3, priority=1,
+                  ttft_slo_s=1.0,
+                  sampling=SamplingParams(temperature=0.7, top_k=20,
+                                          top_p=0.95, seed=78))
+    eng.submit(hot, 3.0)
+    done, _ = _drive(eng, [victim, hot], t0=3.0)
+    assert victim in done and hot in done
+    assert victim.preemptions >= 1
+    assert eng.metrics.preempted >= 1 and eng.metrics.preempt_restores >= 1
+    # the hot request jumped the line: it finished while the victim waited
+    assert hot.finish_time <= victim.finish_time
+    # THE contract: the disturbed stream equals the undisturbed one
+    assert list(victim.output) == list(ref.output)
+    assert victim.state is RequestState.FINISHED
+    if prefix_cache:
+        # restore aliased the registered generated prefix (>= 1 full page)
+        assert eng.metrics.prefix_hits >= 1
+    # no leaked pages or refcount drift after the churn
+    eng.clear_prefix_cache()
+    assert eng.allocator.pages_in_use == 0
+    assert eng.allocator.total_refs == 0
+
+
+def test_preemption_never_evicts_equal_urgency(granite):
+    """Strict-urgency eligibility: an identical-urgency arrival cannot
+    evict a running request (no thrash: two equal requests would
+    otherwise trade the slot forever)."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
+                        chunk_prefill=0, preemption=True)
+    a = Request(0, _prompt(12), max_new_tokens=20, ttft_slo_s=5.0)
+    b = Request(1, _prompt(12, seed=1), max_new_tokens=20, ttft_slo_s=5.0)
+    assert eng.try_admit(a, 0.0)
+    eng.submit(b, 0.0)
+    for t in range(1, 6):
+        eng.step(float(t))
+    assert eng.metrics.preempted == 0
+    assert a.preemptions == 0 and not a.done  # still running undisturbed

@@ -9,8 +9,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import forward, init_params
 from repro.serving import (
-    OutOfPagesError,
     PageAllocator,
+    RequestState,
     SamplingParams,
     ServingEngine,
 )
@@ -210,23 +210,31 @@ def test_explicit_paged_on_nonpageable_arch_raises():
 
 def test_paged_rejects_prompt_beyond_max_seq(granite):
     """An unservable prompt is rejected at submit/try_admit time and never
-    reaches the backlog (where its failure would poison every later tick)."""
+    reaches the backlog (where its failure would poison every later tick).
+    ``try_admit`` raises the typed ``RequestRejected`` (a ValueError) for
+    direct callers; ``submit`` converts it to a FAILED outcome so one bad
+    request cannot crash a serving loop."""
     cfg, params = granite
     eng = ServingEngine(cfg, params, slots=1, window=32, max_seq=64)
     with pytest.raises(ValueError, match="max_seq"):
         eng.try_admit(Request(0, _prompt(65), max_new_tokens=2), 0.0)
-    # saturate the slot, then submit the poison request: it must raise
-    # immediately, leaving the queue clean and the engine steppable
+    # saturate the slot, then submit the poison request: it must resolve
+    # as a rejection, leaving the queue clean and the engine steppable
     ok = Request(1, _prompt(10, seed=1), max_new_tokens=4)
     assert eng.try_admit(ok, 0.0)
-    with pytest.raises(ValueError, match="max_seq"):
-        eng.submit(Request(2, _prompt(65, seed=2), max_new_tokens=2), 0.0)
+    poison = Request(2, _prompt(65, seed=2), max_new_tokens=2)
+    assert eng.submit(poison, 0.0) is False
+    assert poison.state is RequestState.FAILED
+    assert "max_seq" in poison.fail_reason
+    assert eng.metrics.rejected == 1
     assert not eng.backlog and not eng.admission.pending
     t = 0.0
+    done = []
     while not ok.done:
         t += 1.0
-        eng.step(t)
+        done += eng.step(t)
     assert len(ok.output) == 4
+    assert poison in done  # the rejection surfaced through the step stream
 
 
 def test_budget_cap_is_surfaced(granite):
@@ -322,19 +330,33 @@ def test_token_budget_reserved_at_admission(granite):
     assert len(ok.output) == 3
 
 
-def test_out_of_pages_mid_decode_raises(granite):
-    """The mid-decode exhaustion guard stays a loud, sizing-naming error:
-    reachable only when the admission-time reservation is bypassed (here:
-    the token budget is raised after admission)."""
+def test_out_of_pages_mid_decode_fails_only_that_request(granite):
+    """The mid-decode exhaustion guard — reachable only when the
+    admission-time reservation is bypassed (here: the token budget is
+    raised after admission) — stays LOUD (the failure names the sizing
+    knobs) but is contained: it fails THAT request, frees its slot and
+    pages, and the engine keeps serving everyone else."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, pool_pages=3,
+    eng = ServingEngine(cfg, params, slots=2, window=64, pool_pages=6,
                         sync_every=1, chunk_prefill=0)
-    req = Request(0, _prompt(30), max_new_tokens=2)  # reserves 2 pages
-    assert eng.try_admit(req, 0.0)
-    req.max_new_tokens = 40  # bypass the reservation: grow past 32 tokens
-    with pytest.raises(OutOfPagesError, match="pool_pages"):
-        for t in range(60):
-            eng.step(float(t))
+    bad = Request(0, _prompt(30), max_new_tokens=2)  # reserves 2 pages
+    ok = Request(1, _prompt(30, seed=1), max_new_tokens=8)
+    assert eng.try_admit(bad, 0.0)
+    assert eng.try_admit(ok, 0.0)
+    bad.max_new_tokens = 90  # bypass the reservation: grow past the pool
+    done = []
+    for t in range(200):
+        done += eng.step(float(t))
+        if ok.done and bad in done:
+            break
+    assert bad.state is RequestState.FAILED
+    assert "OutOfPagesError" in bad.fail_reason
+    assert "pool_pages" in bad.fail_reason
+    assert eng.metrics.failed == 1
+    # the innocent bystander finished its full budget on a live engine
+    assert ok.done and len(ok.output) == 8
+    # the failed request's slot and pages came back to the pool
+    assert eng.n_active == 0 and eng.allocator.pages_in_use == 0
 
 
 def test_kv_budget_admits_more_paged_slots():
