@@ -3,7 +3,8 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test lint bench bench-smoke bench-cluster bench-cluster-smoke \
 	bench-prefix bench-prefix-smoke bench-sampling bench-sampling-smoke \
-	bench-chaos bench-chaos-smoke serve-bench micro
+	bench-chaos bench-chaos-smoke bench-sharded bench-sharded-smoke \
+	serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -58,6 +59,16 @@ bench-chaos:
 # goodput retention < 0.70, or a watchdog mis-verdict (slow declared dead)
 bench-chaos-smoke:
 	$(PY) benchmarks/chaos_bench.py --smoke
+
+# tensor/expert-parallel replica vs 1-chip on the same workload (the
+# script forces 8 XLA host devices itself) -> BENCH_sharded.json
+bench-sharded:
+	$(PY) benchmarks/sharded_bench.py
+
+# CI gate: fails on sharded-vs-1-chip stream divergence, compile-count
+# growth under the mesh, page leaks, or MoE expert-parallel divergence
+bench-sharded-smoke:
+	$(PY) benchmarks/sharded_bench.py --smoke
 
 # wall-clock microbenchmarks of the jitted steps
 micro:

@@ -61,6 +61,7 @@ from repro.configs import get_config
 from repro.core.costmodel import estimate_decode, suggest_health_timeout_s
 from repro.models import init_params
 from repro.serving import (
+    EngineConfig,
     ClusterFrontend,
     FaultInjector,
     FaultyEngine,
@@ -144,10 +145,9 @@ def drive(server, reqs, *, injector=None, dt: float = 1.0,
 
 def build_proxies(cfg, params, *, replicas, slots, window, max_seq,
                   sync_every, tick_s):
-    return [FaultyEngine(ServingEngine(cfg, params, slots=slots,
-                                       window=window, max_seq=max_seq,
-                                       sync_every=sync_every,
-                                       sla_s=4.0 * tick_s))
+    return [FaultyEngine(ServingEngine(cfg, params, EngineConfig(
+                slots=slots, window=window, max_seq=max_seq,
+                sync_every=sync_every, sla_s=4.0 * tick_s)))
             for _ in range(replicas)]
 
 
@@ -215,10 +215,10 @@ def run_churn(cfg, params, *, requests, rate, seed, tick_s, slots=2,
                          seed=seed + 1, tick_s=tick_s, priority_frac=0.5)
 
     def build(preemption):
-        return ServingEngine(cfg, params, slots=slots, window=window,
-                             max_seq=max_seq, sync_every=sync_every,
-                             sla_s=4.0 * tick_s, prefix_cache=True,
-                             preemption=preemption, edf_backlog=True)
+        return ServingEngine(cfg, params, EngineConfig(
+            slots=slots, window=window, max_seq=max_seq,
+            sync_every=sync_every, sla_s=4.0 * tick_s, prefix_cache=True,
+            preemption=preemption, edf_backlog=True))
 
     ref_reqs = copy.deepcopy(reqs)
     ref, _ = drive(build(False), ref_reqs, dt=tick_s)

@@ -47,7 +47,7 @@ from repro.configs import get_config
 from repro.core.costmodel import estimate_decode
 from repro.core.mimd.router import POLICIES
 from repro.models import init_params
-from repro.serving import ClusterFrontend, Request, ServingEngine
+from repro.serving import EngineConfig, ClusterFrontend, Request, ServingEngine
 
 
 # ---------------------------------------------------------------------------
@@ -98,9 +98,9 @@ def build_engines(cfg, params, *, replicas: int, slots: int, window: int,
     # sla_s rides the virtual clock: the admission accumulator's flush
     # deadline must be ~a tick, not wall-clock milliseconds, or saturated
     # engines would batch admissions for hundreds of virtual ticks
-    return [ServingEngine(cfg, params, slots=slots, window=window,
-                          max_seq=max_seq, sync_every=sync_every,
-                          sla_s=4.0 * tick_s)
+    return [ServingEngine(cfg, params, EngineConfig(
+                slots=slots, window=window, max_seq=max_seq,
+                sync_every=sync_every, sla_s=4.0 * tick_s))
             for _ in range(replicas)]
 
 
@@ -217,6 +217,10 @@ def run(report, *, arch="granite-8b", replicas=2, slots=2, window=128,
                "note": "virtual-time drive: one step per cost-model decode "
                        "tick; latencies reported in ticks, not CPU wall "
                        "clock",
+               # typed, versioned replica telemetry (the wire shape a
+               # remote frontend would consume; schema_version included)
+               "replica_reports": [e.load_report().to_dict()
+                                   for e in engines],
                "policies": {}}
 
     # bit-identical oracle (single pool only: one engine sees every prompt)

@@ -44,7 +44,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineConfig, Request, ServingEngine
 
 RID = iter(range(10 ** 9))
 
@@ -129,8 +129,8 @@ def run(report, *, arch: str = "granite-8b", n_templates: int = 2,
     mk = dict(slots=2, window=max_seq, max_seq=max_seq,
               page_size=page_size, pool_pages=pool,
               chunk_prefill=0, sync_every=4)
-    cold = ServingEngine(cfg, params, **mk)
-    warm = ServingEngine(cfg, params, prefix_cache=True, **mk)
+    cold = ServingEngine(cfg, params, EngineConfig(**mk))
+    warm = ServingEngine(cfg, params, EngineConfig(prefix_cache=True, **mk))
     assert cold.paged and warm.paged
 
     prompts = make_workload(

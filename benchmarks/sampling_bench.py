@@ -48,7 +48,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serving import Request, SamplingParams, ServingEngine
+from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
 
 SAMPLED = SamplingParams(temperature=0.8, top_k=40, top_p=0.95, seed=0)
 
@@ -145,8 +145,8 @@ def determinism_check(cfg, params, *, n_requests=6, slots=3):
     engine restart; returns (ok, detail dict). Also enforces the trace
     budget: the mixed batch must cost no more decode traces than greedy
     serving (<= 2: single tick + fused scan)."""
-    mk = lambda: ServingEngine(cfg, params, slots=slots, window=128,  # noqa: E731
-                               sync_every=4)
+    mk = lambda: ServingEngine(cfg, params, EngineConfig(  # noqa: E731
+        slots=slots, window=128, sync_every=4))
     eng = mk()
     a = _serve(eng, _workload(n_requests))
     traces_mixed = eng.decode_traces
@@ -206,8 +206,8 @@ def run(report, *, arch="granite-8b", slot_counts=(4, 8), ticks=128,
                "greedy": {}, "sampled": {}, "ratio": {}}
     all_ratios = []
     for slots in slot_counts:
-        eng = ServingEngine(cfg, params, slots=slots, window=window,
-                            sync_every=sync_every)
+        eng = ServingEngine(cfg, params, EngineConfig(
+            slots=slots, window=window, sync_every=sync_every))
         g, s, ratios = _ab_rounds(eng, slots, ticks, rounds, prompt_len,
                                   budget)
         ratio = float(np.median(ratios))

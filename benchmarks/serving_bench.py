@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import init_cache, init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineConfig, Request, ServingEngine
 from repro.serving.engine import cache_insert, prefill_step, serve_step
 
 
@@ -228,8 +228,8 @@ def run(report, *, arch: str = "granite-8b", slot_counts=(2, 4, 8),
 
     for slots in slot_counts:
         base = BaselineEngine(cfg, params, slots=slots, window=window)
-        eng = ServingEngine(cfg, params, slots=slots, window=window,
-                            sync_every=sync_every)
+        eng = ServingEngine(cfg, params, EngineConfig(
+            slots=slots, window=window, sync_every=sync_every))
         base_tps, base_ticks, eng_tps, eng_ticks = _ab_rounds(
             base, eng, slots, ticks, rounds, prompt_len, cfg.vocab_size,
             budget)
@@ -269,8 +269,8 @@ def run(report, *, arch: str = "granite-8b", slot_counts=(2, 4, 8),
         lambda: BaselineEngine(cfg, params, slots=2, window=window),
         lengths, cfg.vocab_size)
     eng_ttft, eng_traces = _ttft_sweep(
-        lambda: ServingEngine(cfg, params, slots=2, window=window,
-                              chunk_prefill=0),
+        lambda: ServingEngine(cfg, params, EngineConfig(
+            slots=2, window=window, chunk_prefill=0)),
         lengths, cfg.vocab_size)
     results["ttft"] = {
         "prompt_lengths": lengths,
@@ -307,8 +307,8 @@ def smoke(*, arch: str = "granite-8b") -> int:
     cfg = get_config(arch).reduced()
     params = init_params(cfg, jax.random.key(0))
     sync_every = 4
-    eng = ServingEngine(cfg, params, slots=3, window=128,
-                        sync_every=sync_every, chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=3, window=128, sync_every=sync_every, chunk_prefill=0))
     rng = np.random.default_rng(0)
     failures = []
 

@@ -1,0 +1,246 @@
+"""Sharded-serving benchmark: one tensor/expert-parallel replica vs the
+1-chip engine on the SAME workload.
+
+    PYTHONPATH=src python benchmarks/sharded_bench.py [--arch granite-8b]
+        [--ticks 96] [--out BENCH_sharded.json]
+    PYTHONPATH=src python benchmarks/sharded_bench.py --smoke   # CI gate
+
+The benchmark forces 8 XLA host-platform devices (set BEFORE the first
+jax import — the backend reads the flag once) and serves the same seeded
+workload through a ``DeviceTopology(tp=8)`` engine and a 1-chip engine:
+
+  * decode tok/s for both (on a CPU host the "sharded speedup" is noise —
+    8 fake devices share the same silicon; the artifact records the
+    OVERHEAD of the partitioned program, and the modeled per-axis
+    collective seconds from ``LoadReport.axis_collective_s`` say what a
+    real interconnect would add);
+  * stream bit-identity: the sharded engine must produce exactly the
+    1-chip streams (greedy AND sampled) — the exact-profile contract;
+  * compile-count parity: tensor parallelism must not multiply traces
+    (same prefill/decode trace counts on both engines);
+  * page accounting: the sharded paged engine drains to zero pages.
+
+``--smoke`` runs the three gates above plus an expert-parallel MoE
+bit-identity pass on a tiny config and exits nonzero on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from bench_noise import noise_report, pin_host_threads
+
+pin_host_threads()  # must precede the first jax import
+
+# 8 host-platform devices for the (1 x 8) serving mesh; must land in the
+# environment before jax initializes its backend
+N_DEV = 8
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + f" --xla_force_host_platform_device_count={N_DEV}"
+                           ).strip()
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (
+    DeviceTopology,
+    EngineConfig,
+    Request,
+    SamplingParams,
+    ServingEngine,
+)
+
+
+def _shard_cfg(arch: str):
+    """The bench config: reduced, with 8 kv heads so the kv-head axis of
+    the paged pools actually splits 8 ways (reduced() caps heads at 4)."""
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, num_heads=N_DEV, num_kv_heads=N_DEV)
+
+
+def _moe_cfg():
+    cfg = get_config("grok-1-314b").reduced()
+    return dataclasses.replace(cfg, num_heads=N_DEV, num_kv_heads=N_DEV,
+                               num_experts=N_DEV, moe_expert_parallel=True)
+
+
+def _workload(n, vocab, *, seed=0, max_new=8):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, 8 + 2 * i).astype(np.int32),
+                    max_new_tokens=max_new,
+                    sampling=(SamplingParams() if i % 2 == 0 else
+                              SamplingParams(temperature=0.8, top_k=40,
+                                             seed=100 + i)))
+            for i in range(n)]
+
+
+def _engine(cfg, params, tp, **kw):
+    return ServingEngine(cfg, params, EngineConfig(
+        slots=2, window=64, chunk_prefill=16,
+        topology=DeviceTopology(tp=tp), **kw))
+
+
+def _serve(eng, reqs):
+    t = 0.0
+    for r in reqs:
+        eng.submit(r, t)
+    while not all(r.done for r in reqs):
+        t += 1.0
+        eng.step(t)
+    eng.drain(t + 1.0)
+    return [tuple(r.output) for r in reqs]
+
+
+def _decode_tps(eng, *, ticks, prompt_len, vocab):
+    """Steady-state decode throughput: keep every slot saturated with
+    window-sized streams (each stream ends at the context cap, so a fresh
+    one is admitted as slots free up), then time ~``ticks`` decode ticks
+    (one warmup step first — it compiles the fused window)."""
+    rng = np.random.default_rng(0)
+    budget = eng.window - prompt_len - 1
+    rid = iter(range(1000, 1_000_000))
+
+    def refill():
+        while eng.try_admit(Request(
+                rid=next(rid),
+                prompt=rng.integers(0, vocab, prompt_len).astype(np.int32),
+                max_new_tokens=budget), 0.0):
+            pass
+
+    refill()
+    eng.step(0.0)
+    jax.block_until_ready(eng.cache)
+    c0 = eng.metrics.decode_ticks
+    t0 = time.perf_counter()
+    while eng.metrics.decode_ticks - c0 < ticks:
+        refill()
+        eng.step(0.0)
+    jax.block_until_ready(eng.cache)
+    dt = time.perf_counter() - t0
+    return (eng.metrics.decode_ticks - c0) * eng.slots / dt
+
+
+def run(report, *, arch="granite-8b", ticks=96, seed=0, out=""):
+    cfg = _shard_cfg(arch)
+    params = init_params(cfg, jax.random.key(seed))
+
+    results = {"arch": arch, "devices": jax.local_device_count(),
+               "ticks": ticks, "seed": seed, **noise_report()}
+
+    base = _engine(cfg, params, 1)
+    shard = _engine(cfg, params, N_DEV)
+    reqs_b = _workload(6, cfg.vocab_size, seed=seed)
+    reqs_s = _workload(6, cfg.vocab_size, seed=seed)
+    streams_b = _serve(base, reqs_b)
+    streams_s = _serve(shard, reqs_s)
+    identical = streams_b == streams_s
+    report("sharded_streams_bit_identical", identical,
+           f"tp{N_DEV} vs 1-chip, greedy+sampled mix")
+    results["streams_bit_identical"] = identical
+
+    traces = {"base": (base.prefill_traces, base.decode_traces),
+              "shard": (shard.prefill_traces, shard.decode_traces)}
+    results["traces"] = {k: {"prefill": v[0], "decode": v[1]}
+                         for k, v in traces.items()}
+    report("sharded_trace_parity", traces["base"] == traces["shard"],
+           f"base={traces['base']} shard={traces['shard']}")
+
+    tps_b = _decode_tps(base, ticks=ticks, prompt_len=16,
+                        vocab=cfg.vocab_size)
+    tps_s = _decode_tps(shard, ticks=ticks, prompt_len=16,
+                        vocab=cfg.vocab_size)
+    results["decode_tps"] = {"1chip": tps_b, f"tp{N_DEV}": tps_s,
+                             "ratio": tps_s / tps_b}
+    report("sharded_decode_tps", round(tps_s, 1),
+           f"1chip={tps_b:.1f} ratio={tps_s / tps_b:.3f} (CPU host: 8 fake "
+           f"devices share one socket; ratio measures partition overhead)")
+
+    rep = shard.load_report()
+    results["sharded_report"] = rep.to_dict()
+    results["axis_collective_s"] = dict(rep.axis_collective_s)
+    results["axis_util"] = dict(rep.axis_util)
+    report("sharded_axis_collective_s",
+           {a: f"{s:.3g}" for a, s in rep.axis_collective_s},
+           "modeled per-axis collective seconds per full-batch decode tick")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+        report("sharded_bench_json", out, "full results")
+    return results
+
+
+def smoke(*, arch="granite-8b"):
+    failures = []
+
+    def check(name, ok, got=""):
+        print(f"smoke:{name}: {'ok' if ok else 'FAIL'} ({got})")
+        if not ok:
+            failures.append(name)
+
+    cfg = _shard_cfg(arch)
+    params = init_params(cfg, jax.random.key(0))
+    base = _engine(cfg, params, 1)
+    shard = _engine(cfg, params, N_DEV)
+    sb = _serve(base, _workload(4, cfg.vocab_size))
+    ss = _serve(shard, _workload(4, cfg.vocab_size))
+    check("stream_identity", sb == ss, f"{len(sb)} streams")
+    check("trace_parity",
+          (base.prefill_traces, base.decode_traces)
+          == (shard.prefill_traces, shard.decode_traces),
+          f"base=({base.prefill_traces},{base.decode_traces}) "
+          f"shard=({shard.prefill_traces},{shard.decode_traces})")
+    check("page_drain", (not shard.paged)
+          or shard.allocator.pages_in_use == 0,
+          f"pages_in_use={getattr(shard.allocator, 'pages_in_use', 0)}")
+
+    mcfg = _moe_cfg()
+    mparams = init_params(mcfg, jax.random.key(1))
+    mb = _serve(_engine(mcfg, mparams, 1, moe_capacity_policy="strict"),
+                _workload(3, mcfg.vocab_size, max_new=5))
+    ms = _serve(_engine(mcfg, mparams, N_DEV, moe_capacity_policy="strict"),
+                _workload(3, mcfg.vocab_size, max_new=5))
+    check("moe_ep_stream_identity", mb == ms, f"{len(mb)} streams")
+
+    if failures:
+        print(f"smoke: FAILED ({', '.join(failures)})")
+        return 1
+    print("smoke: sharded streams bit-identical, trace counts flat, "
+          "pages drained, MoE EP exact")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--ticks", type=int, default=96)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: bit-identity + trace parity + page drain")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_sharded.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(arch=args.arch))
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}")
+
+    print("name,value,derived")
+    res = run(report, arch=args.arch, ticks=args.ticks, out=args.out)
+    print(f"# sharded decode {res['decode_tps'][f'tp{N_DEV}']:.1f} tok/s vs "
+          f"1-chip {res['decode_tps']['1chip']:.1f} tok/s; streams "
+          f"{'bit-identical' if res['streams_bit_identical'] else 'DIVERGED'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,7 @@ from repro.configs import get_config
 from repro.core import Deployment, Paradigm, estimate, executor_for
 from repro.configs import get_shape
 from repro.models import init_params
-from repro.serving import Request, ServingEngine
+from repro.serving import EngineConfig, Request, ServingEngine
 
 
 def main():
@@ -25,7 +25,7 @@ def main():
 
     # --- SISD: single-instance serving with continuous batching -----------
     params = init_params(cfg, jax.random.key(0))
-    eng = ServingEngine(cfg, params, slots=2, window=64)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=64))
     reqs = [Request(i, np.arange(8 + i, dtype=np.int32), max_new_tokens=6)
             for i in range(3)]
     queue, t = list(reqs), 0.0

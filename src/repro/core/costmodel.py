@@ -114,9 +114,54 @@ def _attn_flops(cfg, batch: int, s_q: int, s_kv: int) -> float:
     return 4.0 * batch * _n_attn_layers(cfg) * cfg.num_heads * pairs * hd
 
 
+def _axes_chips(mesh_axes) -> int:
+    n = 1
+    for _, size in mesh_axes:
+        n *= int(size)
+    return n
+
+
+def collective_bytes_per_axis(cfg, tokens: int, *, mesh_axes) -> dict:
+    """Per-mesh-axis collective traffic (bytes, per participating chip)
+    for one forward pass over ``tokens`` tokens, keyed off the mesh shape
+    ``((axis, size), ...)`` — the sharded-serving term of the roofline.
+
+    ``model`` axis (tensor parallel): two activation collectives per layer
+    (attention-output and MLP-hidden all-gather/reduce of the (tokens, d)
+    residual), ring cost ``(n-1)/n`` of the buffer each. MoE archs add
+    the expert-parallel all-to-all: each routed token's activation crosses
+    the axis twice (dispatch + combine) for each of its top-k experts.
+    ``data``/``pod`` axes: batch-sharded activations need no per-step
+    collective (weights are replicated across them at inference)."""
+    wb = _dtype_bytes(cfg)
+    out = {}
+    for name, n in mesh_axes:
+        n = int(n)
+        traffic = 0.0
+        if name == "model" and n > 1:
+            ring = (n - 1) / n
+            traffic = 4.0 * cfg.num_layers * tokens * cfg.d_model * wb * ring
+            if cfg.arch_type == "moe" and cfg.num_experts:
+                moe_layers = cfg.num_layers // max(1, cfg.moe_layer_period)
+                k = max(1, cfg.experts_per_token)
+                traffic += (2.0 * moe_layers * tokens * k * cfg.d_model
+                            * wb * ring)
+        out[name] = traffic
+    return out
+
+
+def collective_s_per_axis(cfg, tokens: int, *, mesh_axes,
+                          chip: Chip = TPU_V5E) -> dict:
+    """Per-axis collective seconds for one forward pass (per-chip link
+    bandwidth; axes move bytes concurrently only if XLA overlaps them —
+    the conservative sum is what ``WorkEstimate.collective_s`` sees)."""
+    per_axis = collective_bytes_per_axis(cfg, tokens, mesh_axes=mesh_axes)
+    return {a: b / chip.link_bw for a, b in per_axis.items()}
+
+
 def estimate_prefill(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
                      n_chips: int = 1, collective_bytes: float = 0.0,
-                     prefix_hit: int = 0) -> WorkEstimate:
+                     prefix_hit: int = 0, mesh_axes=None) -> WorkEstimate:
     """``prefix_hit`` > 0 models suffix-offset prefill over a shared-prefix
     KV cache hit: only ``seq - prefix_hit`` tokens flow through the model
     (their attention still spans all ``seq`` keys), and the cached prefix
@@ -131,12 +176,18 @@ def estimate_prefill(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
     hbm = cfg.param_count() * wb + act_bytes
     if prefix_hit > 0:
         hbm += kv_bytes_per_token(cfg) * min(prefix_hit, seq) * batch
+    if mesh_axes is not None:
+        n_chips = _axes_chips(mesh_axes)
+        if collective_bytes == 0.0:
+            collective_bytes = sum(collective_bytes_per_axis(
+                cfg, batch * new, mesh_axes=mesh_axes).values())
     return WorkEstimate(flops, hbm, collective_bytes, chip, n_chips)
 
 
 def estimate_decode(cfg, batch: int, context: int, *, chip: Chip = TPU_V5E,
                     n_chips: int = 1, window: int = 0,
-                    collective_bytes: float = 0.0) -> WorkEstimate:
+                    collective_bytes: float = 0.0,
+                    mesh_axes=None) -> WorkEstimate:
     n_active = cfg.active_param_count()
     wb = _dtype_bytes(cfg)
     kv_len = min(context, window) if window else context
@@ -152,6 +203,11 @@ def estimate_decode(cfg, batch: int, context: int, *, chip: Chip = TPU_V5E,
         state = batch * cfg.num_layers * cfg.d_model * 4 * 4.0
         kv_bytes += state
     hbm = cfg.param_count() * wb + kv_bytes
+    if mesh_axes is not None:
+        n_chips = _axes_chips(mesh_axes)
+        if collective_bytes == 0.0:
+            collective_bytes = sum(collective_bytes_per_axis(
+                cfg, batch, mesh_axes=mesh_axes).values())
     return WorkEstimate(flops, hbm, collective_bytes, chip, n_chips)
 
 
@@ -169,7 +225,7 @@ def estimate_train(cfg, batch: int, seq: int, *, chip: Chip = TPU_V5E,
 def estimate_backlog_s(cfg, *, queued_prefill_tokens: int,
                        decode_tokens_remaining: int, slots: int,
                        context: int, chip: Chip = TPU_V5E,
-                       n_chips: int = 1) -> float:
+                       n_chips: int = 1, mesh_axes=None) -> float:
     """Seconds to drain an engine's outstanding work — the scalar the
     cluster frontend routes on (``ServingEngine.load_report``).
 
@@ -183,11 +239,12 @@ def estimate_backlog_s(cfg, *, queued_prefill_tokens: int,
     s = 0.0
     if queued_prefill_tokens > 0:
         s += estimate_prefill(cfg, 1, queued_prefill_tokens, chip=chip,
-                              n_chips=n_chips).latency_s
+                              n_chips=n_chips, mesh_axes=mesh_axes).latency_s
     if decode_tokens_remaining > 0:
         b = max(1, slots)
         per_tick = estimate_decode(cfg, b, context, chip=chip,
-                                   n_chips=n_chips).latency_s
+                                   n_chips=n_chips,
+                                   mesh_axes=mesh_axes).latency_s
         s += per_tick * decode_tokens_remaining / b
     return s
 

@@ -136,6 +136,14 @@ class ServiceRouter:
             return float("inf")
         return sum(i.queue_s for i in pool) / len(pool)
 
+    def pool_chips(self, model: str) -> float:
+        """Devices the pool occupies (each replica's ``device.speed``
+        mirrors its chip count — 1 for single-device engines, the mesh
+        size for sharded replicas via ``LoadReport.n_chips``). The
+        data-center sizing denominator: a scale-out of one tp=8 replica
+        costs 8 chips, not 1."""
+        return sum(i.device.speed for i in self.pools.get(model, []))
+
     def want_scale(self, model: str, *, high_s: float = 1.0,
                    low_s: float = 0.05) -> int:
         """+1 = scale out, -1 = scale in, 0 = hold."""

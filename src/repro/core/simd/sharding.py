@@ -37,7 +37,20 @@ class ShardingPolicy:
     expert_parallel: bool = False
     model_size: int = 16
     data_size: int = 16
-    kv_shard: str = "hd"  # "hd" | "seq" (flash-decoding length-parallel)
+    # "hd" | "seq" (flash-decoding length-parallel) | "kv_head" (serving:
+    # pool pages partition over kv heads — GQA einsums keep the kv-head
+    # dim as a batch dim, so per-shard attention math is bit-identical to
+    # the single-device trace)
+    kv_shard: str = "hd"
+    # Bit-exact profile (sharded serving): shard ONLY leaves whose
+    # per-device math reproduces the single-device reduction order —
+    # output-dim (_COL) projections, the vocab axis of embed/lm_head, KV
+    # on the kv-head axis, and (under expert_parallel) the expert axis of
+    # MoE weights. Contraction-dim (_ROW) weights stay REPLICATED so GSPMD
+    # all-gathers activations (pure concatenation, bitwise safe) instead
+    # of psum-reducing partial matmuls (reduction-order drift). Trades
+    # per-chip FLOPs on the down-projections for stream bit-identity.
+    exact: bool = False
 
 
 def make_policy(cfg, mesh: Mesh, *, fsdp: Optional[bool] = None) -> ShardingPolicy:
@@ -56,6 +69,18 @@ def make_policy(cfg, mesh: Mesh, *, fsdp: Optional[bool] = None) -> ShardingPoli
         model_size=model_n,
         data_size=data_n,
     )
+
+
+def serving_policy(cfg, mesh: Mesh) -> ShardingPolicy:
+    """Policy for a sharded ``ServingEngine`` replica: the bit-exact
+    profile (see ``ShardingPolicy.exact``) with paged KV pools partitioned
+    over the kv-head axis. Page tables and allocator bookkeeping stay
+    host-side and layout-identical, so the paging/prefix/preemption stack
+    is topology-blind."""
+    import dataclasses as _dc
+
+    return _dc.replace(make_policy(cfg, mesh, fsdp=False),
+                       exact=True, kv_shard="kv_head")
 
 
 def _div(n: int, k: int) -> bool:
@@ -95,6 +120,26 @@ def _param_spec(names: Tuple[str, ...], shape: Tuple[int, ...],
         return P(*spec)
 
     core = shape[len(lead):]
+
+    if pol.exact:
+        # bit-exact profile: no contraction-dim sharding anywhere. _COL
+        # outputs and the embed/lm_head vocab axis shard (per-shard dots
+        # keep the full contraction, identical reduction order); MoE
+        # expert weights shard the expert axis under expert_parallel (the
+        # combine psum only ever adds a token's <=k nonzero expert terms
+        # plus exact zeros). Everything else replicates.
+        if name == "embed":
+            return out("model" if _div(core[0], m) else None, None)
+        if name in _COL or name in _ROW:
+            if len(core) == 3:  # MoE expert weights (E, d, ff)/(E, ff, d)
+                if pol.expert_parallel and _div(core[0], m):
+                    return out("model", None, None)
+                if name in _COL and _div(core[2], m):
+                    return out(None, None, "model")  # ff is an output dim
+                return out(None, None, None)  # w_down: ff is contracted
+            if len(core) == 2 and name in _COL and _div(core[1], m):
+                return out(None, "model")
+        return out(*([None] * len(core)))
 
     if name == "embed":
         v, dm = core
@@ -216,16 +261,24 @@ def cache_pspecs(cfg, cache_tree, pol: ShardingPolicy, mesh: Mesh):
         bs = _batch_dim_spec(core[0], pol, axes)
         spec = [None] * off + [bs] + [None] * (len(core) - 1)
         if name in ("k", "v"):
-            # (B, W, kv, hd): shard hd on model — or the sequence dim under
-            # the flash-decoding layout (perf lever "kv_seq")
-            if pol.kv_shard == "seq" and _div(core[1], m):
+            # (B, W, kv, hd): shard hd on model — the kv-head dim under
+            # the serving bit-exact profile (kv is a batch dim of the
+            # grouped-GQA einsums) — or the sequence dim under the
+            # flash-decoding layout (perf lever "kv_seq")
+            if pol.kv_shard == "kv_head" and _div(core[2], m):
+                spec[off + 2] = "model"
+            elif pol.kv_shard == "seq" and _div(core[1], m):
                 spec[off + 1] = "model"
-            elif _div(core[3], m):
+            elif pol.kv_shard == "hd" and _div(core[3], m):
                 spec[off + 3] = "model"
         elif name in ("k_scale", "v_scale"):
             # (B, W, kv): scales follow the W-dim layout of the int8 cache
             if pol.kv_shard == "seq" and _div(core[1], m):
                 spec[off + 1] = "model"
+            elif pol.kv_shard == "kv_head" and _div(core[2], m):
+                spec[off + 2] = "model"
+        elif pol.exact:
+            pass  # recurrent state/conv: replicated (scan psums reorder)
         elif name == "conv":
             if _div(core[-1], m):
                 spec[off + len(core) - 1] = "model"
@@ -234,6 +287,33 @@ def cache_pspecs(cfg, cache_tree, pol: ShardingPolicy, mesh: Mesh):
                 spec[off + 1] = "model"
             elif len(core) == 2 and _div(core[1], m):  # rglru (B, L)
                 spec[off + 1] = "model"
+        return P(*spec)
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return tdef.unflatten([spec_for(p, l) for p, l in flat])
+
+
+def paged_cache_pspecs(cfg, cache_tree, pol: ShardingPolicy, mesh: Mesh):
+    """Paged-KV cache layout: shared pools (P, page_size, kv, hd) shard
+    the kv-head dim over ``model`` (falling back to hd, then replication,
+    on divisibility); the page table and per-slot positions REPLICATE so
+    the host-side ``PageAllocator``/``PrefixIndex`` see a layout identical
+    to the single-device engine. Pool pages are never batch-sharded —
+    page ids are global, and any slot's table row must reach any page."""
+    m = pol.model_size
+
+    def spec_for(path, leaf):
+        names = _key_path_names(path)
+        name = names[-1]
+        shape = tuple(leaf.shape)
+        off = 1 if "body" in names else 0  # stacked pools: leading layer dim
+        core = shape[off:]
+        spec = [None] * len(shape)
+        if name in ("k", "v") and len(core) == 4:
+            if pol.kv_shard != "hd" and _div(core[2], m):
+                spec[off + 2] = "model"
+            elif _div(core[3], m):
+                spec[off + 3] = "model"
         return P(*spec)
 
     flat, tdef = jax.tree_util.tree_flatten_with_path(cache_tree)

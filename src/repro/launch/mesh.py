@@ -24,6 +24,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
-def make_local_mesh():
-    """1x1 mesh over the real local device (tests/examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"), **_axis_type_kwargs(2))
+def make_local_mesh(*, data: int = 1, model: int = 1):
+    """(data x model) mesh over the host's real local devices; the 1x1
+    default serves tests/examples. Requesting more devices than the host
+    exposes fails HERE with the fix in the message — previously this
+    surfaced as an opaque XLA device-assignment error at first trace."""
+    need = data * model
+    have = jax.local_device_count()
+    if need > have:
+        raise ValueError(
+            f"local mesh (data={data} x model={model}) needs {need} "
+            f"devices but this host exposes {have}; on CPU hosts set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need} in "
+            f"the environment before jax initializes, or shrink the "
+            f"requested topology")
+    return jax.make_mesh((data, model), ("data", "model"),
+                         **_axis_type_kwargs(2))
+
+
+def make_serving_mesh(topology):
+    """Mesh for one sharded ``ServingEngine`` replica
+    (``repro.serving.config.DeviceTopology``)."""
+    return make_local_mesh(data=topology.dp, model=topology.tp)

@@ -34,23 +34,31 @@ from repro.core.mimd.router import POLICIES
 from repro.models import init_params
 from repro.serving import (
     ClusterFrontend,
+    DeviceTopology,
+    EngineConfig,
     Request,
     SamplingParams,
     ServingEngine,
 )
 
 
+def _engine_config(args) -> EngineConfig:
+    return EngineConfig(slots=args.slots, window=args.window,
+                        sync_every=args.sync_every,
+                        chunk_prefill=args.chunk_prefill,
+                        sla_s=args.sla_ms / 1e3,
+                        paged=None if not args.no_paged else False,
+                        page_size=args.page_size,
+                        max_seq=args.max_seq or None,
+                        pool_pages=args.pool_pages or None,
+                        prefix_cache=args.prefix_cache,
+                        preemption=args.preemption,
+                        topology=DeviceTopology(dp=args.dp, tp=args.tp),
+                        moe_capacity_policy=args.moe_capacity or None)
+
+
 def _build_engine(cfg, params, args):
-    return ServingEngine(cfg, params, slots=args.slots, window=args.window,
-                         sync_every=args.sync_every,
-                         chunk_prefill=args.chunk_prefill,
-                         sla_s=args.sla_ms / 1e3,
-                         paged=None if not args.no_paged else False,
-                         page_size=args.page_size,
-                         max_seq=args.max_seq or None,
-                         pool_pages=args.pool_pages or None,
-                         prefix_cache=args.prefix_cache,
-                         preemption=args.preemption)
+    return ServingEngine(cfg, params, _engine_config(args))
 
 
 def main():
@@ -85,6 +93,18 @@ def main():
                     help="shared-prefix KV cache: keep finished prompts' "
                          "pages in a radix index; later requests alias "
                          "them and prefill only their suffix (paged only)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor/expert-parallel ways per replica (the "
+                         "mesh 'model' axis); needs tp*dp local devices — "
+                         "on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel ways per replica (the mesh 'data' "
+                         "axis)")
+    ap.add_argument("--moe-capacity", default="",
+                    choices=("", "strict", "backpressure", "drop"),
+                    help="MoE capacity-overflow policy; empty = strict on "
+                         "sharded MoE replicas, drop otherwise")
     ap.add_argument("--replicas", type=int, default=1,
                     help="ServingEngine replicas behind the cluster "
                          "frontend; 1 = single-engine path")
@@ -139,6 +159,13 @@ def main():
         print(f"paged KV: page_size={eng.page_size} max_seq={eng.max_seq} "
               f"pool={eng.pool_pages} pages "
               f"({eng.allocator.capacity} usable + trash)")
+    if eng.topology.sharded:
+        rep = eng.load_report()
+        print(f"sharded replica: mesh {dict(eng.topology.mesh_axes)} "
+              f"({eng.topology.n_chips} devices), per-axis collective "
+              f"s/tick {dict(rep.axis_collective_s)}"
+              + (f", moe_capacity_policy={eng.moe_capacity_policy}"
+                 if eng.moe_capacity_policy else ""))
 
     cluster = None
     if args.replicas > 1:

@@ -45,10 +45,37 @@ def init_moe(cfg, key, dtype):
     return p
 
 
-def _capacity(cfg, g: int) -> int:
+def _capacity(cfg, g: int, *, full: bool = False) -> int:
+    """Per-expert capacity slots for a token group of ``g``. ``full``
+    sizes the buffer to the whole group — no routing pattern can overflow
+    it (an expert receives at most one slot per token), so dropping is
+    impossible. Serving uses this for drop-free decode ("strict" capacity
+    policy): the decode group is the slot count, so the (N, g, E, C)
+    combine tensor stays tiny — unlike training, where C ~ g would square
+    the dispatch memory."""
+    if full:
+        return g
     e, k = cfg.num_experts, cfg.experts_per_token
     c = int(g * k * cfg.moe_capacity_factor / e) + 1
     return max(c, k)
+
+
+def drop_free_group(cfg, *, cap: int = 1 << 20) -> int:
+    """Largest token group that can NEVER drop a token under the
+    configured ``moe_capacity_factor``, even with adversarial routing
+    (every token picks the same expert, which then needs capacity >= g).
+    The serving engine's "backpressure" capacity policy clamps its decode
+    batch to this bound and rejects larger prefill groups — surfacing
+    capacity overflow as typed admission backpressure instead of silent
+    quality loss. Returns ``cap`` when the factor covers every group size
+    (k * capacity_factor >= E: capacity grows at least as fast as g)."""
+    e, k = cfg.num_experts, cfg.experts_per_token
+    if not e or k * cfg.moe_capacity_factor >= e:
+        return cap
+    g = 1
+    while g < cap and _capacity(cfg, g + 1) >= g + 1:
+        g += 1
+    return g
 
 
 def apply_moe(cfg, p, x, *, group_size: int = 2048):
@@ -60,7 +87,10 @@ def apply_moe(cfg, p, x, *, group_size: int = 2048):
     while t % g:
         g //= 2
     n_groups = t // g
-    c = _capacity(cfg, g)
+    # Serving engines with the "strict" capacity policy trace under the
+    # "moe_full_cap" hint: capacity covers the whole group, so decode can
+    # never silently drop a routed token (see _capacity).
+    c = _capacity(cfg, g, full=hint_opt("moe_full_cap"))
 
     # Perf lever "moe_pin" (EXPERIMENTS.md §Perf): GSPMD cannot propagate a
     # sharding through the cumsum/one_hot dispatch construction and

@@ -138,9 +138,11 @@ class EngineInstance(Instance):
             return 0.0
         eng = self.engine
         full = estimate_prefill(eng.cfg, 1, job.prompt_tokens,
-                                n_chips=eng.n_chips).latency_s
+                                n_chips=eng.n_chips,
+                                mesh_axes=eng.mesh_axes).latency_s
         rest = estimate_prefill(eng.cfg, 1, job.prompt_tokens,
                                 n_chips=eng.n_chips,
+                                mesh_axes=eng.mesh_axes,
                                 prefix_hit=hit).latency_s
         return max(0.0, full - rest)
 
@@ -157,9 +159,11 @@ class EngineInstance(Instance):
                if job.tokens is not None else 0)
         pre = estimate_prefill(eng.cfg, 1, job.prompt_tokens,
                                n_chips=eng.n_chips,
+                               mesh_axes=eng.mesh_axes,
                                prefix_hit=max(0, hit)).latency_s
         dec = estimate_decode(eng.cfg, 1, eng.window,
-                              n_chips=eng.n_chips).latency_s
+                              n_chips=eng.n_chips,
+                              mesh_axes=eng.mesh_axes).latency_s
         return pre + dec * max(0, job.new_tokens - 1)
 
     def predicted_completion(self, job: Job) -> float:
@@ -355,9 +359,11 @@ class ClusterFrontend:
             hit = eng.prefix_match_len(req.prompt)
             pre_s = estimate_prefill(eng.cfg, 1, max(1, req.prompt_len),
                                      n_chips=eng.n_chips,
+                                     mesh_axes=eng.mesh_axes,
                                      prefix_hit=hit).latency_s
             dec_s = estimate_decode(eng.cfg, 1, eng.window,
-                                    n_chips=eng.n_chips).latency_s
+                                    n_chips=eng.n_chips,
+                                    mesh_axes=eng.mesh_axes).latency_s
             req._pred_wait_s = base + pre_s
             req._pred_complete_s = (base + pre_s
                                     + dec_s * max(0, req.max_new_tokens - 1))
@@ -385,10 +391,13 @@ class ClusterFrontend:
         pool = self.router.pools[req.model]
         cfg = pool[0].engine.cfg
         n_chips = pool[0].engine.n_chips
+        mesh_axes = pool[0].engine.mesh_axes
         ctx = pool[0].engine.window
-        dec = estimate_decode(cfg, 1, ctx, n_chips=n_chips)
+        dec = estimate_decode(cfg, 1, ctx, n_chips=n_chips,
+                              mesh_axes=mesh_axes)
         pre_s = estimate_prefill(cfg, 1, max(1, req.prompt_len),
-                                 n_chips=n_chips).latency_s
+                                 n_chips=n_chips,
+                                 mesh_axes=mesh_axes).latency_s
         service = pre_s + dec.latency_s * max(0, req.max_new_tokens - 1)
         return Job(jid=req.rid, model=req.model, demand=dec.demand,
                    service_s=service, arrival=now, priority=req.priority,

@@ -1,0 +1,169 @@
+"""Engine configuration: ``DeviceTopology`` + the frozen ``EngineConfig``.
+
+``ServingEngine`` grew one keyword at a time (PRs 1-6) until call sites
+carried a dozen positional-ish knobs. ``EngineConfig`` collapses that
+sprawl into one frozen, hashable value object — the thing a cluster
+frontend can log, diff across replicas, and ship to a spawner. The
+``topology`` field is the new capability: a replica that spans an
+N-chip mesh (tensor/expert-parallel sharded serving) instead of one
+device. The 1-chip default is bit-identical to the pre-config engine.
+
+Legacy keyword construction (``ServingEngine(cfg, params, slots=4, ...)``)
+still works for one PR via ``EngineConfig.from_legacy_kwargs`` and emits a
+``DeprecationWarning``; construct with ``config=EngineConfig(...)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, fields
+from typing import Optional
+
+#: MoE capacity-overflow handling for the serving traces (moe archs only):
+#:   strict       — size the per-expert capacity to the full token group in
+#:                  every serving trace: token dropping is impossible (the
+#:                  decode group is the slot count, so this is cheap at
+#:                  serving batch sizes, unlike training).
+#:   backpressure — keep the configured ``moe_capacity_factor`` but refuse
+#:                  work that COULD drop: the slot count is clamped to the
+#:                  drop-free decode group and prompts whose prefill group
+#:                  exceeds it are rejected with a typed ``RequestRejected``
+#:                  (admission backpressure instead of silent quality loss).
+#:   drop         — GShard serving default: overflow tokens silently pass
+#:                  through the residual (the pre-config engine behavior).
+MOE_CAPACITY_POLICIES = ("strict", "backpressure", "drop")
+
+
+@dataclass(frozen=True)
+class DeviceTopology:
+    """Mesh shape ONE engine replica spans: ``dp`` data-parallel ways on
+    the ``data`` axis, ``tp`` tensor/expert-parallel ways on the ``model``
+    axis. The default (1, 1) is the single-chip engine. Cluster replicas
+    multiply OUTSIDE this: a 4-replica frontend over tp=8 replicas is 32
+    chips."""
+
+    dp: int = 1
+    tp: int = 1
+
+    def __post_init__(self):
+        if self.dp < 1 or self.tp < 1:
+            raise ValueError(
+                f"DeviceTopology axes must be >= 1 (got dp={self.dp}, "
+                f"tp={self.tp})")
+
+    @property
+    def n_chips(self) -> int:
+        return self.dp * self.tp
+
+    @property
+    def sharded(self) -> bool:
+        return self.n_chips > 1
+
+    @property
+    def mesh_axes(self) -> tuple:
+        """((axis_name, size), ...) — the wire/cost-model mesh shape."""
+        return (("data", self.dp), ("model", self.tp))
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Everything that shapes a ``ServingEngine`` besides (cfg, params).
+
+    Field semantics match the engine's former keywords one-for-one (see
+    ``ServingEngine``'s docstring); new fields:
+
+    ``topology``: device mesh this replica spans. >1 chip shards params,
+    paged KV pools (kv-head axis), and the prefill/decode traces over a
+    ``jax`` mesh; streams stay bit-identical to the 1-chip engine.
+    ``modeled_chips``: cost-model-only chip count override for telemetry
+    on heterogeneous simulated clusters (legacy ``n_chips=``); 0 means
+    "use topology.n_chips".
+    ``moe_capacity_policy``: see ``MOE_CAPACITY_POLICIES``; None resolves
+    to "strict" on sharded MoE replicas (expert-parallel decode must not
+    silently drop) and "drop" (legacy behavior) otherwise.
+    """
+
+    slots: Optional[int] = 4
+    window: int = 512
+    eos_id: int = -1
+    sync_every: int = 8
+    donate: bool = True
+    bucket_prompts: bool = True
+    chunk_prefill: int = 64
+    sla_s: float = 0.05
+    prefill_policy: Optional[object] = None  # ChunkedPrefillPolicy
+    paged: Optional[bool] = None
+    page_size: int = 16
+    pool_pages: Optional[int] = None
+    max_seq: Optional[int] = None
+    kv_hbm_budget: Optional[float] = None
+    expected_len: Optional[int] = None
+    edf_backlog: bool = False
+    prefix_cache: bool = False
+    preemption: bool = False
+    preempt_policy: str = "latest-deadline"
+    shed_overdue: bool = False
+    topology: DeviceTopology = DeviceTopology()
+    modeled_chips: int = 0
+    moe_capacity_policy: Optional[str] = None
+
+    def __post_init__(self):
+        if (self.moe_capacity_policy is not None
+                and self.moe_capacity_policy not in MOE_CAPACITY_POLICIES):
+            raise ValueError(
+                f"unknown moe_capacity_policy "
+                f"{self.moe_capacity_policy!r} (want one of "
+                f"{MOE_CAPACITY_POLICIES})")
+        if self.modeled_chips < 0:
+            raise ValueError(f"modeled_chips must be >= 0, got "
+                             f"{self.modeled_chips}")
+
+    @property
+    def n_chips(self) -> int:
+        """Chips the cost model bills this replica for."""
+        return self.modeled_chips or self.topology.n_chips
+
+    def validate(self) -> "EngineConfig":
+        """Fail fast — BEFORE any trace — when the requested topology
+        cannot be realized on this host, with the fix in the message
+        (an opaque XLA shape/device error at first trace otherwise)."""
+        need = self.topology.n_chips
+        if need > 1:
+            import jax
+
+            have = jax.local_device_count()
+            if need > have:
+                raise ValueError(
+                    f"EngineConfig.topology (dp={self.topology.dp} x "
+                    f"tp={self.topology.tp}) needs {need} devices but this "
+                    f"host exposes {have}; on CPU hosts set "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                    f"{need} in the environment before jax initializes, "
+                    f"or shrink the topology")
+        return self
+
+    def resolved_moe_policy(self, cfg) -> str:
+        """Capacity policy after the None default resolves against the
+        model arch and topology (see class docstring)."""
+        if self.moe_capacity_policy is not None:
+            return self.moe_capacity_policy
+        if cfg.arch_type == "moe" and self.topology.sharded:
+            return "strict"
+        return "drop"
+
+    @classmethod
+    def from_legacy_kwargs(cls, **kw) -> "EngineConfig":
+        """Map the pre-config ``ServingEngine`` keywords onto a config.
+        ``n_chips`` (a cost-model fiction for heterogeneous simulated
+        replicas) becomes ``modeled_chips``."""
+        if "n_chips" in kw:
+            kw["modeled_chips"] = kw.pop("n_chips")
+        known = {f.name for f in fields(cls)}
+        unknown = set(kw) - known
+        if unknown:
+            raise TypeError(
+                f"unknown ServingEngine/EngineConfig argument(s): "
+                f"{sorted(unknown)}")
+        return cls(**kw)
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)

@@ -37,8 +37,10 @@ All steps are pure jit functions; the executor is the only stateful part.
 """
 from __future__ import annotations
 
+import contextlib
 import math
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass
 from functools import partial
@@ -49,12 +51,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import (
+    collective_s_per_axis,
     estimate_backlog_s,
     estimate_decode,
     estimate_prefill,
 )
 from repro.core.misd.batching import BatchAccumulator, plan_admission
 from repro.core.misd.scheduler import ChunkedPrefillPolicy
+from repro.core.simd.sharding import (
+    cache_pspecs,
+    paged_cache_pspecs,
+    param_pspecs,
+    serving_policy,
+    to_shardings,
+)
+from repro.launch.mesh import make_serving_mesh
 from repro.models import (
     decode_step,
     forward,
@@ -65,6 +76,8 @@ from repro.models import (
 from repro.models.blocks import KV_CACHE_BLOCKS
 from repro.models.layers import sample_tokens
 from repro.models.model import block_program
+from repro.models.moe import drop_free_group
+from repro.serving.config import DeviceTopology, EngineConfig
 from repro.serving.paging import PageAllocator, PrefixHit, PrefixIndex
 from repro.serving.request import (
     Request,
@@ -73,6 +86,18 @@ from repro.serving.request import (
     SamplingParams,
     ServeMetrics,
 )
+from repro.serving.telemetry import LoadReport
+from repro.util import sharding_hints
+
+__all__ = [  # noqa: F822 — LoadReport/DeviceTopology re-exported for callers
+    "DeviceTopology", "EngineConfig", "LoadReport", "PREEMPT_POLICIES",
+    "ServingEngine", "bucketed_prefill_step", "cache_insert",
+    "decode_scan_step", "decode_tick", "generate", "init_sampling_state",
+    "page_table_append", "paged_prefill_step", "pages_insert",
+    "pages_insert_prefix", "prefill_chunk_step", "prefill_step",
+    "prefix_seed_cache", "prompt_bucket", "sampling_row", "sampling_set",
+    "serve_step", "slot_release",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -319,7 +344,8 @@ def sampling_set(samp, slot, row):
     return out
 
 
-def decode_tick(cfg, params, cache, tokens, samp=None):
+def decode_tick(cfg, params, cache, tokens, samp=None, *,
+                logits_sharding=None):
     """The engine's steady-state step: ``tokens`` (B,) is the device-resident
     last-token carry; (m)rope positions are built on device from the cache's
     ``pos`` leaf — no host round-trip. ``samp`` (optional) is the per-slot
@@ -327,7 +353,14 @@ def decode_tick(cfg, params, cache, tokens, samp=None):
     processed distribution with noise keyed by (seed, absolute position) —
     masked composition, so ONE trace serves any mix. Returns
     (next_tokens (B,), new_cache). Jitted with the cache donated: the KV
-    pytree updates in place."""
+    pytree updates in place.
+
+    ``logits_sharding``: sharded engines pass a replicated NamedSharding —
+    the lm-head output is vocab-sharded under tensor parallelism, and the
+    sampler's softmax/cumsum over a sharded vocab axis would reorder float
+    sums (argmax is comparator-exact, the distributions are not).
+    Constraining here inserts ONE all-gather (pure concatenation, bitwise
+    exact) so sharded streams stay bit-identical to the 1-chip engine."""
     batch = {"tokens": tokens[:, None]}
     if cfg.rope_variant == "mrope":
         b = tokens.shape[0]
@@ -335,6 +368,8 @@ def decode_tick(cfg, params, cache, tokens, samp=None):
             cache["pos"][None, :, None], (3, b, 1))
     logits, new_cache = decode_step(cfg, params, cache, batch)
     last = logits[:, -1]
+    if logits_sharding is not None:
+        last = jax.lax.with_sharding_constraint(last, logits_sharding)
     if samp is None:
         nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
     else:
@@ -345,7 +380,8 @@ def decode_tick(cfg, params, cache, tokens, samp=None):
     return nxt, new_cache
 
 
-def decode_scan_step(cfg, params, cache, tokens, samp=None, *, n: int):
+def decode_scan_step(cfg, params, cache, tokens, samp=None, *, n: int,
+                     logits_sharding=None):
     """``n`` fused decode ticks as one jitted ``lax.scan``: one dispatch and
     one host sync per ``n`` tokens instead of per token. The engine uses
     this whenever nothing interrupts the window (no pending admissions, no
@@ -358,7 +394,8 @@ def decode_scan_step(cfg, params, cache, tokens, samp=None, *, n: int):
 
     def body(carry, _):
         toks, c = carry
-        nxt, c = decode_tick(cfg, params, c, toks, samp)
+        nxt, c = decode_tick(cfg, params, c, toks, samp,
+                             logits_sharding=logits_sharding)
         return (nxt, c), nxt
 
     (toks, cache), hist = jax.lax.scan(body, (tokens, cache), None, length=n)
@@ -423,49 +460,6 @@ def _min_cache_window(cfg, window: int) -> int:
 def prompt_bucket(n: int, *, min_bucket: int = 16) -> int:
     """Power-of-two bucket for a prompt of ``n`` tokens."""
     return max(min_bucket, 1 << max(n - 1, 1).bit_length())
-
-
-@dataclass(frozen=True)
-class LoadReport:
-    """One engine's telemetry snapshot — the routing signal the cluster
-    frontend (repro.serving.cluster) consumes. Everything is host-side
-    bookkeeping: taking a report never syncs the device."""
-
-    slots: int
-    free_slots: int  # slots with no active or prefilling request
-    queued_requests: int  # backlog + admission-accumulator pending
-    queued_prefill_tokens: int  # prompt tokens not yet through prefill
-    decode_tokens_remaining: int  # unfinished token budgets, queued incl.
-    free_pages: int  # page pool headroom (-1: rolling cache, unpaged)
-    total_pages: int  # usable pool capacity (0 when unpaged)
-    backlog_s: float  # cost-model seconds to drain the outstanding work
-    tick_est_s: float  # cost-model latency of one batched decode tick
-    queued_prefill_s: float  # cost-model seconds for the queued prefills
-    # per-slot remaining token budgets of in-flight requests (prefilling
-    # slots count their budget plus pending chunk ticks), and the queued
-    # requests' budgets in the order the backlog will drain them — the
-    # inputs to the cluster's slot-availability simulation
-    active_remaining: tuple = ()
-    queued_budgets: tuple = ()
-    # --- prefix cache (0s when the index is off) ---
-    prefix_cached_pages: int = 0  # pages currently held by the index
-    prefix_cached_tokens: int = 0
-    prefix_hits: int = 0  # cumulative admissions served from the cache
-    prefix_hit_tokens: int = 0  # cumulative prompt tokens skipped
-    # --- lifecycle / fault tolerance (cumulative ServeMetrics mirrors;
-    # the cluster watchdog also reads report freshness as the replica's
-    # health signal) ---
-    rejected: int = 0
-    cancelled: int = 0
-    timed_out: int = 0
-    shed: int = 0
-    failed: int = 0
-    preempted: int = 0
-
-    @property
-    def saturated(self) -> bool:
-        """No slot free for an immediate admission."""
-        return self.free_slots <= 0
 
 
 @dataclass
@@ -570,29 +564,67 @@ class ServingEngine:
     zero between waves (use ``clear_prefix_cache()`` / ``reset()``).
     """
 
-    def __init__(self, cfg, params, *, slots: Optional[int] = 4,
-                 window: int = 512, eos_id: int = -1, sync_every: int = 8,
-                 donate: bool = True, bucket_prompts: bool = True,
-                 chunk_prefill: int = 64, sla_s: float = 0.05,
-                 n_chips: int = 1,
-                 prefill_policy: Optional[ChunkedPrefillPolicy] = None,
-                 paged: Optional[bool] = None, page_size: int = 16,
-                 pool_pages: Optional[int] = None,
-                 max_seq: Optional[int] = None,
-                 kv_hbm_budget: Optional[float] = None,
-                 expected_len: Optional[int] = None,
-                 edf_backlog: bool = False,
-                 prefix_cache: bool = False,
-                 preemption: bool = False,
-                 preempt_policy: str = "latest-deadline",
-                 shed_overdue: bool = False):
+    def __init__(self, cfg, params,
+                 config: Optional[EngineConfig] = None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError(
+                    "pass either config=EngineConfig(...) or legacy keyword "
+                    "arguments, not both")
+            warnings.warn(
+                "ServingEngine(cfg, params, slots=..., ...) keyword "
+                "construction is deprecated; build an EngineConfig and pass "
+                "ServingEngine(cfg, params, EngineConfig(...))",
+                DeprecationWarning, stacklevel=2)
+            config = EngineConfig.from_legacy_kwargs(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        config.validate()
+        self.config = config
+        self.topology = config.topology
+        # locals mirror the former keywords: the executor body predates the
+        # config object and reads these names throughout
+        slots, window = config.slots, config.window
+        eos_id, sync_every = config.eos_id, config.sync_every
+        donate, bucket_prompts = config.donate, config.bucket_prompts
+        chunk_prefill, sla_s = config.chunk_prefill, config.sla_s
+        prefill_policy, paged = config.prefill_policy, config.paged
+        page_size, pool_pages = config.page_size, config.pool_pages
+        max_seq, kv_hbm_budget = config.max_seq, config.kv_hbm_budget
+        expected_len, prefix_cache = config.expected_len, config.prefix_cache
+        preemption = config.preemption
+        preempt_policy = config.preempt_policy
+        shed_overdue = config.shed_overdue
+        n_chips = config.n_chips
+
         self.cfg = cfg
-        self.params = params
         self.n_chips = n_chips
+        # --- sharded replica: mesh + bit-exact GSPMD profile ---
+        # serving_policy shards only concat-dim weights (output dims, the
+        # vocab axis, MoE expert axis) and the KV pools' kv-head axis;
+        # GSPMD then all-gathers activations (pure concatenation) instead
+        # of psum-reducing partial products, so every reduction keeps the
+        # 1-chip operand order and streams stay bit-identical.
+        self.mesh = None
+        self._policy = None
+        self._replicated = None
+        self._logits_sharding = None
+        if self.topology.sharded:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            self.mesh = make_serving_mesh(self.topology)
+            self._policy = serving_policy(cfg, self.mesh)
+            params = jax.device_put(
+                params,
+                to_shardings(self.mesh,
+                             param_pspecs(cfg, params, self._policy)))
+            self._replicated = NamedSharding(self.mesh, PartitionSpec())
+            self._logits_sharding = self._replicated
+        self.params = params
         # EDF ordering of the admission backlog (earliest TTFT deadline
         # first); FIFO stays the default so single-trace probes and every
         # pre-cluster caller see identical admission order.
-        self.edf_backlog = edf_backlog
+        self.edf_backlog = config.edf_backlog
         if paged and not paged_ok(cfg):
             raise ValueError(
                 f"{cfg.name}: arch has non-pageable blocks (recurrent or "
@@ -609,11 +641,34 @@ class ServingEngine:
             mean_context=(expected_len or None) if self.paged else window)
         if not slots:
             slots = self.plan.slots
+        # --- MoE capacity policy (overflow as typed backpressure) ---
+        self.moe_capacity_policy = (config.resolved_moe_policy(cfg)
+                                    if cfg.arch_type == "moe" else "")
+        self._moe_gmax = 0  # drop-free group bound (backpressure only)
+        self._trace_ctx = contextlib.nullcontext
+        if self.moe_capacity_policy == "strict":
+            # every serving trace runs under the full-capacity hint: the
+            # (N, g, E, C) combine buffer covers the whole group, so no
+            # routing pattern can drop a token (see models.moe._capacity)
+            self._trace_ctx = partial(sharding_hints,
+                                      opts=frozenset({"moe_full_cap"}))
+        elif self.moe_capacity_policy == "backpressure":
+            self._moe_gmax = drop_free_group(cfg)
+            # the decode group IS the slot count (garbage lanes route too):
+            # clamping here makes every decode tick provably drop-free
+            slots = min(slots, self._moe_gmax)
         self.slots = slots
         self.window = window
-        # cost-model latency of one batched decode tick (load_report)
-        self._tick_est_s = estimate_decode(cfg, slots, window,
-                                           n_chips=n_chips).latency_s
+        # cost-model latency of one batched decode tick (load_report);
+        # sharded replicas bill per-axis collective time on top
+        self._mesh_axes = (self.topology.mesh_axes
+                           if self.topology.sharded else None)
+        self._tick_est_s = estimate_decode(
+            cfg, slots, window, n_chips=n_chips,
+            mesh_axes=self._mesh_axes).latency_s
+        self._axis_collective_s = (
+            collective_s_per_axis(cfg, slots, mesh_axes=self._mesh_axes)
+            if self._mesh_axes else {})
         self.eos_id = eos_id
         self.sync_every = 1 if eos_id >= 0 else max(1, sync_every)
         self.metrics = ServeMetrics()
@@ -665,15 +720,29 @@ class ServingEngine:
         else:
             self.prefix_index = None
             self.cache = init_cache(cfg, slots, window)
+        if self.mesh is not None:
+            # KV pools shard over the kv-head axis; the page table, pos,
+            # and recurrent/conv leaves replicate — host-side layouts
+            # (PageAllocator / PrefixIndex / preemption snapshots) stay
+            # identical to the 1-chip engine
+            pfn = paged_cache_pspecs if self.paged else cache_pspecs
+            self.cache = jax.device_put(
+                self.cache,
+                to_shardings(self.mesh,
+                             pfn(cfg, self.cache, self._policy, self.mesh)))
         # staged prefix-hit admission plans, keyed by slot (consumed at
         # activation; see _HitAdmission)
         self._hit_pending: Dict[int, _HitAdmission] = {}
         self._tokens = jnp.zeros((slots,), jnp.int32)
+        if self.mesh is not None:
+            self._tokens = jax.device_put(self._tokens, self._replicated)
         # per-slot sampling state rides next to the token carry: scattered
         # at activation, reset to greedy on release (so a vacated slot's
         # garbage lane never re-enters the stochastic branch); the host
         # mirror of the greedy flags makes release a no-op for greedy slots
         self._samp = init_sampling_state(slots)
+        if self.mesh is not None:
+            self._samp = jax.device_put(self._samp, self._replicated)
         self._samp_greedy_h: List[bool] = [True] * slots
         self.active: List[Optional[Request]] = [None] * slots
         self.decoding: List[bool] = [False] * slots
@@ -691,34 +760,61 @@ class ServingEngine:
         self.decode_traces = 0
         donate_cache = (1,) if donate else ()
 
+        # every model-forward trace runs under self._trace_ctx (the MoE
+        # "strict" capacity hint; a no-op otherwise) — the hint is read at
+        # TRACE time, and these closures are per-engine, so the contextvar
+        # scope is safe
         def _probed_decode(params, cache, tokens, samp):
             self.decode_traces += 1
-            return decode_tick(cfg, params, cache, tokens, samp)
+            with self._trace_ctx():
+                return decode_tick(cfg, params, cache, tokens, samp,
+                                   logits_sharding=self._logits_sharding)
 
         def _probed_scan(params, cache, tokens, samp):
             self.decode_traces += 1
-            return decode_scan_step(cfg, params, cache, tokens, samp,
-                                    n=self.sync_every)
+            with self._trace_ctx():
+                return decode_scan_step(
+                    cfg, params, cache, tokens, samp, n=self.sync_every,
+                    logits_sharding=self._logits_sharding)
 
         def _probed_bucketed(params, batch, true_len):
             self.prefill_traces += 1
-            return bucketed_prefill_step(cfg, params, batch, true_len,
-                                         window=window)
+            with self._trace_ctx():
+                return bucketed_prefill_step(cfg, params, batch, true_len,
+                                             window=window)
 
         def _probed_exact(params, batch):
             self.prefill_traces += 1
-            return prefill_step(cfg, params, batch, window=window)
+            with self._trace_ctx():
+                return prefill_step(cfg, params, batch, window=window)
 
         def _probed_paged_prefill(params, batch, true_len):
             self.prefill_traces += 1
-            return paged_prefill_step(cfg, params, batch, true_len)
+            with self._trace_ctx():
+                return paged_prefill_step(cfg, params, batch, true_len)
 
         def _probed_suffix(params, cache, tokens, true_len):
             # suffix-offset prefill over a seeded linear cache: retraces
             # once per SUFFIX bucket width (cache width is always
             # max_seq), never per hit length — start/true_len are traced
             self.prefill_traces += 1
-            return prefill_chunk_step(cfg, params, cache, tokens, true_len)
+            with self._trace_ctx():
+                return prefill_chunk_step(cfg, params, cache, tokens,
+                                          true_len)
+
+        def _chunk_step(params, cache, tokens, true_len):
+            with self._trace_ctx():
+                return prefill_chunk_step(cfg, params, cache, tokens,
+                                          true_len)
+
+        def _first_token(logits, samp1, pos):
+            # prefill logits are vocab-sharded under TP; replicate before
+            # the stochastic draw (see decode_tick's logits_sharding)
+            if self._logits_sharding is not None:
+                logits = jax.lax.with_sharding_constraint(
+                    logits, self._logits_sharding)
+            with self._trace_ctx():
+                return sample_tokens(logits, samp1, pos)
 
         donate0 = (0,) if donate else ()
         self._decode = jax.jit(_probed_decode, donate_argnums=donate_cache)
@@ -727,8 +823,7 @@ class ServingEngine:
         self._prefill_exact = jax.jit(_probed_exact)
         self._prefill_paged = jax.jit(_probed_paged_prefill)
         self._prefill_chunk = jax.jit(
-            partial(prefill_chunk_step, cfg),
-            donate_argnums=(1,) if donate else ())
+            _chunk_step, donate_argnums=(1,) if donate else ())
         self._insert = jax.jit(
             partial(cache_insert, batch=slots),
             donate_argnums=donate0)
@@ -748,8 +843,7 @@ class ServingEngine:
         # B=1 sampler trace for every sampled request's FIRST token (the
         # decode ticks sample in-trace — see decode_tick)
         self._samp_set = jax.jit(sampling_set, donate_argnums=donate0)
-        self._sample_first = jax.jit(
-            lambda logits, samp1, pos: sample_tokens(logits, samp1, pos))
+        self._sample_first = jax.jit(_first_token)
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request, now: float) -> bool:
@@ -901,6 +995,21 @@ class ServingEngine:
             raise RequestRejected(
                 f"prompt of {req.prompt_len} tokens exceeds max_seq="
                 f"{self.max_seq}; raise ServingEngine(max_seq=...)")
+        if self._moe_gmax and self._moe_prefill_group(req) > self._moe_gmax:
+            raise RequestRejected(
+                f"prefill group of {self._moe_prefill_group(req)} tokens "
+                f"exceeds the drop-free MoE bound {self._moe_gmax} "
+                f"(capacity_factor={self.cfg.moe_capacity_factor}): routing "
+                f"could silently drop tokens; raise moe_capacity_factor, "
+                f"use moe_capacity_policy='strict', or shorten the prompt")
+
+    def _moe_prefill_group(self, req: Request) -> int:
+        """Upper bound on the MoE routing group a prefill of ``req`` can
+        see: chunked prefill routes one chunk at a time, single-shot
+        prefill routes the padded prompt (``apply_moe`` caps groups at
+        2048 and only ever SHRINKS to divide the token count)."""
+        g = self.chunk if self._chunkable(req) else self._prefill_len(req)
+        return min(2048, g)
 
     def _chunkable(self, req: Request) -> bool:
         cap = self.max_seq if self.paged else self._min_window
@@ -1089,6 +1198,18 @@ class ServingEngine:
                                                  np.int32(plen))
         self._activate(req, slot, tok, last, cache1, now)
 
+    def _put_linear(self, cache1):
+        """Commit a host-built B=1 linear cache to the replica mesh (KV
+        sharded over kv heads, like every other cache); identity on 1-chip
+        engines. Keeps chunked-prefill working buffers from pinning a
+        replicated copy on every device."""
+        if self.mesh is None:
+            return cache1
+        return jax.device_put(
+            cache1,
+            to_shardings(self.mesh, cache_pspecs(self.cfg, cache1,
+                                                 self._policy, self.mesh)))
+
     def _start_chunked(self, req: Request, slot: int):
         padded_len = self._prefill_len(req)
         padded = np.zeros((1, padded_len), np.int32)
@@ -1099,7 +1220,7 @@ class ServingEngine:
         buf = self.max_seq if self.paged else self.window
         self._jobs.append(_PrefillJob(
             req=req, slot=slot,
-            cache=init_cache(self.cfg, 1, buf),
+            cache=self._put_linear(init_cache(self.cfg, 1, buf)),
             tokens=jnp.asarray(padded),
             true_len=np.int32(req.prompt_len)))
         req.state = RequestState.PREFILL
@@ -1540,14 +1661,18 @@ class ServingEngine:
                       for j in self._jobs)
         dec_rem = sum(remaining) + sum(r.max_new_tokens for r in queued)
         pre_s = (estimate_prefill(self.cfg, 1, q_pref,
-                                  n_chips=self.n_chips).latency_s
+                                  n_chips=self.n_chips,
+                                  mesh_axes=self._mesh_axes).latency_s
                  if q_pref > 0 else 0.0)
         # backlog_s = prefill term (computed once, above) + decode term
         dec_s = estimate_backlog_s(
             self.cfg, queued_prefill_tokens=0,
             decode_tokens_remaining=dec_rem, slots=self.slots,
-            context=self.window, n_chips=self.n_chips)
+            context=self.window, n_chips=self.n_chips,
+            mesh_axes=self._mesh_axes)
         idx = self.prefix_index
+        tick = self._tick_est_s
+        axis_cs = tuple(sorted(self._axis_collective_s.items()))
         return LoadReport(
             slots=self.slots,
             free_slots=sum(r is None for r in self.active),
@@ -1570,7 +1695,19 @@ class ServingEngine:
             timed_out=self.metrics.timed_out,
             shed=self.metrics.shed,
             failed=self.metrics.failed,
-            preempted=self.metrics.preempted)
+            preempted=self.metrics.preempted,
+            mesh_axes=self.topology.mesh_axes,
+            axis_collective_s=axis_cs,
+            axis_util=tuple((a, s / tick if tick > 0 else 0.0)
+                            for a, s in axis_cs),
+            moe_capacity_policy=self.moe_capacity_policy,
+            moe_drop_free_group=self._moe_gmax)
+
+    @property
+    def mesh_axes(self):
+        """((name, size), ...) of a sharded replica's mesh, None on 1-chip
+        engines — the cost-model key for collective-aware estimates."""
+        return self._mesh_axes
 
     @property
     def idle(self) -> bool:
@@ -1599,7 +1736,7 @@ def generate(cfg, params, prompt: np.ndarray, max_new_tokens: int,
              *, window: int = 512,
              sampling: Optional[SamplingParams] = None) -> List[int]:
     """Simple single-request generation helper (examples/quickstart)."""
-    eng = ServingEngine(cfg, params, slots=1, window=window)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=window))
     req = Request(rid=0, prompt=prompt, max_new_tokens=max_new_tokens,
                   sampling=sampling or SamplingParams())
     assert eng.try_admit(req, now=0.0)

@@ -1,0 +1,117 @@
+"""Typed, versioned engine telemetry.
+
+``LoadReport`` is the contract between one ``ServingEngine`` replica and
+everything that watches it: the cluster router's predicted-completion
+simulation, the autoscaler, the health watchdog, the chaos harness, and
+the benches' JSON artifacts. It is versioned (``schema_version``) with a
+``to_dict``/``from_dict`` wire shape so reports can cross process
+boundaries (future cross-engine KV migration) without pickling.
+
+Schema history:
+  v1 — PR 3-6 implicit shape (slots/pages/backlog/lifecycle counters).
+  v2 — this PR: explicit ``schema_version``; per-mesh-axis fields
+       (``mesh_axes``, ``axis_collective_s``, ``axis_util``) so the
+       router understands an n-chip sharded replica; MoE capacity-policy
+       fields.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, fields
+
+SCHEMA_VERSION = 2
+
+#: tuple-of-tuples fields that serialize as lists (JSON has no tuples)
+_TUPLE_FIELDS = ("active_remaining", "queued_budgets", "mesh_axes",
+                 "axis_collective_s", "axis_util")
+
+
+@dataclass(frozen=True)
+class LoadReport:
+    """One engine's telemetry snapshot — the routing signal the cluster
+    frontend (repro.serving.cluster) consumes. Everything is host-side
+    bookkeeping: taking a report never syncs the device."""
+
+    slots: int
+    free_slots: int  # slots with no active or prefilling request
+    queued_requests: int  # backlog + admission-accumulator pending
+    queued_prefill_tokens: int  # prompt tokens not yet through prefill
+    decode_tokens_remaining: int  # unfinished token budgets, queued incl.
+    free_pages: int  # page pool headroom (-1: rolling cache, unpaged)
+    total_pages: int  # usable pool capacity (0 when unpaged)
+    backlog_s: float  # cost-model seconds to drain the outstanding work
+    tick_est_s: float  # cost-model latency of one batched decode tick
+    queued_prefill_s: float  # cost-model seconds for the queued prefills
+    # per-slot remaining token budgets of in-flight requests (prefilling
+    # slots count their budget plus pending chunk ticks), and the queued
+    # requests' budgets in the order the backlog will drain them — the
+    # inputs to the cluster's slot-availability simulation
+    active_remaining: tuple = ()
+    queued_budgets: tuple = ()
+    # --- prefix cache (0s when the index is off) ---
+    prefix_cached_pages: int = 0  # pages currently held by the index
+    prefix_cached_tokens: int = 0
+    prefix_hits: int = 0  # cumulative admissions served from the cache
+    prefix_hit_tokens: int = 0  # cumulative prompt tokens skipped
+    # --- lifecycle / fault tolerance (cumulative ServeMetrics mirrors;
+    # the cluster watchdog also reads report freshness as the replica's
+    # health signal) ---
+    rejected: int = 0
+    cancelled: int = 0
+    timed_out: int = 0
+    shed: int = 0
+    failed: int = 0
+    preempted: int = 0
+    # --- v2: sharded-replica shape (1-chip default) ---
+    schema_version: int = SCHEMA_VERSION
+    # ((axis, size), ...): the device mesh this replica spans
+    mesh_axes: tuple = (("data", 1), ("model", 1))
+    # ((axis, seconds), ...): modeled per-axis collective time inside one
+    # full-batch decode tick (all-reduce/all-gather on "model", expert
+    # all-to-all folded into "model" for TPxEP meshes)
+    axis_collective_s: tuple = ()
+    # ((axis, fraction), ...): axis_collective_s / tick_est_s — how much of
+    # a tick the replica spends moving bytes over each mesh axis; the
+    # router's sharding-overhead signal
+    axis_util: tuple = ()
+    # --- v2: MoE capacity policy (empty/0 for dense archs) ---
+    moe_capacity_policy: str = ""
+    moe_drop_free_group: int = 0  # largest never-dropping token group
+
+    @property
+    def saturated(self) -> bool:
+        """No slot free for an immediate admission."""
+        return self.free_slots <= 0
+
+    @property
+    def n_chips(self) -> int:
+        n = 1
+        for _, size in self.mesh_axes:
+            n *= int(size)
+        return n
+
+    # -- wire shape --------------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-safe dict (tuples -> lists), carrying ``schema_version``."""
+        d = asdict(self)
+        for k in _TUPLE_FIELDS:
+            d[k] = [list(x) if isinstance(x, tuple) else x for x in d[k]]
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LoadReport":
+        """Inverse of ``to_dict``. Accepts schema v1 (no version field /
+        missing v2 fields default) and v2; rejects reports from a FUTURE
+        schema instead of silently mis-reading them."""
+        version = int(d.get("schema_version", 1))
+        if version > SCHEMA_VERSION:
+            raise ValueError(
+                f"LoadReport schema v{version} is newer than this "
+                f"reader (v{SCHEMA_VERSION}); upgrade the consumer")
+        known = {f.name for f in fields(cls)}
+        kw = {k: v for k, v in d.items() if k in known}
+        for k in _TUPLE_FIELDS:
+            if k in kw:
+                kw[k] = tuple(tuple(x) if isinstance(x, list) else x
+                              for x in kw[k])
+        kw["schema_version"] = SCHEMA_VERSION
+        return cls(**kw)

@@ -3,25 +3,37 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# ---------------------------------------------------------------------------
+# CI config-matrix knobs (ISSUE 5 + ISSUE 7 satellites): the same tier-1
+# suite runs under {paged, rolling, prefix_cache} x {greedy, sampled} x
+# {1-chip, tp8} engine configurations so a regression confined to one
+# configuration cannot hide behind the default. Tests that build engines
+# through ``make_engine`` / requests through ``make_request`` pick the
+# matrix cell up from the environment; explicit kwargs always win, so tests
+# pinning a specific configuration (e.g. the paged-vs-rolling A/Bs) are
+# unaffected by the knob.
+#
+# REPRO_ENGINE_TOPOLOGY=tp8 runs every make_engine engine as ONE 8-way
+# tensor/expert-parallel replica. The XLA host-device flag must be in place
+# before jax initializes its backend, which is why it is injected HERE —
+# conftest imports before any test module touches jax.
+# ---------------------------------------------------------------------------
+
+ENGINE_CACHE = os.environ.get("REPRO_ENGINE_CACHE", "")  # ""|paged|rolling|prefix_cache
+ENGINE_SAMPLING = os.environ.get("REPRO_ENGINE_SAMPLING", "")  # ""|greedy|sampled
+ENGINE_TOPOLOGY = os.environ.get("REPRO_ENGINE_TOPOLOGY", "")  # ""|tp8
+
+if ENGINE_TOPOLOGY == "tp8":
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ASSIGNED_ARCHS, get_config
-
-# ---------------------------------------------------------------------------
-# CI config-matrix knob (ISSUE 5 satellite): the same tier-1 suite runs under
-# {paged, rolling, prefix_cache} x {greedy, sampled} engine configurations so
-# a regression confined to one configuration cannot hide behind the default.
-# Tests that build engines through ``make_engine`` / requests through
-# ``make_request`` pick the matrix cell up from the environment; explicit
-# kwargs always win, so tests pinning a specific configuration (e.g. the
-# paged-vs-rolling A/Bs) are unaffected by the knob.
-# ---------------------------------------------------------------------------
-
-ENGINE_CACHE = os.environ.get("REPRO_ENGINE_CACHE", "")  # ""|paged|rolling|prefix_cache
-ENGINE_SAMPLING = os.environ.get("REPRO_ENGINE_SAMPLING", "")  # ""|greedy|sampled
 
 
 def engine_overrides(cfg) -> dict:
@@ -37,6 +49,14 @@ def engine_overrides(cfg) -> dict:
         kw["paged"] = True
     elif ENGINE_CACHE == "prefix_cache" and paged_ok(cfg):
         kw["prefix_cache"] = True
+    if ENGINE_TOPOLOGY == "tp8":
+        from repro.serving import DeviceTopology
+
+        kw["topology"] = DeviceTopology(tp=8)
+        # pin the legacy capacity behavior: the suite's engine-vs-forward
+        # oracle comparisons must see the exact same MoE capacity dims
+        # (the sharded-MoE "strict" default would change reduction tiling)
+        kw["moe_capacity_policy"] = "drop"
     return kw
 
 
@@ -54,10 +74,14 @@ def matrix_sampling(rid: int = 0):
 
 
 def make_engine(cfg, params, **kw):
-    """ServingEngine honoring the matrix cell; explicit kwargs win."""
-    from repro.serving import ServingEngine
+    """ServingEngine honoring the matrix cell; explicit kwargs win. Built
+    through ``EngineConfig`` (the post-redesign construction path), so the
+    whole suite exercises it."""
+    from repro.serving import EngineConfig, ServingEngine
 
-    return ServingEngine(cfg, params, **{**engine_overrides(cfg), **kw})
+    merged = {**engine_overrides(cfg), **kw}
+    return ServingEngine(cfg, params,
+                         EngineConfig.from_legacy_kwargs(**merged))
 
 
 def make_request(rid, prompt, max_new_tokens, **kw):

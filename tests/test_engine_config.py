@@ -1,0 +1,204 @@
+"""EngineConfig / DeviceTopology / typed LoadReport: the redesigned
+construction + telemetry API. These run in every matrix cell (no extra
+devices needed) — the sharded execution paths live in test_sharded.py."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from conftest import make_engine
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.models.moe import drop_free_group
+from repro.serving import (
+    DeviceTopology,
+    EngineConfig,
+    LoadReport,
+    Request,
+    RequestRejected,
+    SCHEMA_VERSION,
+    ServingEngine,
+)
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 500, n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig value object
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_frozen_hashable_value():
+    a = EngineConfig(slots=2, window=64)
+    b = EngineConfig(slots=2, window=64)
+    assert a == b and hash(a) == hash(b)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.slots = 3
+    assert a.replace(slots=3).slots == 3 and a.slots == 2
+
+
+def test_topology_defaults_and_validation():
+    t = DeviceTopology()
+    assert t.n_chips == 1 and not t.sharded
+    assert t.mesh_axes == (("data", 1), ("model", 1))
+    assert DeviceTopology(tp=8).n_chips == 8
+    with pytest.raises(ValueError, match="axes must be >= 1"):
+        DeviceTopology(tp=0)
+
+
+def test_engine_config_rejects_bad_policy():
+    with pytest.raises(ValueError, match="moe_capacity_policy"):
+        EngineConfig(moe_capacity_policy="bogus")
+
+
+def test_from_legacy_kwargs_maps_n_chips_and_rejects_unknown():
+    c = EngineConfig.from_legacy_kwargs(slots=2, n_chips=4)
+    assert c.modeled_chips == 4 and c.n_chips == 4
+    assert c.topology == DeviceTopology()  # modeled chips are a fiction
+    with pytest.raises(TypeError, match="n_slots"):
+        EngineConfig.from_legacy_kwargs(n_slots=2)
+
+
+def test_validate_names_xla_flags_fix():
+    """An unrealizable topology must fail at validate() time with the
+    XLA_FLAGS fix in the message, not at first trace."""
+    need = jax.local_device_count() * 8  # always more than the host has
+    with pytest.raises(ValueError) as ei:
+        EngineConfig(topology=DeviceTopology(tp=need)).validate()
+    msg = str(ei.value)
+    assert f"--xla_force_host_platform_device_count={need}" in msg
+    # a realizable topology validates to itself (chainable)
+    c = EngineConfig(slots=1)
+    assert c.validate() is c
+
+
+def test_legacy_kwargs_shim_deprecation(granite):
+    """ServingEngine(cfg, params, slots=...) still works for one PR but
+    warns; mixing it with config= is an error."""
+    cfg, params = granite
+    with pytest.warns(DeprecationWarning, match="EngineConfig"):
+        eng = ServingEngine(cfg, params, slots=2, window=64)
+    assert eng.slots == 2 and eng.window == 64
+    with pytest.raises(TypeError, match="not both"):
+        ServingEngine(cfg, params, EngineConfig(slots=2, window=64),
+                      slots=2)
+
+
+def test_resolved_moe_policy_defaults():
+    moe = get_config("grok-1-314b").reduced()
+    dense = get_config("granite-8b").reduced()
+    c = EngineConfig()
+    assert c.resolved_moe_policy(moe) == "drop"  # 1-chip legacy default
+    sharded = EngineConfig(topology=DeviceTopology(tp=8))
+    assert sharded.resolved_moe_policy(moe) == "strict"
+    assert sharded.resolved_moe_policy(dense) == "drop"
+    pinned = EngineConfig(moe_capacity_policy="backpressure")
+    assert pinned.resolved_moe_policy(moe) == "backpressure"
+
+
+# ---------------------------------------------------------------------------
+# typed LoadReport wire shape
+# ---------------------------------------------------------------------------
+
+
+def test_load_report_round_trip(granite):
+    cfg, params = granite
+    eng = make_engine(cfg, params, slots=2, window=64)
+    assert eng.try_admit(Request(rid=0, prompt=_prompt(8),
+                                 max_new_tokens=4), 0.0)
+    rep = eng.load_report()
+    assert rep.schema_version == SCHEMA_VERSION
+    d = rep.to_dict()
+    assert isinstance(d["mesh_axes"], list)  # JSON-safe: no tuples
+    assert LoadReport.from_dict(d) == rep
+    import json
+    assert LoadReport.from_dict(json.loads(json.dumps(d))) == rep
+
+
+def test_load_report_v1_compat_and_future_rejection():
+    v1 = {"slots": 4, "free_slots": 4, "queued_requests": 0,
+          "queued_prefill_tokens": 0, "decode_tokens_remaining": 0,
+          "free_pages": -1, "total_pages": 0, "backlog_s": 0.0,
+          "tick_est_s": 0.01, "queued_prefill_s": 0.0}
+    rep = LoadReport.from_dict(v1)  # no schema_version field = v1
+    assert rep.schema_version == SCHEMA_VERSION  # stamped on upgrade
+    assert rep.n_chips == 1 and rep.mesh_axes == (("data", 1), ("model", 1))
+    assert rep.moe_capacity_policy == ""
+    with pytest.raises(ValueError, match="newer than this reader"):
+        LoadReport.from_dict({**v1, "schema_version": SCHEMA_VERSION + 1})
+
+
+def test_load_report_n_chips_follows_mesh(granite):
+    cfg, params = granite
+    eng = make_engine(cfg, params, slots=2, window=64)
+    rep = eng.load_report()
+    assert rep.n_chips == eng.topology.n_chips
+    assert rep.mesh_axes == eng.topology.mesh_axes
+
+
+# ---------------------------------------------------------------------------
+# MoE capacity backpressure (typed admission rejection; 1-chip)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tight_moe():
+    """A capacity factor low enough that only tiny token groups are
+    provably drop-free (k * factor < E)."""
+    cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                              moe_capacity_factor=1.0)
+    return cfg, init_params(cfg, jax.random.key(1))
+
+
+def test_backpressure_clamps_slots_and_rejects_typed(tight_moe):
+    cfg, params = tight_moe
+    gmax = drop_free_group(cfg)
+    assert gmax < 16  # the fixture really is tight
+    eng = make_engine(cfg, params, slots=8, window=64, chunk_prefill=0,
+                      moe_capacity_policy="backpressure")
+    assert eng.slots <= gmax  # decode group provably drop-free
+    big = Request(rid=0, prompt=_prompt(32), max_new_tokens=2)
+    with pytest.raises(RequestRejected, match="drop-free"):
+        eng.try_admit(big, 0.0)
+    # submit() surfaces the same thing as a typed FAILED outcome
+    big2 = Request(rid=1, prompt=_prompt(32), max_new_tokens=2)
+    assert eng.submit(big2, 0.0) is False
+    assert "drop-free" in big2.fail_reason
+    assert eng.metrics.rejected == 1
+    rep = eng.load_report()
+    assert rep.moe_capacity_policy == "backpressure"
+    assert rep.moe_drop_free_group == gmax
+
+
+def test_strict_policy_serves_any_prompt(tight_moe):
+    """strict sizes capacity to the group: the same prompt backpressure
+    rejects decodes fine, and the stream completes."""
+    cfg, params = tight_moe
+    eng = make_engine(cfg, params, slots=2, window=64, chunk_prefill=0,
+                      moe_capacity_policy="strict")
+    req = Request(rid=0, prompt=_prompt(32), max_new_tokens=4)
+    assert eng.try_admit(req, 0.0)
+    t = 0.0
+    while not req.done:
+        t += 1.0
+        eng.step(t)
+    assert len(req.output) == 4
+    assert eng.load_report().moe_capacity_policy == "strict"
+
+
+def test_dense_arch_ignores_capacity_policy(granite):
+    cfg, params = granite
+    eng = make_engine(cfg, params, slots=2, window=64,
+                      moe_capacity_policy="backpressure")
+    assert eng.moe_capacity_policy == ""  # dense: no MoE capacity to police
+    assert eng.load_report().moe_drop_free_group == 0

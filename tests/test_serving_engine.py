@@ -260,8 +260,11 @@ def test_adaptive_slot_plan(granite):
     from repro.core.misd.batching import plan_admission
 
     cfg, params = granite
-    plan = plan_admission(cfg, context=128, sla_s=0.05)
     eng = make_engine(cfg, params, slots=0, window=128, sla_s=0.05)
+    # oracle plans with the engine's own chip count, so the tp8 matrix
+    # cell (an 8-way replica plans bigger batches) validates too
+    plan = plan_admission(cfg, context=128, sla_s=0.05,
+                          n_chips=eng.config.n_chips)
     assert eng.slots == plan.slots > 0
     assert eng.admission.deadline_s == plan.flush_deadline_s > 0
 
