@@ -4,6 +4,7 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 .PHONY: test lint bench bench-smoke bench-cluster bench-cluster-smoke \
 	bench-prefix bench-prefix-smoke bench-sampling bench-sampling-smoke \
 	bench-chaos bench-chaos-smoke bench-sharded bench-sharded-smoke \
+	bench-observability bench-observability-smoke trace-demo \
 	serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
@@ -69,6 +70,23 @@ bench-sharded:
 # growth under the mesh, page leaks, or MoE expert-parallel divergence
 bench-sharded-smoke:
 	$(PY) benchmarks/sharded_bench.py --smoke
+
+# observability layer A/B: histogram-percentile parity, trace lifecycle
+# accounting, bit-identity, tracing overhead -> BENCH_observability.json
+bench-observability:
+	$(PY) benchmarks/observability_bench.py
+
+# CI gate: fails on percentile drift past one bucket, malformed or
+# incomplete span traces, stream divergence with tracing on, or tracing
+# overhead past the noise-tolerant 0.90 bound (acceptance: 0.97 full)
+bench-observability-smoke:
+	$(PY) benchmarks/observability_bench.py --smoke
+
+# viewable trace artifact: a small chaos run (kill/hang/slow + churn)
+# exported as TRACE_chaos.json — open it in https://ui.perfetto.dev
+trace-demo:
+	$(PY) benchmarks/chaos_bench.py --requests 24 \
+		--trace-out TRACE_chaos.json --out ""
 
 # wall-clock microbenchmarks of the jitted steps
 micro:

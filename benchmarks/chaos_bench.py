@@ -70,6 +70,11 @@ from repro.serving import (
     SamplingParams,
     ServingEngine,
 )
+from repro.serving.trace_export import (
+    request_traces,
+    validate_chrome_trace,
+    write_chrome_trace,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -145,9 +150,11 @@ def drive(server, reqs, *, injector=None, dt: float = 1.0,
 
 def build_proxies(cfg, params, *, replicas, slots, window, max_seq,
                   sync_every, tick_s):
+    # tracing on: the chaos run doubles as the repo's trace-demo source
+    # (virtual-time drive, so stamping cost is invisible here anyway)
     return [FaultyEngine(ServingEngine(cfg, params, EngineConfig(
                 slots=slots, window=window, max_seq=max_seq,
-                sync_every=sync_every, sla_s=4.0 * tick_s)))
+                sync_every=sync_every, sla_s=4.0 * tick_s, tracing=True)))
             for _ in range(replicas)]
 
 
@@ -160,7 +167,7 @@ def run_round(proxies, reqs, *, fault, victim, t_fault, seed, tick_s,
     cluster = ClusterFrontend(proxies, policy="predicted", seed=seed,
                               health_timeout_s=health_s,
                               max_retries=max_retries,
-                              retry_backoff_s=tick_s)
+                              retry_backoff_s=tick_s, tracing=True)
     injector = None
     if fault is not None:
         name = cluster.instances[victim].name
@@ -203,6 +210,7 @@ def run_round(proxies, reqs, *, fault, victim, t_fault, seed, tick_s,
         "survivor_leaks": leaks,  # (pages_in_use, total_refs) per survivor
         "outputs": {r.rid: list(map(int, r.output))
                     for r in resolved.values()},
+        "_reqs": list(resolved.values()),  # popped by run() for trace export
     }
 
 
@@ -218,7 +226,7 @@ def run_churn(cfg, params, *, requests, rate, seed, tick_s, slots=2,
         return ServingEngine(cfg, params, EngineConfig(
             slots=slots, window=window, max_seq=max_seq,
             sync_every=sync_every, sla_s=4.0 * tick_s, prefix_cache=True,
-            preemption=preemption, edf_backlog=True))
+            preemption=preemption, edf_backlog=True, tracing=preemption))
 
     ref_reqs = copy.deepcopy(reqs)
     ref, _ = drive(build(False), ref_reqs, dt=tick_s)
@@ -237,6 +245,7 @@ def run_churn(cfg, params, *, requests, rate, seed, tick_s, slots=2,
         "pages_in_use": eng.allocator.pages_in_use,
         "total_refs": eng.allocator.total_refs,
         "makespan_ticks": makespan / tick_s,
+        "_reqs": list(resolved.values()),  # popped by run() for trace export
     }
 
 
@@ -247,7 +256,8 @@ def run_churn(cfg, params, *, requests, rate, seed, tick_s, slots=2,
 
 def run(report, *, arch="granite-8b", replicas=4, slots=2, window=128,
         max_seq=192, sync_every=4, requests=48, rate=0.8, seed=0,
-        rounds=("kill", "hang", "slow"), churn=True, out=""):
+        rounds=("kill", "hang", "slow"), churn=True, out="",
+        trace_out=""):
     cfg = get_config(arch).reduced()
     params = init_params(cfg, jax.random.key(seed))
     tick_s = estimate_decode(cfg, slots, window).latency_s
@@ -276,10 +286,13 @@ def run(report, *, arch="granite-8b", replicas=4, slots=2, window=128,
                        "so replay gates cover the strong claim",
                "rounds": {}}
 
+    traced = []  # (lane, Trace) pairs accumulated for --trace-out
+
     base = run_round(proxies, workload(), fault=None, victim=0,
                      t_fault=0.0, seed=seed, tick_s=tick_s,
                      health_s=health_s)
     baseline_outputs = base.pop("outputs")
+    traced += request_traces(base.pop("_reqs"), prefix="baseline/")
     results["rounds"]["baseline"] = base
     report("chaos_baseline_ttft_p99", round(base["ttft_p99"], 2),
            f"tpt={base['throughput_tpt']:.2f} goodput={base['goodput']:.3f}")
@@ -288,6 +301,10 @@ def run(report, *, arch="granite-8b", replicas=4, slots=2, window=128,
         r = run_round(proxies, workload(), fault=fault, victim=0,
                       t_fault=t_fault, seed=seed, tick_s=tick_s,
                       health_s=health_s)
+        round_traces = request_traces(r.pop("_reqs"), prefix=f"{fault}/")
+        traced += round_traces
+        r["span_kinds"] = sorted({k for _, t in round_traces
+                                  for k in t.kinds()})
         r["bit_identical_to_baseline"] = r.pop("outputs") == baseline_outputs
         r["goodput_retention"] = (r["throughput_tpt"] / base["throughput_tpt"]
                                   if base["throughput_tpt"] else 0.0)
@@ -305,11 +322,30 @@ def run(report, *, arch="granite-8b", replicas=4, slots=2, window=128,
                       rate=rate, seed=seed, tick_s=tick_s, slots=slots,
                       window=window, max_seq=max_seq,
                       sync_every=sync_every)
+        churn_traces = request_traces(c.pop("_reqs"), prefix="churn/")
+        traced += churn_traces
+        c["span_kinds"] = sorted({k for _, t in churn_traces
+                                  for k in t.kinds()})
         results["preempt_churn"] = c
         report("chaos_churn_preemptions", c["preempted"],
                f"restores={c['preempt_restores']} "
                f"bit_identical={c['bit_identical_to_unpreempted']} "
                f"leaks={c['pages_in_use']}p/{c['total_refs']}r")
+
+    # span-integrity rollup across every exported trace (whether or not a
+    # viewer file is requested): terminal traces must be well-formed
+    span_problems = [p for _, t in traced for p in t.validate()]
+    results["trace"] = {
+        "traced_requests": len(traced),
+        "span_problems": span_problems[:20],
+    }
+    if trace_out:
+        doc = write_chrome_trace(trace_out, traced)
+        results["trace"]["events"] = len(doc["traceEvents"])
+        results["trace"]["doc_problems"] = validate_chrome_trace(doc)[:20]
+        report("chaos_trace_json", trace_out,
+               f"{len(doc['traceEvents'])} events from {len(traced)} "
+               f"request traces (open in https://ui.perfetto.dev)")
 
     if out:
         with open(out, "w") as f:
@@ -325,10 +361,13 @@ def run(report, *, arch="granite-8b", replicas=4, slots=2, window=128,
 
 def smoke(*, arch="granite-8b") -> int:
     """Seeded kill-one-of-4 scenario (+hang/slow/churn): fail on any lost
-    request, page leak, unbounded retry, diverged stream, or goodput
-    collapse."""
+    request, page leak, unbounded retry, diverged stream, goodput
+    collapse, or malformed span trace."""
+    trace_out = os.path.join(os.path.dirname(__file__), "..",
+                             "TRACE_chaos.json")
     res = run(lambda *a: None, arch=arch, replicas=4, slots=2, window=128,
-              max_seq=192, sync_every=4, requests=24, rate=0.8, seed=0)
+              max_seq=192, sync_every=4, requests=24, rate=0.8, seed=0,
+              trace_out=trace_out)
     failures = []
 
     def check(name, ok, got):
@@ -376,6 +415,21 @@ def smoke(*, arch="granite-8b") -> int:
           f"pages_in_use={c['pages_in_use']} total_refs={c['total_refs']}")
     check("churn_all_finish", c["finished"] == c["resolved"],
           f"{c['finished']}/{c['resolved']}")
+    tr = res["trace"]
+    check("trace_spans_well_formed",
+          tr["traced_requests"] > 0 and tr["span_problems"] == [],
+          f"{tr['traced_requests']} traces, "
+          f"problems={tr['span_problems'][:3]}")
+    check("trace_doc_valid", tr.get("doc_problems") == [],
+          f"doc_problems={tr.get('doc_problems', ['missing'])[:3]}")
+    fault_kinds = sorted({k for fault in ("kill", "hang", "slow")
+                          for k in res["rounds"][fault].get("span_kinds", [])})
+    check("failover_retry_span", "failover_retry" in fault_kinds,
+          f"fault-round span kinds: {fault_kinds}")
+    churn_kinds = c.get("span_kinds", [])
+    check("churn_preempt_restore_spans",
+          {"preempt", "restore"} <= set(churn_kinds),
+          f"churn span kinds: {churn_kinds}")
     if failures:
         print(f"smoke: FAILED ({', '.join(failures)})")
         return 1
@@ -400,6 +454,9 @@ def main():
                     help="CI gate: seeded kill/hang/slow/churn scenario")
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_chaos.json"))
+    ap.add_argument("--trace-out", default="",
+                    help="export every request's span trace as Chrome-trace "
+                         "JSON (open in https://ui.perfetto.dev)")
     args = ap.parse_args()
     if args.smoke:
         raise SystemExit(smoke(arch=args.arch))
@@ -411,7 +468,8 @@ def main():
     res = run(report, arch=args.arch, replicas=args.replicas,
               slots=args.slots, window=args.window, max_seq=args.max_seq,
               sync_every=args.sync_every, requests=args.requests,
-              rate=args.rate, seed=args.seed, out=args.out)
+              rate=args.rate, seed=args.seed, out=args.out,
+              trace_out=args.trace_out)
     k = res["rounds"]["kill"]
     print(f"# kill 1/{args.replicas}: goodput retention "
           f"{k['goodput_retention']:.3f}, ttft p99 "

@@ -52,17 +52,35 @@ class InterferencePredictor:
     model predicts a completion latency, the frontend observes the real
     TTFT/JCT, and the mean multiplicative residual closes the loop (rates
     are reciprocal latencies, so the same accumulator serves both views).
+
+    Residuals live in a bounded ``repro.serving.metrics.Histogram``: the
+    ``correction`` mean comes from its EXACT raw-sum accumulator (bit-
+    identical to a bare running mean — routing behavior is unchanged),
+    while the bucket counts give the observability layer the residual
+    *distribution* each replica has learned, for free.
     """
 
     def __init__(self):
-        self._resid_sum = 0.0
-        self._n = 0
+        # lazy import: repro.serving imports this module via cluster.py,
+        # so a top-level import back into repro.serving would cycle
+        from repro.serving.metrics import residual_histogram
+        self.residuals = residual_histogram()
+
+    # bare-accumulator views, kept for callers/tests of the old fields
+    @property
+    def _resid_sum(self) -> float:
+        return self.residuals.sum
+
+    @property
+    def _n(self) -> int:
+        return self.residuals.count
 
     @property
     def correction(self) -> float:
         """Mean fractional residual: positive when reality runs slower
         than predicted (rates were over-estimated)."""
-        return self._resid_sum / self._n if self._n else 0.0
+        h = self.residuals
+        return h.sum / h.count if h.count else 0.0
 
     def predict(self, demands: Sequence[Tuple[float, float]]) -> List[float]:
         rates = progress_rates(demands)
@@ -71,8 +89,8 @@ class InterferencePredictor:
 
     def observe(self, predicted_rate: float, actual_rate: float):
         if predicted_rate > 0:
-            self._resid_sum += (actual_rate - predicted_rate) / predicted_rate * -1.0
-            self._n += 1
+            self.residuals.observe(
+                (actual_rate - predicted_rate) / predicted_rate * -1.0)
 
     def observe_latency(self, predicted_s: float, actual_s: float):
         """Record one (predicted, observed) latency pair (seconds).

@@ -18,10 +18,22 @@ every request with a TTFT deadline so the report includes SLO goodput.
 (optionally bounded by ``--top-k`` / ``--top-p``); request i samples with
 seed ``--sample-seed + i``, so a rerun — or the same workload routed to
 different replicas — reproduces every stream bit-for-bit.
+
+Observability exports (PR 8):
+
+``--trace-out PATH`` turns on span tracing (engine + frontend stamp a
+typed span trace on every request at existing host-sync points) and
+writes the whole run as Chrome-trace JSON — open it at
+https://ui.perfetto.dev. ``--metrics-out PATH`` writes the merged
+metrics registry (counters + mergeable latency histograms) as
+Prometheus-style text exposition plus a JSON snapshot at ``PATH.json``.
+``--profile-dir DIR`` arms ``jax.profiler`` around the serving loop via
+``EngineConfig.profile_dir`` (TensorBoard-loadable XLA trace).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -40,6 +52,7 @@ from repro.serving import (
     SamplingParams,
     ServingEngine,
 )
+from repro.serving.trace_export import request_traces, write_chrome_trace
 
 
 def _engine_config(args) -> EngineConfig:
@@ -54,7 +67,9 @@ def _engine_config(args) -> EngineConfig:
                         prefix_cache=args.prefix_cache,
                         preemption=args.preemption,
                         topology=DeviceTopology(dp=args.dp, tp=args.tp),
-                        moe_capacity_policy=args.moe_capacity or None)
+                        moe_capacity_policy=args.moe_capacity or None,
+                        tracing=bool(args.trace_out),
+                        profile_dir=args.profile_dir or None)
 
 
 def _build_engine(cfg, params, args):
@@ -135,6 +150,16 @@ def main():
                          "urgent arrival; the victim's generated prefix "
                          "is cached and its stream restored bit-identical "
                          "(paged engines only)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the merged metrics registry here as "
+                         "Prometheus-style text exposition, plus a JSON "
+                         "snapshot at PATH.json")
+    ap.add_argument("--trace-out", default="",
+                    help="turn on request span tracing and write the run "
+                         "as Chrome-trace JSON (ui.perfetto.dev)")
+    ap.add_argument("--profile-dir", default="",
+                    help="arm jax.profiler around the serving loop; the "
+                         "XLA trace lands in this dir (TensorBoard)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -168,6 +193,7 @@ def main():
                  if eng.moe_capacity_policy else ""))
 
     cluster = None
+    engines = [eng]
     if args.replicas > 1:
         engines = [eng] + [_build_engine(cfg, params, args)
                            for _ in range(args.replicas - 1)]
@@ -179,7 +205,8 @@ def main():
         cluster = ClusterFrontend(engines, policy=args.route_policy,
                                   seed=args.seed,
                                   health_timeout_s=health_s,
-                                  max_retries=args.max_retries)
+                                  max_retries=args.max_retries,
+                                  tracing=bool(args.trace_out))
         print(f"cluster frontend: {args.replicas} replicas, "
               f"policy={args.route_policy}, EDF frontend queue, "
               f"health_timeout={health_s*1e3:.0f}ms "
@@ -206,20 +233,30 @@ def main():
     queue = list(reqs)
     t0 = time.time()
     done = 0
-    while done < args.requests:
-        now = time.time() - t0
-        while queue and queue[0].arrival_time <= now:
-            server.submit(queue.pop(0), now)
-        finished = server.step(time.time() - t0)
-        done += len(finished)
-        if cluster is not None:
-            busy = not cluster.idle
-        else:
-            busy = (eng.n_active or eng.backlog or eng.admission.pending)
-        if not busy and queue:
-            # idle until the next arrival
-            time.sleep(max(0.0, queue[0].arrival_time - (time.time() - t0)))
-    done += len(server.drain(time.time() - t0))
+    if args.profile_dir:
+        for e in engines:
+            e.start_profile()
+    try:
+        while done < args.requests:
+            now = time.time() - t0
+            while queue and queue[0].arrival_time <= now:
+                server.submit(queue.pop(0), now)
+            finished = server.step(time.time() - t0)
+            done += len(finished)
+            if cluster is not None:
+                busy = not cluster.idle
+            else:
+                busy = (eng.n_active or eng.backlog
+                        or eng.admission.pending)
+            if not busy and queue:
+                # idle until the next arrival
+                time.sleep(max(0.0,
+                               queue[0].arrival_time - (time.time() - t0)))
+        done += len(server.drain(time.time() - t0))
+    finally:
+        if args.profile_dir:
+            for e in engines:
+                e.stop_profile()
     wall = time.time() - t0
     m = cluster.merged_metrics() if cluster is not None else eng.metrics
     m.total_time = wall
@@ -258,6 +295,20 @@ def main():
             print(f"  {inst.name}: routed={inst.routed} "
                   f"utilization={inst.utilization:.2f} "
                   f"residual={inst.corrector.correction:+.3f}")
+
+    if args.metrics_out:
+        reg = (cluster.metrics_registry() if cluster is not None
+               else eng.metrics_registry())
+        with open(args.metrics_out, "w") as f:
+            f.write(reg.exposition())
+        with open(args.metrics_out + ".json", "w") as f:
+            json.dump(reg.snapshot(), f, indent=2)
+        print(f"metrics: {args.metrics_out} (+ .json snapshot)")
+    if args.trace_out:
+        doc = write_chrome_trace(args.trace_out, request_traces(reqs))
+        print(f"trace: {args.trace_out} "
+              f"({len(doc['traceEvents'])} events; open in "
+              f"https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

@@ -60,7 +60,9 @@ from repro.core.misd.interference import InterferencePredictor
 from repro.core.misd.scheduler import Device, Job
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import EngineFailure
+from repro.serving.metrics import MetricsRegistry, latency_histogram
 from repro.serving.request import Request, RequestState, ServeMetrics
+from repro.serving.tracing import Trace
 
 DEFAULT_POOL = ""  # model tag for homogeneous (single-model) clusters
 
@@ -205,9 +207,15 @@ class ClusterFrontend:
                                 Mapping[str, Sequence[ServingEngine]]],
                  *, policy: str = "predicted", seed: int = 0,
                  edf: bool = True, health_timeout_s: float = 0.0,
-                 max_retries: int = 3, retry_backoff_s: float = 0.0):
+                 max_retries: int = 3, retry_backoff_s: float = 0.0,
+                 tracing: bool = False):
         self.router = ServiceRouter(policy=policy, seed=seed)
         self.edf = edf
+        # frontend-side span tracing: every submitted request gets a Trace
+        # stamped with queue/dispatch/failover events here; engines stamp
+        # their phases into the SAME trace (engine-side tracing need not
+        # be on), so one trace tells the request's cross-replica story
+        self.tracing = tracing
         # fault tolerance: a replica whose progress signature freezes for
         # longer than health_timeout_s while it holds work is declared
         # failed (0 disables the watchdog — crashes are still caught via
@@ -293,6 +301,9 @@ class ClusterFrontend:
         the frontend's ``metrics.rejected``, and surfaces from the next
         ``step`` — one bad request must never kill the frontend loop.
         Returns True iff the request was accepted into the queue."""
+        if self.tracing and req.trace is None:
+            req.trace = Trace(req.rid)
+            req.trace.begin("queued", now)
         if req.model not in self.router.pools or not self.router.pools[req.model]:
             self._resolve(req, now, RequestState.FAILED,
                           f"rejected: no engine pool for model "
@@ -313,6 +324,10 @@ class ClusterFrontend:
         req.state = state
         req.fail_reason = reason
         req.finish_time = now
+        if req.trace is not None:
+            req.trace.close_all(now)
+            req.trace.event("abort", now, state=state.value,
+                            reason=reason[:120])
         self._resolved.append(req)
 
     def _dispatch(self, now: float):
@@ -370,6 +385,9 @@ class ClusterFrontend:
             req._dispatch_t = now
             req.routed_to = inst.name
             inst.routed += 1
+            if req.trace is not None:
+                req.trace.event("dispatch", now, replica=inst.name,
+                                pred_wait_s=req._pred_wait_s)
             try:
                 accepted = inst.engine.submit(req, now)
             except EngineFailure:
@@ -503,7 +521,11 @@ class ClusterFrontend:
             return
         req.retries += 1
         self.metrics.retried += 1
-        req.reset_for_retry()
+        req.reset_for_retry()  # leaves req.trace alone: history survives
+        if req.trace is not None:
+            req.trace.close_all(now)
+            req.trace.event("failover_retry", now, retries=req.retries)
+            req.trace.begin("queued", now)
         if self.retry_backoff_s > 0:
             delay = min(self.retry_backoff_s * (2 ** (req.retries - 1)),
                         8 * self.retry_backoff_s)
@@ -570,6 +592,41 @@ class ClusterFrontend:
                      + self.failed):
             m.merge(inst.engine.metrics)
         return m
+
+    def metrics_registry(self) -> MetricsRegistry:
+        """Cluster-wide exposition: the merged ServeMetrics plus engine-
+        level rollups — compile events and span totals summed across every
+        replica (dead ones included), step-wall histograms exactly merged,
+        and each live replica's closed-loop residual state."""
+        reg = self.merged_metrics().registry(prefix="cluster_")
+        compile_events: Dict[str, int] = {}
+        span_totals: Dict[str, list] = {}
+        tick_wall = latency_histogram()
+        for inst in (self.instances + self.draining + self.retired
+                     + self.failed):
+            eng = inst.engine
+            for k, n in eng.compile_events.items():
+                compile_events[k] = compile_events.get(k, 0) + n
+            for k, (c, s) in eng.tracer.span_totals.items():
+                cur = span_totals.setdefault(k, [0, 0.0])
+                cur[0] += c
+                cur[1] += s
+            tick_wall.merge(eng._tick_wall)
+        for k, n in sorted(compile_events.items()):
+            reg.set_counter(f"cluster_compile_events_total{{key=\"{k}\"}}", n)
+        for k, (c, s) in sorted(span_totals.items()):
+            reg.set_counter(f"cluster_span_count_total{{kind=\"{k}\"}}", c)
+            reg.set_gauge(f"cluster_span_seconds{{kind=\"{k}\"}}", s)
+        if tick_wall.count:
+            reg.register("cluster_step_wall_seconds", tick_wall)
+        for inst in self.instances:
+            reg.set_gauge(
+                f"cluster_residual_correction{{replica=\"{inst.name}\"}}",
+                inst.corrector.correction)
+            reg.register(
+                f"cluster_residuals{{replica=\"{inst.name}\"}}",
+                inst.corrector.residuals)
+        return reg
 
     def utilization(self) -> Dict[str, float]:
         return {i.name: i.utilization

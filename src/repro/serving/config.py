@@ -105,6 +105,14 @@ class EngineConfig:
     topology: DeviceTopology = DeviceTopology()
     modeled_chips: int = 0
     moe_capacity_policy: Optional[str] = None
+    # --- observability ---
+    # span tracing: stamp a Trace on every request at phase boundaries
+    # (host timestamps at existing sync points only; bit-identical
+    # streams, bounded overhead — see serving/README.md "Observability")
+    tracing: bool = False
+    # jax.profiler trace directory for ServingEngine.start_profile();
+    # None leaves the profiler hook disarmed
+    profile_dir: Optional[str] = None
 
     def __post_init__(self):
         if (self.moe_capacity_policy is not None

@@ -78,6 +78,7 @@ from repro.models.layers import sample_tokens
 from repro.models.model import block_program
 from repro.models.moe import drop_free_group
 from repro.serving.config import DeviceTopology, EngineConfig
+from repro.serving.metrics import MetricsRegistry, latency_histogram
 from repro.serving.paging import PageAllocator, PrefixHit, PrefixIndex
 from repro.serving.request import (
     Request,
@@ -87,6 +88,7 @@ from repro.serving.request import (
     ServeMetrics,
 )
 from repro.serving.telemetry import LoadReport
+from repro.serving.tracing import Trace, Tracer
 from repro.util import sharding_hints
 
 __all__ = [  # noqa: F822 — LoadReport/DeviceTopology re-exported for callers
@@ -672,6 +674,21 @@ class ServingEngine:
         self.eos_id = eos_id
         self.sync_every = 1 if eos_id >= 0 else max(1, sync_every)
         self.metrics = ServeMetrics()
+        # --- observability: span tracing + profiling hooks ---
+        # Stamping discipline: host timestamps only, and only at existing
+        # sync points (the caller-supplied ``now`` the engine already has
+        # in hand) — tracing never adds a device sync. With tracing off a
+        # request's ``trace`` stays None and every stamp site is a single
+        # attribute check.
+        self._trace_on = bool(config.tracing)
+        self.tracer = Tracer(enabled=self._trace_on)
+        self._win_t0 = 0.0  # serving-clock start of the open decode window
+        self._last_now = 0.0  # most recent caller clock (compile events)
+        # jit traces per trace-cache key proxy (shape-derived): the "flat
+        # compile count" invariants as a queryable metric
+        self.compile_events: Dict[str, int] = {}
+        self._tick_wall = latency_histogram()  # step() wall s (tracing only)
+        self._profiling = False
 
         self._attn_only = _attn_only(cfg)
         self._min_window = _min_cache_window(cfg, window)
@@ -766,12 +783,14 @@ class ServingEngine:
         # scope is safe
         def _probed_decode(params, cache, tokens, samp):
             self.decode_traces += 1
+            self._note_compile("decode/tick")
             with self._trace_ctx():
                 return decode_tick(cfg, params, cache, tokens, samp,
                                    logits_sharding=self._logits_sharding)
 
         def _probed_scan(params, cache, tokens, samp):
             self.decode_traces += 1
+            self._note_compile(f"decode/scan{self.sync_every}")
             with self._trace_ctx():
                 return decode_scan_step(
                     cfg, params, cache, tokens, samp, n=self.sync_every,
@@ -779,17 +798,20 @@ class ServingEngine:
 
         def _probed_bucketed(params, batch, true_len):
             self.prefill_traces += 1
+            self._note_compile(f"prefill/bucket{_batch_len(batch)}")
             with self._trace_ctx():
                 return bucketed_prefill_step(cfg, params, batch, true_len,
                                              window=window)
 
         def _probed_exact(params, batch):
             self.prefill_traces += 1
+            self._note_compile(f"prefill/exact{_batch_len(batch)}")
             with self._trace_ctx():
                 return prefill_step(cfg, params, batch, window=window)
 
         def _probed_paged_prefill(params, batch, true_len):
             self.prefill_traces += 1
+            self._note_compile(f"prefill/paged{_batch_len(batch)}")
             with self._trace_ctx():
                 return paged_prefill_step(cfg, params, batch, true_len)
 
@@ -798,11 +820,13 @@ class ServingEngine:
             # once per SUFFIX bucket width (cache width is always
             # max_seq), never per hit length — start/true_len are traced
             self.prefill_traces += 1
+            self._note_compile(f"prefill/suffix{tokens.shape[1]}")
             with self._trace_ctx():
                 return prefill_chunk_step(cfg, params, cache, tokens,
                                           true_len)
 
         def _chunk_step(params, cache, tokens, true_len):
+            self._note_compile(f"prefill/chunk{tokens.shape[1]}")
             with self._trace_ctx():
                 return prefill_chunk_step(cfg, params, cache, tokens,
                                           true_len)
@@ -845,6 +869,82 @@ class ServingEngine:
         self._samp_set = jax.jit(sampling_set, donate_argnums=donate0)
         self._sample_first = jax.jit(_first_token)
 
+    # -- observability helpers ---------------------------------------------
+    def _note_compile(self, key: str):
+        """Count one jit trace against its trace-cache key proxy. Runs at
+        TRACE time only (inside the probed closures), so warm calls cost
+        nothing; the key is shape-derived, so growth in any one key is a
+        trace-cache regression."""
+        self.compile_events[key] = self.compile_events.get(key, 0) + 1
+        if self._trace_on:
+            self.tracer.event("compile", self._last_now, key=key)
+
+    def _tr(self, req: Request) -> Optional[Trace]:
+        """The trace to stamp for ``req``: its existing one (a tracing
+        frontend may have created it), a fresh one when engine tracing is
+        on, or None (tracing fully off — no stamping)."""
+        t = req.trace
+        if t is None and self._trace_on:
+            t = req.trace = Trace(req.rid)
+        return t
+
+    def _tr_admit(self, req: Request, now: float, path: str, slot: int):
+        """Close the queued span and open the prefill span at admission."""
+        t = self._tr(req)
+        if t is None:
+            return
+        if t.is_open("queued"):
+            t.end("queued", now)
+        t.begin("prefill", now, path=path, slot=slot)
+
+    def _tr_terminal(self, req: Request, now: float, kind: str, **meta):
+        """Stamp a terminal event (rejected/abort) and fold the trace into
+        the engine rollup."""
+        t = req.trace
+        if t is None:
+            return
+        t.close_all(now)
+        t.event(kind, now, **meta)
+        self.tracer.collect(t)
+
+    def start_profile(self) -> bool:
+        """Arm ``jax.profiler`` tracing into ``config.profile_dir``; no-op
+        (False) when no directory is configured or already profiling."""
+        if not self.config.profile_dir or self._profiling:
+            return False
+        jax.profiler.start_trace(self.config.profile_dir)
+        self._profiling = True
+        if self._trace_on:
+            self.tracer.event("profile_start", self._last_now,
+                              dir=self.config.profile_dir)
+        return True
+
+    def stop_profile(self) -> bool:
+        if not self._profiling:
+            return False
+        jax.profiler.stop_trace()
+        self._profiling = False
+        if self._trace_on:
+            self.tracer.event("profile_stop", self._last_now)
+        return True
+
+    def metrics_registry(self) -> MetricsRegistry:
+        """This engine's metrics as a registry (exposition-ready):
+        ServeMetrics counters/histograms plus engine-level accounting —
+        per-key compile events, per-kind span totals, per-step wall time."""
+        reg = self.metrics.registry()
+        reg.set_counter("serving_prefill_traces_total", self.prefill_traces)
+        reg.set_counter("serving_decode_traces_total", self.decode_traces)
+        for key, n in sorted(self.compile_events.items()):
+            reg.set_counter(
+                f"serving_compile_events_total{{key=\"{key}\"}}", n)
+        for kind, (c, s) in sorted(self.tracer.span_totals.items()):
+            reg.set_counter(f"serving_span_count_total{{kind=\"{kind}\"}}", c)
+            reg.set_gauge(f"serving_span_seconds{{kind=\"{kind}\"}}", s)
+        if self._tick_wall.count:
+            reg.register("serving_step_wall_seconds", self._tick_wall)
+        return reg
+
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request, now: float) -> bool:
         """Admit immediately while free capacity exists (holding a request
@@ -857,6 +957,10 @@ class ServingEngine:
         exception: the request comes back FAILED (with ``fail_reason``)
         from the next ``step``, and ``False`` is returned so a frontend
         never tracks it as in-flight."""
+        self._last_now = now
+        t = self._tr(req)
+        if t is not None and not t.is_open("queued"):
+            t.begin("queued", now)
         try:
             self._check_servable(req)
         except RequestRejected as e:
@@ -878,6 +982,7 @@ class ServingEngine:
         req.fail_reason = reason
         req.finish_time = now
         self.metrics.rejected += 1
+        self._tr_terminal(req, now, "rejected", reason=reason[:120])
         self._finished.append(req)
 
     def _pump_admissions(self, now: float):
@@ -962,6 +1067,12 @@ class ServingEngine:
         req.state = RequestState.PREEMPTED
         req.preemptions += 1
         self.metrics.preempted += 1
+        t = req.trace
+        if t is not None:
+            if t.is_open("decode"):
+                t.end("decode", now, tokens=len(req.output))
+            t.event("preempt", now, slot=slot, policy=self.preempt_policy)
+            t.begin("queued", now)  # the victim requeues for restore
         return req
 
     def try_admit(self, req: Request, now: float) -> bool:
@@ -984,7 +1095,7 @@ class ServingEngine:
                 if hit is not None:
                     self._admit_prefix(req, i, hit, now)
                 elif self._chunkable(req):
-                    self._start_chunked(req, i)
+                    self._start_chunked(req, i, now)
                 else:
                     self._admit_now(req, i, now)
                 return True
@@ -1116,6 +1227,7 @@ class ServingEngine:
         return True
 
     def _admit_now(self, req: Request, slot: int, now: float):
+        self._tr_admit(req, now, "full", slot)
         plen = req.prompt_len
         bucket = None if self.paged else self._bucket_for(plen)
         if self.paged:
@@ -1157,6 +1269,9 @@ class ServingEngine:
         when the suffix is long. A partially-matched tail page is never
         aliased: its matched tokens ride the gathered buffer and scatter
         into a private page at activation (copy-on-write)."""
+        self._tr_admit(req, now, "prefix", slot)
+        if req.trace is not None:
+            req.trace.spans[-1].meta["prefix_hit"] = hit.tokens
         plen, ps = req.prompt_len, self.page_size
         n_full = len(hit.full_pages)
         owned = self.allocator.owned(slot)  # [shared full..., private...]
@@ -1210,7 +1325,8 @@ class ServingEngine:
             to_shardings(self.mesh, cache_pspecs(self.cfg, cache1,
                                                  self._policy, self.mesh)))
 
-    def _start_chunked(self, req: Request, slot: int):
+    def _start_chunked(self, req: Request, slot: int, now: float):
+        self._tr_admit(req, now, "chunked", slot)
         padded_len = self._prefill_len(req)
         padded = np.zeros((1, padded_len), np.int32)
         padded[0, :req.prompt_len] = req.prompt
@@ -1251,6 +1367,9 @@ class ServingEngine:
                 job.tok = tok
                 job.logits = last
             self.metrics.prefill_chunks += 1
+            if job.req.trace is not None:
+                job.req.trace.event("prefill_chunk", now, offset=prev_off,
+                                    slot=job.slot)
             if job.next_off >= job.tokens.shape[1]:
                 self._jobs.popleft()
                 self._activate(job.req, job.slot,
@@ -1340,6 +1459,18 @@ class ServingEngine:
             self.metrics.ttfts.append(req.ttft)
         if req.state is RequestState.PREEMPTED:
             self.metrics.preempt_restores += 1
+        t = req.trace
+        if t is not None:
+            if t.is_open("queued"):  # direct try_admit paths skip submit
+                t.end("queued", now)
+            if t.is_open("prefill"):
+                t.end("prefill", now, tokens=req.prompt_len)
+            if not sp.greedy:
+                t.event("sample", now, seed=sp.seed)
+            if req.state is RequestState.PREEMPTED:
+                t.event("restore", now, slot=slot,
+                        preemptions=req.preemptions)
+            t.begin("decode", now, slot=slot)
         req.state = RequestState.DECODE
         self.active[slot] = req
         self.decoding[slot] = True
@@ -1363,6 +1494,19 @@ class ServingEngine:
         including aborted ones (cancelled / timed out / shed / failed),
         which come back in a terminal ``RequestState`` with
         ``fail_reason`` set."""
+        self._last_now = now
+        if not self._trace_on:
+            return self._step(now)
+        # per-tick wall accounting (profiling hook): host wall seconds per
+        # step() call — the virtual `now` clock says nothing about what a
+        # tick actually cost
+        w0 = time.perf_counter()
+        try:
+            return self._step(now)
+        finally:
+            self._tick_wall.observe(time.perf_counter() - w0)
+
+    def _step(self, now: float) -> List[Request]:
         self._reap_doomed(now)
         self._pump_admissions(now)
         self._run_prefill_chunks(now)
@@ -1457,6 +1601,8 @@ class ServingEngine:
                 f"timed out: exceeded timeout_s={req.timeout_s:.4f} "
                 f"after arrival")
             self.metrics.timed_out += 1
+        self._tr_terminal(req, now, "abort", state=state.value,
+                          reason=req.fail_reason[:120])
         self._finished.append(req)
 
     def _fail_slot(self, slot: int, now: float, reason: str):
@@ -1469,6 +1615,8 @@ class ServingEngine:
         req.fail_reason = reason
         req.finish_time = now
         self.metrics.failed += 1
+        self._tr_terminal(req, now, "abort", state="failed",
+                          reason=reason[:120])
         self._finished.append(req)
 
     def takeover_queue(self) -> List[Request]:
@@ -1535,8 +1683,17 @@ class ServingEngine:
         self.release_slot(slot)
         self.metrics.completed += 1
         self.metrics.total_tokens += len(req.output)
-        self.metrics.jcts.append(now - req.arrival_time)
+        jct = now - req.arrival_time
+        self.metrics.jcts.append(jct)
+        self.metrics.latencies.append(jct)
+        if req.tpot > 0:
+            self.metrics.tpots.append(req.tpot)
         self.metrics.record_slo(req)
+        t = req.trace
+        if t is not None:
+            if t.is_open("decode"):
+                t.end("decode", now, tokens=len(req.output))
+            self.tracer.collect(t)
 
     def release_slot(self, slot: int):
         """Retire ``slot`` (finished or cancelled request): return its pages
@@ -1583,14 +1740,32 @@ class ServingEngine:
         for i, r in enumerate(self.active):
             if r is None or not self.decoding[i]:
                 continue
+            tr = r.trace
+            n0 = len(r.output) if tr is not None else 0
+            done = False
             for t in range(toks.shape[0]):
                 if r.done:
                     break
                 tok = int(toks[t, i])
                 r.output.append(tok)
                 if r.done or tok == self.eos_id:
-                    self._finalize_request(r, i, t_now)
+                    done = True
                     break
+            if tr is not None and len(r.output) > n0:
+                # one span per fused window whose host sync delivered
+                # tokens to this slot; t0 floors at the trace's latest
+                # span so a freshly (re)activated request's window never
+                # pre-dates its decode span (prefill_done keeps the FIRST
+                # activation time across preempt/restore). Appended BEFORE
+                # finalization so the terminal collect() sees it.
+                t0 = max(self._win_t0, r.prefill_done)
+                if tr.spans:
+                    t0 = max(t0, tr.spans[-1].t0)
+                tr.add("decode_window", min(t0, t_now), t_now,
+                       tokens=len(r.output) - n0)
+            if done:
+                self._finalize_request(r, i, t_now)
+        self._win_t0 = t_now
 
     def _take_finished(self) -> List[Request]:
         out, self._finished = self._finished, []
@@ -1619,6 +1794,11 @@ class ServingEngine:
         self._unsynced = []
         self._finished = []
         self.metrics = ServeMetrics()
+        # fresh span rollups + wall accounting; compile_events persist —
+        # they mirror the jit caches, which reset() deliberately keeps warm
+        self.tracer = Tracer(enabled=self._trace_on)
+        self._tick_wall = latency_histogram()
+        self._win_t0 = 0.0
 
     # -- prefix cache ------------------------------------------------------
     def prefix_match_len(self, tokens) -> int:
@@ -1701,7 +1881,10 @@ class ServingEngine:
             axis_util=tuple((a, s / tick if tick > 0 else 0.0)
                             for a, s in axis_cs),
             moe_capacity_policy=self.moe_capacity_policy,
-            moe_drop_free_group=self._moe_gmax)
+            moe_drop_free_group=self._moe_gmax,
+            histograms=self.metrics.histogram_wire(),
+            span_totals=self.tracer.totals_wire(),
+            compile_events=tuple(sorted(self.compile_events.items())))
 
     @property
     def mesh_axes(self):
@@ -1730,6 +1913,15 @@ class ServingEngine:
 
 def _padded_len(n: int, chunk: int) -> int:
     return ((n + chunk - 1) // chunk) * chunk
+
+
+def _batch_len(batch) -> int:
+    """Padded sequence length of a prefill batch (tokens or audio frames)
+    — the shape component of its trace-cache key."""
+    b = batch.get("tokens")
+    if b is None:
+        b = next(iter(batch.values()))
+    return int(b.shape[1])
 
 
 def generate(cfg, params, prompt: np.ndarray, max_new_tokens: int,

@@ -13,6 +13,9 @@ from typing import List, Optional
 
 import numpy as np
 
+from repro.serving.metrics import Histogram, latency_histogram
+from repro.serving.tracing import Trace
+
 
 class RequestState(str, enum.Enum):
     """Explicit request lifecycle (survey: availability and tail latency,
@@ -126,6 +129,12 @@ class Request:
     # context); ``output`` keeps them too, so the client-visible stream
     # is unchanged and ``done`` keeps counting against the full budget
     restored_tokens: int = 0
+    # --- observability ---
+    # span trace stamped by engine/frontend at phase boundaries; None
+    # unless tracing is enabled somewhere along the request's path.
+    # Survives preemption AND failover (reset_for_retry leaves it alone)
+    # so one trace tells the request's whole story across replicas.
+    trace: Optional[Trace] = None
 
     @property
     def prompt_len(self) -> int:
@@ -237,14 +246,24 @@ class Request:
 
 @dataclass
 class ServeMetrics:
-    """Aggregated server-side + client-side metrics (survey §3.2.3)."""
+    """Aggregated server-side + client-side metrics (survey §3.2.3).
+
+    Latency series are bounded fixed-bucket histograms (see
+    repro.serving.metrics), not sample lists: memory stays O(buckets)
+    under sustained traffic, ``merge`` stays exact across replicas
+    (bucket counts and sum/count/min/max add), and percentiles come from
+    the histogram within one bucket width of the sample-exact value.
+    The old list call sites keep working — ``Histogram.append`` is an
+    ``observe`` alias and ``extend`` folds iterables.
+    """
 
     completed: int = 0
     total_tokens: int = 0
     total_time: float = 0.0
-    latencies: List[float] = field(default_factory=list)
-    jcts: List[float] = field(default_factory=list)  # job completion times
-    ttfts: List[float] = field(default_factory=list)  # time to first token
+    latencies: Histogram = field(default_factory=latency_histogram)
+    jcts: Histogram = field(default_factory=latency_histogram)  # completion
+    ttfts: Histogram = field(default_factory=latency_histogram)  # first token
+    tpots: Histogram = field(default_factory=latency_histogram)  # per token
     sla_violations: int = 0
     decode_ticks: int = 0  # batched decode steps executed
     host_syncs: int = 0  # device->host token transfers (1 per N ticks)
@@ -279,18 +298,17 @@ class ServeMetrics:
         return self.total_tokens / self.total_time if self.total_time else 0.0
 
     def p(self, q: float) -> float:
-        if not self.latencies:
-            return 0.0
-        return float(np.percentile(np.asarray(self.latencies), q))
+        return self.latencies.percentile(q)
 
     @property
     def mean_jct(self) -> float:
-        return float(np.mean(self.jcts)) if self.jcts else 0.0
+        return self.jcts.mean  # exact: histogram keeps a raw-sum accumulator
 
     def ttft_p(self, q: float) -> float:
-        if not self.ttfts:
-            return 0.0
-        return float(np.percentile(np.asarray(self.ttfts), q))
+        return self.ttfts.percentile(q)
+
+    def tpot_p(self, q: float) -> float:
+        return self.tpots.percentile(q)
 
     # -- SLO attainment ----------------------------------------------------
     def record_slo(self, req: Request):
@@ -320,9 +338,10 @@ class ServeMetrics:
         self.completed += other.completed
         self.total_tokens += other.total_tokens
         self.total_time = max(self.total_time, other.total_time)
-        self.latencies.extend(other.latencies)
-        self.jcts.extend(other.jcts)
-        self.ttfts.extend(other.ttfts)
+        self.latencies.merge(other.latencies)  # exact histogram merge
+        self.jcts.merge(other.jcts)
+        self.ttfts.merge(other.ttfts)
+        self.tpots.merge(other.tpots)
         self.sla_violations += other.sla_violations
         self.decode_ticks += other.decode_ticks
         self.host_syncs += other.host_syncs
@@ -343,3 +362,37 @@ class ServeMetrics:
         self.preempt_restores += other.preempt_restores
         self.retried += other.retried
         self.failed_over += other.failed_over
+
+    # -- observability -----------------------------------------------------
+    _HISTOGRAMS = (("latency_s", "latencies"), ("jct_s", "jcts"),
+                   ("ttft_s", "ttfts"), ("tpot_s", "tpots"))
+
+    def histogram_wire(self) -> tuple:
+        """Non-empty latency histograms in LoadReport wire form:
+        ((name, sparse-histogram-tuple), ...)."""
+        return tuple((name, getattr(self, attr).to_wire())
+                     for name, attr in self._HISTOGRAMS
+                     if getattr(self, attr).count)
+
+    def registry(self, prefix: str = "serving_") -> "MetricsRegistry":
+        """Snapshot this struct as a MetricsRegistry for exposition.
+        Histograms are registered by reference (zero copies); counters
+        are copied point-in-time values."""
+        from repro.serving.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        for name, attr in self._HISTOGRAMS:
+            reg.register(f"{prefix}{name.rsplit('_', 1)[0]}_seconds",
+                         getattr(self, attr))
+        for f in ("completed", "total_tokens", "rejected", "cancelled",
+                  "timed_out", "shed", "failed", "preempted",
+                  "preempt_restores", "retried", "failed_over",
+                  "decode_ticks", "host_syncs", "prefill_chunks",
+                  "prefix_hits", "prefix_hit_tokens", "sampled_requests",
+                  "slo_tracked", "slo_met", "ttft_slo_misses",
+                  "tpot_slo_misses"):
+            reg.set_counter(f"{prefix}{f}_total", getattr(self, f))
+        reg.set_gauge(f"{prefix}goodput", self.goodput)
+        reg.set_gauge(f"{prefix}qps", self.qps)
+        reg.set_gauge(f"{prefix}throughput_tokens_per_s",
+                      self.throughput_tps)
+        return reg

@@ -9,20 +9,41 @@ boundaries (future cross-engine KV migration) without pickling.
 
 Schema history:
   v1 — PR 3-6 implicit shape (slots/pages/backlog/lifecycle counters).
-  v2 — this PR: explicit ``schema_version``; per-mesh-axis fields
+  v2 — PR 7: explicit ``schema_version``; per-mesh-axis fields
        (``mesh_axes``, ``axis_collective_s``, ``axis_util``) so the
        router understands an n-chip sharded replica; MoE capacity-policy
        fields.
+  v3 — this PR (observability): ``histograms`` — sparse latency
+       histograms (TTFT/TPOT/JCT) in repro.serving.metrics wire form, so
+       the router's closed-loop correction and cluster-wide percentiles
+       come from exactly-mergeable bounded state; ``span_totals`` —
+       per-span-kind (count, seconds) rollups from request traces;
+       ``compile_events`` — jit traces per trace-cache key.
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass, fields
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 #: tuple-of-tuples fields that serialize as lists (JSON has no tuples)
 _TUPLE_FIELDS = ("active_remaining", "queued_budgets", "mesh_axes",
                  "axis_collective_s", "axis_util")
+
+#: arbitrarily nested tuple fields (v3) — converted recursively
+_DEEP_FIELDS = ("histograms", "span_totals", "compile_events")
+
+
+def _listify(x):
+    if isinstance(x, tuple):
+        return [_listify(v) for v in x]
+    return x
+
+
+def _tuplify(x):
+    if isinstance(x, (list, tuple)):
+        return tuple(_tuplify(v) for v in x)
+    return x
 
 
 @dataclass(frozen=True)
@@ -76,6 +97,18 @@ class LoadReport:
     # --- v2: MoE capacity policy (empty/0 for dense archs) ---
     moe_capacity_policy: str = ""
     moe_drop_free_group: int = 0  # largest never-dropping token group
+    # --- v3: observability ---
+    # ((name, histogram-wire), ...): non-empty ServeMetrics latency
+    # histograms (latency_s/jct_s/ttft_s/tpot_s) in the sparse
+    # repro.serving.metrics.Histogram.to_wire form — exactly mergeable
+    # across replicas, so cluster percentiles need no sample shipping
+    histograms: tuple = ()
+    # ((span kind, count, seconds), ...): per-kind rollups folded from
+    # terminal request traces (empty with tracing off)
+    span_totals: tuple = ()
+    # ((trace-cache key, count), ...): jit traces per shape-derived key —
+    # the flat-compile-count invariant as queryable telemetry
+    compile_events: tuple = ()
 
     @property
     def saturated(self) -> bool:
@@ -95,12 +128,14 @@ class LoadReport:
         d = asdict(self)
         for k in _TUPLE_FIELDS:
             d[k] = [list(x) if isinstance(x, tuple) else x for x in d[k]]
+        for k in _DEEP_FIELDS:
+            d[k] = _listify(d[k])
         return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "LoadReport":
-        """Inverse of ``to_dict``. Accepts schema v1 (no version field /
-        missing v2 fields default) and v2; rejects reports from a FUTURE
+        """Inverse of ``to_dict``. Accepts schema v1 (no version field) and
+        v2 (missing newer fields default); rejects reports from a FUTURE
         schema instead of silently mis-reading them."""
         version = int(d.get("schema_version", 1))
         if version > SCHEMA_VERSION:
@@ -113,5 +148,8 @@ class LoadReport:
             if k in kw:
                 kw[k] = tuple(tuple(x) if isinstance(x, list) else x
                               for x in kw[k])
+        for k in _DEEP_FIELDS:
+            if k in kw:
+                kw[k] = _tuplify(kw[k])
         kw["schema_version"] = SCHEMA_VERSION
         return cls(**kw)

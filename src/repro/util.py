@@ -16,20 +16,50 @@ import time
 import jax
 
 
-def timeit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+class TimedSamples(float):
+    """The mean seconds-per-call, plus the per-iteration samples behind it.
+
+    Subclassing ``float`` keeps every existing ``timeit(...) * 1e6`` call
+    site working while benches that care about distribution (noise floors,
+    medians, histogram feeding) read ``.samples`` / ``.median``."""
+
+    __slots__ = ("samples",)
+    samples: tuple
+
+    def __new__(cls, mean_s: float, samples):
+        self = super().__new__(cls, mean_s)
+        self.samples = tuple(samples)
+        return self
+
+    @property
+    def median(self) -> float:
+        s = sorted(self.samples)
+        n = len(s)
+        if not n:
+            return float(self)
+        mid = n // 2
+        return s[mid] if n % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 2) -> TimedSamples:
     """Wall-clock seconds per call of a (jitted) function, with
-    ``block_until_ready`` fencing both the warmup and the timed region so
-    async dispatch cannot skew the measurement (the timer would otherwise
-    stop while work is still queued on the device)."""
+    ``block_until_ready`` fencing both the warmup and each timed iteration
+    so async dispatch cannot skew the measurement (the timer would
+    otherwise stop while work is still queued on the device).
+
+    Returns a ``TimedSamples`` — a float (the mean) that also carries the
+    per-iteration wall times, each individually fenced."""
     out = None
     for _ in range(warmup):
         out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    return TimedSamples(sum(samples) / max(1, len(samples)), samples)
 
 _UNROLL = contextvars.ContextVar("unroll_scans", default=False)
 _ATTN_CHUNK = contextvars.ContextVar("attn_chunk", default=1024)

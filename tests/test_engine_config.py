@@ -202,3 +202,89 @@ def test_dense_arch_ignores_capacity_policy(granite):
                       moe_capacity_policy="backpressure")
     assert eng.moe_capacity_policy == ""  # dense: no MoE capacity to police
     assert eng.load_report().moe_drop_free_group == 0
+
+
+# ---------------------------------------------------------------------------
+# LoadReport v3: observability fields
+# ---------------------------------------------------------------------------
+
+
+def test_load_report_v2_compat_defaults_observability_fields():
+    """A v2 report (pre-observability) reads cleanly: the v3 fields
+    default to empty, nothing is mis-parsed."""
+    v2 = {"slots": 4, "free_slots": 4, "queued_requests": 0,
+          "queued_prefill_tokens": 0, "decode_tokens_remaining": 0,
+          "free_pages": -1, "total_pages": 0, "backlog_s": 0.0,
+          "tick_est_s": 0.01, "queued_prefill_s": 0.0,
+          "schema_version": 2,
+          "mesh_axes": [["data", 1], ["model", 8]],
+          "axis_collective_s": [["model", 0.002]],
+          "moe_capacity_policy": "strict"}
+    rep = LoadReport.from_dict(v2)
+    assert rep.mesh_axes == (("data", 1), ("model", 8))
+    assert rep.histograms == ()
+    assert rep.span_totals == ()
+    assert rep.compile_events == ()
+
+
+def test_load_report_v3_histograms_round_trip(granite):
+    """A traced engine that completed a request ships non-empty
+    histograms/span_totals/compile_events, and they survive
+    dict -> JSON -> dict exactly."""
+    import json
+
+    cfg, params = granite
+    eng = make_engine(cfg, params, slots=2, window=64, tracing=True)
+    req = Request(rid=0, prompt=_prompt(8), max_new_tokens=4)
+    eng.submit(req, 0.0)
+    t = 0.0
+    while not req.done:
+        t += 1.0
+        eng.step(t)
+    eng.drain(t)
+    rep = eng.load_report()
+    names = [name for name, _wire in rep.histograms]
+    assert "jct_s" in names and "latency_s" in names
+    assert any(kind == "decode" for kind, _c, _s in rep.span_totals)
+    assert rep.compile_events  # jit traces counted per cache key
+    rt = LoadReport.from_dict(json.loads(json.dumps(rep.to_dict())))
+    assert rt == rep
+
+    # the wire histograms rebuild into working Histogram objects
+    from repro.serving import Histogram
+    hists = dict(rep.histograms)
+    h = Histogram.from_wire(hists["jct_s"])
+    assert h.count == 1 and h.percentile(50) > 0
+
+
+def test_histogram_merge_associative_property():
+    """hypothesis: merging per-replica histograms is associative and
+    order-independent — counts exactly, sums to float tolerance (addition
+    order differs)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.serving import latency_histogram
+
+    samples = st.lists(
+        st.floats(1e-6, 1e5, allow_nan=False, allow_infinity=False),
+        max_size=40)
+
+    @given(samples, samples, samples)
+    @settings(max_examples=50, deadline=None)
+    def prop(a, b, c):
+        def hist(vs):
+            h = latency_histogram()
+            h.extend(vs)
+            return h
+
+        left = hist(a).merge(hist(b)).merge(hist(c))
+        right = hist(a).merge(hist(b).merge(hist(c)))
+        pooled = hist(a + b + c)
+        for other in (right, pooled):
+            assert left.counts == other.counts
+            assert left.count == other.count
+            assert left.vmin == other.vmin and left.vmax == other.vmax
+            assert left.sum == pytest.approx(other.sum, rel=1e-12, abs=1e-12)
+
+    prop()
