@@ -5,6 +5,7 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 	bench-prefix bench-prefix-smoke bench-sampling bench-sampling-smoke \
 	bench-chaos bench-chaos-smoke bench-sharded bench-sharded-smoke \
 	bench-observability bench-observability-smoke trace-demo \
+	bench-overload bench-overload-smoke span-diff span-baseline \
 	serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
@@ -81,6 +82,29 @@ bench-observability:
 # overhead past the noise-tolerant 0.90 bound (acceptance: 0.97 full)
 bench-observability-smoke:
 	$(PY) benchmarks/observability_bench.py --smoke
+
+# multi-tenant overload stack under a low-tier flood: SLO-tier goodput
+# retention, DRR fairness bounds, ladder engagement, bit-identity of
+# admitted streams, typed retry-after -> BENCH_overload.json
+bench-overload:
+	$(PY) benchmarks/overload_bench.py
+
+# CI gate: fails on protected-tier goodput retention < 0.9 under the
+# flood, a starved tenant (DRR wait past its provable bound), a ladder
+# that never engaged, stream divergence vs the unloaded reference, or a
+# rejection missing its finite retry_after_s
+bench-overload-smoke:
+	$(PY) benchmarks/overload_bench.py --smoke \
+		--out BENCH_overload.json
+
+# span-phase triage gate: per-kind span rollups of a fixed virtual-time
+# traced workload diffed against benchmarks/SPAN_BASELINE.json — fails
+# NAMING the regressed phase; deliberate changes: make span-baseline
+span-diff:
+	$(PY) benchmarks/span_diff.py
+
+span-baseline:
+	$(PY) benchmarks/span_diff.py --update
 
 # viewable trace artifact: a small chaos run (kill/hang/slow + churn)
 # exported as TRACE_chaos.json — open it in https://ui.perfetto.dev

@@ -1,0 +1,419 @@
+"""Overload / multi-tenant robustness benchmark: drive a replicated
+cluster past its knee with a low-tier tenant flood and prove the
+overload stack (SLO tiers + weighted-fair DRR queueing + degradation
+ladder) protects the paying tier where a flat-EDF frontend does not.
+
+    PYTHONPATH=src python benchmarks/overload_bench.py
+        [--arch granite-8b] [--out BENCH_overload.json]
+    PYTHONPATH=src python benchmarks/overload_bench.py --smoke
+
+Three rounds over the SAME seeded workload (fresh engines each):
+
+  baseline    — steady gold+silver traffic only (no flood), fair
+                frontend: the unloaded goodput reference.
+  unprotected — flat-EDF frontend (tenant tags stripped, no ladder),
+                flood ON: shows the failure mode the stack exists for
+                (reported, not gated — EDF happens to be a decent
+                scheduler; the contrast column, not the proof).
+  protected   — tenants + OverloadDetector + paced DRR dispatch +
+                token-bucket admission, flood ON: the gated round.
+
+Acceptance gates (smoke and full):
+
+  retention      gold (protected-tier) goodput under the flood >= 0.9x
+                 its unloaded baseline.
+  no_starvation  the DRR queue's observed worst grants-to-service
+                 (``max_wait_rounds``) stays within its provable
+                 ``starvation_bound`` — zero starved tenants.
+  bit_identical  every FINISHED stream equals the single-engine
+                 unloaded reference for that request; browned-out
+                 streams are exact PREFIXES of the reference.
+  typed_rejects  every rejection carries a finite retry_after_s > 0.
+  ladder         the detector actually walked the ladder (transitions
+                 recorded; shed or brownout or reject happened).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from bench_noise import noise_report, pin_host_threads
+
+pin_host_threads()  # must precede the first jax import
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.costmodel import estimate_decode, estimate_prefill
+from repro.models import init_params
+from repro.serving import (
+    ClusterFrontend,
+    EngineConfig,
+    OverloadDetector,
+    Request,
+    ServingEngine,
+    TenantClass,
+    request_cost,
+)
+
+TTFT_SLO = 10.0  # virtual-seconds first-token SLO the gold tier declares
+
+
+def tenant_classes():
+    """gold is the protected (top) tier; bulk is first on the ladder."""
+    return {
+        "gold": TenantClass("gold", tier=2, weight=4.0),
+        "silver": TenantClass("silver", tier=1, weight=2.0,
+                              brownout_frac=0.5),
+        "bulk": TenantClass("bulk", tier=0, weight=1.0,
+                            rate_tokens_s=256.0, burst_tokens=2048.0),
+    }
+
+
+def make_workload(*, vocab, seed, gold=12, silver=8, bulk=48,
+                  flood_t0=10.0, flood_rate=2.0):
+    """Steady gold/silver arrivals plus a bulk burst from ``flood_t0``
+    at ``flood_rate`` requests per virtual second — several times the
+    cluster's token drain rate."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+
+    def mk(rid, tenant, t, plen, budget, slo):
+        return Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, plen).astype(np.int32),
+            max_new_tokens=budget, arrival_time=float(t),
+            tenant=tenant, ttft_slo_s=slo)
+
+    rid = 0
+    for i in range(gold):
+        reqs.append(mk(rid, "gold", 2.0 + 6.0 * i,
+                       int(rng.integers(8, 17)),
+                       int(rng.integers(8, 13)), TTFT_SLO))
+        rid += 1
+    for i in range(silver):
+        reqs.append(mk(rid, "silver", 4.0 + 9.0 * i,
+                       int(rng.integers(8, 17)),
+                       int(rng.integers(8, 13)), 2.0 * TTFT_SLO))
+        rid += 1
+    for i in range(bulk):
+        reqs.append(mk(rid, "bulk", flood_t0 + i / flood_rate,
+                       int(rng.integers(12, 25)),
+                       int(rng.integers(10, 17)), 0.0))
+        rid += 1
+    return reqs
+
+
+def offered_over_capacity(cfg, reqs, *, replicas, flood_t0, flood_rate):
+    """Offered token load during the flood window vs the cluster's
+    cost-model drain rate — the 'Nx capacity' headline."""
+    bulk = [r for r in reqs if r.tenant == "bulk"]
+    toks = sum(request_cost(r) for r in bulk)
+    window_s = len(bulk) / flood_rate
+    dec = estimate_decode(cfg, 1, 128).latency_s
+    pre = estimate_prefill(cfg, 1, 16).latency_s
+    mean_cost = np.mean([request_cost(r) for r in bulk])
+    svc_s = pre + dec * (mean_cost - 16)  # per-request modeled service
+    cap_rps = replicas / svc_s  # requests/s the pool can model-drain
+    # offered requests per VIRTUAL second vs what one virtual second of
+    # stepping drains (1 batched tick per replica per second here)
+    drain_tokens_per_s = replicas * 2.0  # slots tokens per tick
+    offered_tokens_per_s = toks / window_s
+    return {
+        "flood_requests": len(bulk),
+        "offered_tokens_per_s": float(offered_tokens_per_s),
+        "drain_tokens_per_s": float(drain_tokens_per_s),
+        "ratio": float(offered_tokens_per_s / drain_tokens_per_s),
+        "modeled_service_s_per_request": float(svc_s),
+        "modeled_capacity_rps": float(cap_rps),
+    }
+
+
+def build_cluster(cfg, params, *, replicas, protected, backlog_high_s,
+                  seed=0):
+    engines = [ServingEngine(cfg, params, EngineConfig(
+        slots=2, window=128, max_seq=192, sync_every=4))
+        for _ in range(replicas)]
+    if not protected:
+        return ClusterFrontend(engines, policy="predicted", seed=seed), None
+    det = OverloadDetector(ttft_slo_s=TTFT_SLO,
+                           backlog_high_s=backlog_high_s,
+                           period_s=2.0, patience=2, relax_patience=6,
+                           min_window=4)
+    fe = ClusterFrontend(engines, policy="predicted", seed=seed,
+                         tenants=tenant_classes(), overload=det,
+                         fair_quantum=64.0)
+    return fe, det
+
+
+def drive(fe, reqs, *, dt=1.0, max_steps=4000):
+    pending = sorted(reqs, key=lambda r: (r.arrival_time, r.rid))
+    resolved = {}
+    i, now = 0, 0.0
+    for _ in range(max_steps):
+        while i < len(pending) and pending[i].arrival_time <= now:
+            fe.submit(pending[i], now)
+            i += 1
+        for req in fe.step(now):
+            resolved[req.rid] = req
+        if i >= len(pending) and len(resolved) >= len(pending):
+            break
+        now += dt
+    for req in fe.drain(now):
+        resolved.setdefault(req.rid, req)
+    return resolved, now
+
+
+def reference_streams(cfg, params, reqs, *, max_steps=6000):
+    """Unloaded single-engine greedy reference for every request (same
+    rid/prompt/budget, no tenancy): the bit-identity ground truth —
+    streams must not depend on the overload machinery's routing, pacing,
+    or ladder decisions."""
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, window=128, max_seq=192, sync_every=4))
+    clones = [Request(rid=r.rid, prompt=r.prompt.copy(),
+                      max_new_tokens=r.max_new_tokens) for r in reqs]
+    out = {}
+    now = 0.0
+    queue = list(clones)
+    while queue or not eng.idle:
+        while queue and eng.submit(queue[0], now):
+            queue.pop(0)
+        for req in eng.step(now):
+            out[req.rid] = list(map(int, req.output))
+        now += 1.0
+        if now > max_steps:
+            raise RuntimeError("reference run did not converge")
+    for req in eng.drain(now):
+        out[req.rid] = list(map(int, req.output))
+    return out
+
+
+def goodput_by_tenant(resolved, reqs):
+    """met-SLO fraction per tenant over its SLO-tracked submissions
+    (unfinished/shed/rejected tracked requests count as misses — the
+    client-visible definition)."""
+    out = {}
+    for tenant in sorted({r.tenant for r in reqs}):
+        tracked = [r for r in reqs
+                   if r.tenant == tenant and r.ttft_slo_s > 0]
+        if not tracked:
+            continue
+        met = sum(1 for r in tracked
+                  if (res := resolved.get(r.rid)) is not None
+                  and res.meets_slo() is True)
+        out[tenant] = {"tracked": len(tracked), "met": met,
+                       "goodput": met / len(tracked)}
+    return out
+
+
+def audit_streams(resolved, ref):
+    """Every FINISHED stream must equal the reference; a browned-out
+    stream must be an exact PREFIX of it."""
+    mismatches, prefixes, full = [], 0, 0
+    for rid, req in resolved.items():
+        if req.state.value != "finished":
+            continue
+        got = list(map(int, req.output))
+        want = ref[rid]
+        if req.browned_out_tokens:
+            if got != want[:len(got)]:
+                mismatches.append(rid)
+            else:
+                prefixes += 1
+        elif got != want:
+            mismatches.append(rid)
+        else:
+            full += 1
+    return {"finished": prefixes + full + len(mismatches),
+            "full_matches": full, "prefix_matches": prefixes,
+            "mismatched_rids": mismatches}
+
+
+def audit_rejections(resolved):
+    rejects = [r for r in resolved.values()
+               if r.state.value == "failed"
+               and r.fail_reason.startswith("rejected")]
+    sheds = [r for r in resolved.values()
+             if r.fail_reason.startswith("shed: overload ladder")]
+    bad = [r.rid for r in rejects + sheds
+           if not (r.retry_after_s > 0 and math.isfinite(r.retry_after_s))]
+    return {"rejected": len(rejects), "ladder_shed": len(sheds),
+            "missing_retry_after_rids": bad}
+
+
+def run(report, *, arch="granite-8b", replicas=2, seed=0,
+        gold=12, silver=8, bulk=48, out=""):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(seed))
+    flood_t0, flood_rate = 10.0, 2.0
+    mk = lambda: make_workload(vocab=cfg.vocab_size, seed=seed, gold=gold,
+                               silver=silver, bulk=bulk, flood_t0=flood_t0,
+                               flood_rate=flood_rate)
+    # overload threshold: ~4 mean requests of modeled backlog per replica
+    probe = mk()
+    dec = estimate_decode(cfg, 1, 128).latency_s
+    pre = estimate_prefill(cfg, 1, 16).latency_s
+    mean_cost = float(np.mean([request_cost(r) for r in probe]))
+    backlog_high_s = 4.0 * (pre + dec * mean_cost)
+    results = {"arch": arch, "replicas": replicas, "seed": seed,
+               "backlog_high_s": backlog_high_s, **noise_report()}
+    results["load"] = offered_over_capacity(
+        cfg, probe, replicas=replicas, flood_t0=flood_t0,
+        flood_rate=flood_rate)
+    report("overload_flood_over_capacity",
+           round(results["load"]["ratio"], 2),
+           f"{results['load']['flood_requests']} bulk requests")
+
+    ref = reference_streams(cfg, params, probe)
+
+    # -- round 1: unloaded baseline (fair stack on, no flood) -------------
+    steady = [r for r in mk() if r.tenant != "bulk"]
+    fe, _ = build_cluster(cfg, params, replicas=replicas, protected=True,
+                          backlog_high_s=backlog_high_s, seed=seed)
+    resolved, _ = drive(fe, steady)
+    results["baseline"] = {"goodput": goodput_by_tenant(resolved, steady),
+                           "streams": audit_streams(resolved, ref)}
+
+    # -- round 2: flat EDF, flood on (the contrast column) ----------------
+    flat = mk()
+    for r in flat:
+        r.tenant = ""  # untagged: the exact pre-fair flat-EDF frontend
+    fe, _ = build_cluster(cfg, params, replicas=replicas, protected=False,
+                          backlog_high_s=backlog_high_s, seed=seed)
+    resolved, _ = drive(fe, flat)
+    by_rid_tenant = {r.rid: r.tenant for r in probe}
+    tagged = [Request(rid=r.rid, prompt=r.prompt,
+                      max_new_tokens=r.max_new_tokens,
+                      arrival_time=r.arrival_time,
+                      tenant=by_rid_tenant[r.rid],
+                      ttft_slo_s=r.ttft_slo_s) for r in flat]
+    results["unprotected"] = {
+        "goodput": goodput_by_tenant(resolved, tagged)}
+
+    # -- round 3: full overload stack, flood on (the gated round) ---------
+    flood = mk()
+    fe, det = build_cluster(cfg, params, replicas=replicas, protected=True,
+                            backlog_high_s=backlog_high_s, seed=seed)
+    resolved, end_t = drive(fe, flood)
+    merged = fe.merged_metrics()
+    max_cost = max(request_cost(r) for r in probe)
+    results["protected"] = {
+        "goodput": goodput_by_tenant(resolved, flood),
+        "streams": audit_streams(resolved, ref),
+        "rejections": audit_rejections(resolved),
+        "ladder_transitions": det.transitions,
+        "peak_level": max([lvl for _, lvl in det.transitions] or [0]),
+        "shed": merged.shed, "browned_out": merged.browned_out,
+        "rejected": merged.rejected,
+        "max_wait_rounds": fe._queue.max_wait_rounds,
+        "starvation_bound": fe._queue.starvation_bound(max_cost),
+        "tenant_counters": {
+            name: {f: getattr(tm, f) for f in type(tm)._COUNTERS}
+            for name, tm in sorted(merged.tenants.items())},
+        "end_t": end_t,
+    }
+    p, b = results["protected"], results["baseline"]
+    gold_base = b["goodput"]["gold"]["goodput"]
+    gold_flood = p["goodput"]["gold"]["goodput"]
+    p["gold_retention"] = (gold_flood / gold_base) if gold_base else 0.0
+    report("overload_gold_goodput_baseline", round(gold_base, 4), "")
+    report("overload_gold_goodput_flood", round(gold_flood, 4),
+           f"retention {p['gold_retention']:.3f} (gate >= 0.9)")
+    u = results["unprotected"]["goodput"].get("gold", {})
+    report("overload_gold_goodput_flat_edf",
+           round(u.get("goodput", 0.0), 4), "contrast, ungated")
+    report("overload_ladder",
+           "->".join(str(lvl) for _, lvl in det.transitions) or "none",
+           f"shed={merged.shed} browned_out={merged.browned_out} "
+           f"rejected={merged.rejected}")
+    report("overload_drr_wait_rounds", p["max_wait_rounds"],
+           f"bound {p['starvation_bound']}")
+
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+        report("overload_bench_json", out, "full results")
+    return results
+
+
+def smoke(*, arch="granite-8b") -> int:
+    res = run(lambda *a: None, arch=arch, gold=10, silver=6, bulk=36)
+    failures = []
+
+    def check(name, ok, got):
+        print(f"smoke:{name}: {'ok' if ok else 'FAIL'} ({got})")
+        if not ok:
+            failures.append(name)
+
+    p = res["protected"]
+    check("flood_exceeds_capacity", res["load"]["ratio"] >= 3.0,
+          f"offered/drain {res['load']['ratio']:.2f}x (want >= 3x)")
+    check("gold_retention", p["gold_retention"] >= 0.9,
+          f"{p['gold_retention']:.3f} (gate >= 0.9)")
+    check("ladder_engaged",
+          len(p["ladder_transitions"]) > 0
+          and (p["shed"] + p["browned_out"] + p["rejected"]) > 0,
+          f"transitions={p['ladder_transitions']} shed={p['shed']} "
+          f"browned={p['browned_out']} rejected={p['rejected']}")
+    check("no_starvation",
+          p["max_wait_rounds"] <= p["starvation_bound"],
+          f"max_wait_rounds {p['max_wait_rounds']} <= "
+          f"bound {p['starvation_bound']}")
+    for round_name in ("baseline", "protected"):
+        s = res[round_name]["streams"]
+        check(f"bit_identical_{round_name}",
+              s["mismatched_rids"] == [] and s["finished"] > 0,
+              f"{s['full_matches']} full + {s['prefix_matches']} prefix "
+              f"of {s['finished']}")
+    rj = p["rejections"]
+    check("typed_rejections", rj["missing_retry_after_rids"] == [],
+          f"{rj['rejected']} rejects + {rj['ladder_shed']} sheds, "
+          f"{len(rj['missing_retry_after_rids'])} missing retry_after")
+    if failures:
+        print(f"smoke: FAILED ({', '.join(failures)})")
+        return 1
+    print("smoke: overload gates green — retention, fairness, "
+          "bit-identity, typed retry-after")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--replicas", type=int, default=2)
+    ap.add_argument("--gold", type=int, default=12)
+    ap.add_argument("--silver", type=int, default=8)
+    ap.add_argument("--bulk", type=int, default=48)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: retention/fairness/identity/retry-after")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_overload.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(arch=args.arch))
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}")
+
+    print("name,value,derived")
+    res = run(report, arch=args.arch, replicas=args.replicas,
+              gold=args.gold, silver=args.silver, bulk=args.bulk,
+              seed=args.seed, out=args.out)
+    p = res["protected"]
+    print(f"# gold retention {p['gold_retention']:.3f} under "
+          f"{res['load']['ratio']:.1f}x flood; ladder "
+          f"{p['ladder_transitions']}; drr wait {p['max_wait_rounds']}"
+          f"/{p['starvation_bound']}")
+
+
+if __name__ == "__main__":
+    main()

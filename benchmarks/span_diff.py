@@ -1,0 +1,163 @@
+"""Span-diff triage gate: catch *phase-level* serving regressions in CI
+by diffing per-span-kind rollups against a committed baseline.
+
+    PYTHONPATH=src python benchmarks/span_diff.py            # gate
+    PYTHONPATH=src python benchmarks/span_diff.py --update   # re-baseline
+
+A fixed, seeded workload (greedy + seeded-sampled requests, preemption
+enabled, a 2-replica cluster frontend with tracing on) runs entirely on
+the VIRTUAL serving clock, so every span timestamp — and therefore every
+per-kind (count, seconds) rollup in ``Tracer.span_totals`` — is exactly
+reproducible: the only way the numbers move is a code change in how the
+serving stack spends its phases. The gate diffs each kind against
+``SPAN_BASELINE.json`` and fails naming the regressed phase:
+
+    span-diff: REGRESSED phase 'prefill': seconds +41.3% (2.10 -> 2.97)
+
+which turns "the cluster bench got slower" into "prefill time grew" at
+triage time, before anyone opens a profiler. Kinds appearing or
+vanishing also fail (a new phase is a behavior change someone must
+acknowledge via --update; a vanished one usually means stamps were
+dropped). Tolerance is deliberately loose (25% default) — the gate
+exists to catch step-change regressions, not noise; deliberate changes
+re-baseline with --update in the same PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving import (
+    ClusterFrontend,
+    EngineConfig,
+    Request,
+    SamplingParams,
+    ServingEngine,
+)
+
+BASELINE = os.path.join(os.path.dirname(__file__), "SPAN_BASELINE.json")
+
+
+def workload(vocab, *, n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab,
+                                int(rng.integers(8, 25))).astype(np.int32),
+            max_new_tokens=int(rng.integers(6, 13)),
+            arrival_time=float(i) * 1.5,
+            ttft_slo_s=20.0,
+            sampling=(SamplingParams(temperature=0.7, top_k=20,
+                                     seed=9000 + i)
+                      if i % 3 == 0 else SamplingParams())))
+    return reqs
+
+
+def collect_span_totals(*, arch="granite-8b", seed=0):
+    """Run the fixed traced workload; return {kind: [count, seconds]}
+    summed across replicas. Virtual clock throughout — deterministic."""
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(seed))
+    engines = [ServingEngine(cfg, params, EngineConfig(
+        slots=2, window=96, max_seq=160, sync_every=4, tracing=True,
+        preemption=True))
+        for _ in range(2)]
+    fe = ClusterFrontend(engines, policy="predicted", seed=seed,
+                         tracing=True)
+    reqs = workload(cfg.vocab_size, seed=seed)
+    pending = sorted(reqs, key=lambda r: (r.arrival_time, r.rid))
+    i, now, resolved = 0, 0.0, 0
+    while resolved < len(reqs):
+        while i < len(pending) and pending[i].arrival_time <= now:
+            fe.submit(pending[i], now)
+            i += 1
+        resolved += len(fe.step(now))
+        now += 1.0
+        if now > 2000:
+            raise RuntimeError("span workload did not converge")
+    totals = {}
+    for eng in fe.engines:
+        for kind, (c, s) in eng.tracer.span_totals.items():
+            cur = totals.setdefault(kind, [0, 0.0])
+            cur[0] += c
+            cur[1] += round(s, 9)
+    return {k: [c, round(s, 6)] for k, (c, s) in sorted(totals.items())}
+
+
+def diff(baseline, current, *, tolerance):
+    """Regression lines (empty = green), each naming the phase."""
+    problems = []
+    for kind in sorted(set(baseline) | set(current)):
+        if kind not in current:
+            problems.append(f"phase '{kind}' VANISHED (baseline "
+                            f"{baseline[kind][0]} spans) — stamps dropped?")
+            continue
+        if kind not in baseline:
+            c, s = current[kind]
+            problems.append(f"NEW phase '{kind}' ({c} spans, {s:.4g}s) — "
+                            f"acknowledge with --update")
+            continue
+        (c0, s0), (c, s) = baseline[kind], current[kind]
+        if abs(c - c0) / max(1.0, c0) > tolerance:
+            problems.append(
+                f"REGRESSED phase '{kind}': count "
+                f"{(c - c0) / max(1.0, c0):+.1%} ({c0} -> {c})")
+        if abs(s - s0) > 1e-6 and abs(s - s0) / max(abs(s0), 1e-9) > tolerance:
+            problems.append(
+                f"REGRESSED phase '{kind}': seconds "
+                f"{(s - s0) / max(abs(s0), 1e-9):+.1%} "
+                f"({s0:.4g} -> {s:.4g})")
+    return problems
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="max relative drift per phase (count and seconds)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the committed baseline from this run")
+    args = ap.parse_args()
+
+    current = collect_span_totals(arch=args.arch, seed=args.seed)
+    if args.update:
+        with open(args.baseline, "w") as f:
+            json.dump({"arch": args.arch, "seed": args.seed,
+                       "span_totals": current}, f, indent=2)
+            f.write("\n")
+        print(f"span-diff: baseline updated ({args.baseline}): "
+              f"{len(current)} phases")
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"span-diff: no baseline at {args.baseline}; "
+              f"run with --update to create it")
+        return 1
+    with open(args.baseline) as f:
+        base = json.load(f)["span_totals"]
+    problems = diff(base, current, tolerance=args.tolerance)
+    for p in problems:
+        print(f"span-diff: {p}")
+    if problems:
+        print(f"span-diff: FAILED ({len(problems)} phase regression(s); "
+              f"deliberate changes: --update)")
+        return 1
+    print(f"span-diff: green — {len(current)} phases within "
+          f"{args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

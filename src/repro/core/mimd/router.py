@@ -99,8 +99,16 @@ class ServiceRouter:
                     return inst
         return None
 
-    def route(self, job: Job) -> Optional[Instance]:
+    def route(self, job: Job,
+              eligible: Optional[set] = None) -> Optional[Instance]:
+        """Pick a replica for ``job`` under the configured policy.
+        ``eligible`` (instance names) restricts the candidate pool — the
+        cluster frontend's circuit breaker passes it so a half-open
+        recovering replica only sees bounded probe traffic. None = whole
+        pool; an empty intersection returns None (caller holds the job)."""
         pool = self.pools.get(job.model)
+        if pool and eligible is not None:
+            pool = [i for i in pool if i.name in eligible]
         if not pool:
             return None
         if self.policy == "round-robin":
@@ -131,10 +139,17 @@ class ServiceRouter:
 
     # -- autoscaling ---------------------------------------------------
     def pressure(self, model: str) -> float:
+        """Mean predicted backlog seconds PER CHIP. The denominator is
+        ``pool_chips``, not the replica count: a tp=8 replica is 8 chips
+        of capacity, so the same queue spread over it is 8x less
+        pressure than over a 1-chip replica — scale decisions must weigh
+        hardware, not processes (each replica's ``device.speed`` mirrors
+        its chip count; 1.0 for single-device engines, so homogeneous
+        1-chip pools are numerically unchanged)."""
         pool = self.pools.get(model, [])
         if not pool:
             return float("inf")
-        return sum(i.queue_s for i in pool) / len(pool)
+        return sum(i.queue_s for i in pool) / max(1.0, self.pool_chips(model))
 
     def pool_chips(self, model: str) -> float:
         """Devices the pool occupies (each replica's ``device.speed``
@@ -146,7 +161,10 @@ class ServiceRouter:
 
     def want_scale(self, model: str, *, high_s: float = 1.0,
                    low_s: float = 0.05) -> int:
-        """+1 = scale out, -1 = scale in, 0 = hold."""
+        """+1 = scale out, -1 = scale in, 0 = hold. Thresholds compare
+        against chip-weighted ``pressure`` (backlog seconds per chip),
+        so a pool of tp=8 replicas doesn't scale out 8x too eagerly —
+        the ROADMAP-flagged replicas-vs-chips bug in scale decisions."""
         p = self.pressure(model)
         if p > high_s:
             return 1

@@ -29,6 +29,19 @@ metrics registry (counters + mergeable latency histograms) as
 Prometheus-style text exposition plus a JSON snapshot at ``PATH.json``.
 ``--profile-dir DIR`` arms ``jax.profiler`` around the serving loop via
 ``EngineConfig.profile_dir`` (TensorBoard-loadable XLA trace).
+``--trace-sample-n N`` keeps tracing affordable at rate: only every Nth
+request (by rid) carries a span trace.
+
+Multi-tenant overload control (PR 9, serving/overload.py):
+
+``--tenants "gold=2:4,bulk=0:1:256:2048"`` declares SLO classes
+(``name=tier:weight[:rate_tokens_s[:burst_tokens]]``); the synthetic
+client tags requests round-robin across them, the frontend queue
+becomes weighted-fair (DRR across tenants, EDF within), and over-rate
+submits are refused with a finite ``retry_after_s``. ``--overload``
+additionally arms the degradation-ladder detector (shed lowest tier →
+brownout → reject-with-retry-after; pooled p99 TTFT vs ``--ttft-slo-ms``
+plus cost-model backlog) and the failover circuit breaker.
 """
 from __future__ import annotations
 
@@ -45,14 +58,33 @@ from repro.core.costmodel import suggest_health_timeout_s
 from repro.core.mimd.router import POLICIES
 from repro.models import init_params
 from repro.serving import (
+    CircuitBreaker,
     ClusterFrontend,
     DeviceTopology,
     EngineConfig,
+    OverloadDetector,
     Request,
     SamplingParams,
     ServingEngine,
+    TenantClass,
 )
 from repro.serving.trace_export import request_traces, write_chrome_trace
+
+
+def _parse_tenants(spec: str) -> dict:
+    """``gold=2:4,bulk=0:1:256:2048`` ->
+    ``{name: TenantClass}`` (name=tier:weight[:rate_tokens_s[:burst]])."""
+    tenants = {}
+    for part in filter(None, spec.split(",")):
+        name, _, shape = part.partition("=")
+        f = [x for x in shape.split(":")] if shape else []
+        tenants[name] = TenantClass(
+            name,
+            tier=int(f[0]) if len(f) > 0 and f[0] else 0,
+            weight=float(f[1]) if len(f) > 1 and f[1] else 1.0,
+            rate_tokens_s=float(f[2]) if len(f) > 2 and f[2] else 0.0,
+            burst_tokens=float(f[3]) if len(f) > 3 and f[3] else 0.0)
+    return tenants
 
 
 def _engine_config(args) -> EngineConfig:
@@ -69,6 +101,7 @@ def _engine_config(args) -> EngineConfig:
                         topology=DeviceTopology(dp=args.dp, tp=args.tp),
                         moe_capacity_policy=args.moe_capacity or None,
                         tracing=bool(args.trace_out),
+                        trace_sample_n=args.trace_sample_n,
                         profile_dir=args.profile_dir or None)
 
 
@@ -157,6 +190,18 @@ def main():
     ap.add_argument("--trace-out", default="",
                     help="turn on request span tracing and write the run "
                          "as Chrome-trace JSON (ui.perfetto.dev)")
+    ap.add_argument("--trace-sample-n", type=int, default=1,
+                    help="with tracing on, trace only every Nth request "
+                         "(rid %% N == 0); 1 = all")
+    ap.add_argument("--tenants", default="",
+                    help="SLO classes as name=tier:weight[:rate_tokens_s"
+                         "[:burst_tokens]],... — requests are tagged "
+                         "round-robin; the frontend queue turns "
+                         "weighted-fair (DRR across tenants)")
+    ap.add_argument("--overload", action="store_true",
+                    help="arm the degradation-ladder overload detector "
+                         "(uses --ttft-slo-ms as the pooled p99 target) "
+                         "and the failover circuit breaker")
     ap.add_argument("--profile-dir", default="",
                     help="arm jax.profiler around the serving loop; the "
                          "XLA trace lands in this dir (TensorBoard)")
@@ -192,9 +237,15 @@ def main():
               + (f", moe_capacity_policy={eng.moe_capacity_policy}"
                  if eng.moe_capacity_policy else ""))
 
+    tenants = _parse_tenants(args.tenants)
+    if args.overload and not tenants:
+        raise SystemExit("--overload needs --tenants: the degradation "
+                         "ladder defends SLO tiers")
     cluster = None
     engines = [eng]
-    if args.replicas > 1:
+    if args.replicas > 1 or tenants:
+        # tenants force the cluster path even at 1 replica: the fair
+        # queue, admission, and ladder live at the frontend
         engines = [eng] + [_build_engine(cfg, params, args)
                            for _ in range(args.replicas - 1)]
         # cost-model ticks model the target chip, not this host: floor the
@@ -202,20 +253,36 @@ def main():
         health_s = max(1.0, suggest_health_timeout_s(cfg, slots=eng.slots,
                                                      context=eng.window,
                                                      n_chips=eng.n_chips))
+        detector = (OverloadDetector(
+            ttft_slo_s=(args.ttft_slo_ms / 1e3) or 1.0)
+            if args.overload else None)
         cluster = ClusterFrontend(engines, policy=args.route_policy,
                                   seed=args.seed,
                                   health_timeout_s=health_s,
                                   max_retries=args.max_retries,
-                                  tracing=bool(args.trace_out))
-        print(f"cluster frontend: {args.replicas} replicas, "
-              f"policy={args.route_policy}, EDF frontend queue, "
-              f"health_timeout={health_s*1e3:.0f}ms "
+                                  tracing=bool(args.trace_out),
+                                  tenants=tenants or None,
+                                  overload=detector,
+                                  breaker=(CircuitBreaker()
+                                           if args.overload else None))
+        print(f"cluster frontend: {len(engines)} replicas, "
+              f"policy={args.route_policy}, "
+              f"{'weighted-fair (DRR)' if tenants else 'EDF'} frontend "
+              f"queue, health_timeout={health_s*1e3:.0f}ms "
               f"max_retries={args.max_retries}")
+        if tenants:
+            print("tenants: " + "  ".join(
+                f"{tc.name}(tier={tc.tier} w={tc.weight:g}"
+                + (f" rate={tc.rate_tokens_s:g}tok/s" if tc.rate_tokens_s
+                   else "") + ")" for tc in tenants.values())
+                + ("  [overload ladder armed]" if args.overload else ""))
 
     arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    names = list(tenants)
     reqs = [
         Request(
             rid=i,
+            tenant=names[i % len(names)] if names else "",
             prompt=rng.integers(0, cfg.vocab_size,
                                 args.prompt_len).astype(np.int32),
             max_new_tokens=args.max_new,
@@ -295,6 +362,14 @@ def main():
             print(f"  {inst.name}: routed={inst.routed} "
                   f"utilization={inst.utilization:.2f} "
                   f"residual={inst.corrector.correction:+.3f}")
+    for name, tm in sorted(m.tenants.items()):
+        goodput = (f" goodput={tm.slo_met / tm.slo_tracked:.3f}"
+                   if tm.slo_tracked else "")
+        print(f"  tenant {name}: admitted={tm.admitted} "
+              f"completed={tm.completed} tokens={tm.total_tokens} "
+              f"shed={tm.shed} rejected={tm.rejected} "
+              f"browned_out={tm.browned_out}"
+              f"(-{tm.brownout_trimmed_tokens}tok){goodput}")
 
     if args.metrics_out:
         reg = (cluster.metrics_registry() if cluster is not None

@@ -47,6 +47,19 @@ deregistered, and every request on its ledger is replayed on survivors —
 streams bit-identical — under a per-request retry budget with
 exponential backoff. Typed rejections (unknown model, oversize prompt)
 resolve as FAILED outcomes instead of exceptions.
+
+Overload control (see serving/README.md "Overload semantics"): with
+``tenants`` registered, the frontend queue is a token-cost-weighted
+deficit-round-robin ``WeightedFairQueue`` (EDF within a tenant, DRR
+across tenants) and dispatch is *paced* — each replica's queue is fed
+only to a bounded depth, so excess burst load waits at the frontend
+where fair queueing (not engine-side EDF luck) decides who goes next.
+Per-tenant ``TokenBucket`` admission and the ``OverloadDetector``'s
+degradation ladder (shed lowest tier -> brownout budget trims -> typed
+reject-with-retry-after) ride on top; a ``CircuitBreaker`` keeps the
+failover retry wave from re-flooding a replica that just recovered.
+Without tenants, the queue degenerates to the exact old flat-EDF order
+and dispatch stays eager — the single-tenant path is unchanged.
 """
 from __future__ import annotations
 
@@ -61,7 +74,12 @@ from repro.core.misd.scheduler import Device, Job
 from repro.serving.engine import ServingEngine
 from repro.serving.faults import EngineFailure
 from repro.serving.metrics import MetricsRegistry, latency_histogram
-from repro.serving.request import Request, RequestState, ServeMetrics
+from repro.serving.overload import (BROWNOUT, NORMAL, REJECT, SHED,
+                                    CircuitBreaker, OverloadDetector,
+                                    TenantAdmission, TenantClass,
+                                    WeightedFairQueue)
+from repro.serving.request import (Request, RequestRejected, RequestState,
+                                   ServeMetrics)
 from repro.serving.tracing import Trace
 
 DEFAULT_POOL = ""  # model tag for homogeneous (single-model) clusters
@@ -208,9 +226,28 @@ class ClusterFrontend:
                  *, policy: str = "predicted", seed: int = 0,
                  edf: bool = True, health_timeout_s: float = 0.0,
                  max_retries: int = 3, retry_backoff_s: float = 0.0,
-                 tracing: bool = False):
+                 tracing: bool = False,
+                 tenants: Optional[Mapping[str, TenantClass]] = None,
+                 overload: Optional[OverloadDetector] = None,
+                 breaker: Optional[CircuitBreaker] = None,
+                 fair_quantum: float = 256.0,
+                 dispatch_depth: Optional[int] = None):
         self.router = ServiceRouter(policy=policy, seed=seed)
         self.edf = edf
+        # --- multi-tenant overload control (see serving/overload.py) ---
+        # tenants: name -> TenantClass turns on weighted-fair queueing +
+        # paced dispatch; overload: the degradation-ladder detector;
+        # breaker: circuit breaker over the failover/recovery path.
+        self.tenants: Dict[str, TenantClass] = dict(tenants or {})
+        self.fair = bool(self.tenants)
+        self.overload = overload
+        self.breaker = breaker
+        self.dispatch_depth = dispatch_depth
+        self._admission = (TenantAdmission(self.tenants)
+                           if self.tenants else None)
+        tiers = [tc.tier for tc in self.tenants.values()]
+        self._top_tier = max(tiers) if tiers else 0
+        self._low_tier = min(tiers) if tiers else 0
         # frontend-side span tracing: every submitted request gets a Trace
         # stamped with queue/dispatch/failover events here; engines stamp
         # their phases into the SAME trace (engine-side tracing need not
@@ -229,7 +266,13 @@ class ClusterFrontend:
         self.draining: List[EngineInstance] = []
         self.retired: List[EngineInstance] = []  # drained + reaped
         self.failed: List[EngineInstance] = []  # declared dead
-        self._queue: List = []  # heap of (deadline_key, seq, Request)
+        # the frontend queue: weighted-fair across tenants (DRR), EDF
+        # within each tenant. With a single (untagged) tenant its drain
+        # order is exactly the old flat-EDF heap's.
+        self._queue = WeightedFairQueue(
+            edf=edf, quantum=fair_quantum,
+            weight_of=lambda name: (self.tenants[name].weight
+                                    if name in self.tenants else 1.0))
         self._seq = itertools.count()
         self._names = itertools.count()
         # per-replica ledger of dispatched-but-unresolved requests: the
@@ -308,14 +351,42 @@ class ClusterFrontend:
             self._resolve(req, now, RequestState.FAILED,
                           f"rejected: no engine pool for model "
                           f"{req.model!r} (pools: {list(self.router.pools)})")
-            self.metrics.rejected += 1
+            self._count_rejected(req)
             return False
+        tc = self.tenants.get(req.tenant)
+        if tc is not None:
+            req.tier = tc.tier  # the registered class is authoritative
+        # degradation ladder, top rung: under sustained saturation every
+        # sub-protected submission is refused OUTRIGHT with a finite
+        # cost-model retry horizon — the serverless-inference contract
+        if (self.overload is not None and self.overload.level >= REJECT
+                and req.tier < self._top_tier):
+            req.retry_after_s = self.overload.retry_after_s()
+            self._resolve(req, now, RequestState.FAILED,
+                          f"rejected: cluster overloaded (ladder="
+                          f"{self.overload.level_name}); retry after "
+                          f"{req.retry_after_s:.3f}s")
+            self._count_rejected(req)
+            return False
+        # per-tenant token-bucket rate limit (typed, finite retry-after)
+        if self._admission is not None:
+            try:
+                self._admission.admit(req, now)
+            except RequestRejected as e:
+                req.retry_after_s = e.retry_after_s
+                self._resolve(req, now, RequestState.FAILED, str(e))
+                self._count_rejected(req)
+                return False
         self._enqueue(req)
         return True
 
     def _enqueue(self, req: Request):
-        key = req.ttft_deadline if self.edf else 0.0
-        heapq.heappush(self._queue, (key, next(self._seq), req))
+        self._queue.push(req)
+
+    def _count_rejected(self, req: Request):
+        self.metrics.rejected += 1
+        if req.tenant:
+            self.metrics.tenant(req.tenant).rejected += 1
 
     def _resolve(self, req: Request, now: float, state: RequestState,
                  reason: str):
@@ -330,14 +401,69 @@ class ClusterFrontend:
                             reason=reason[:120])
         self._resolved.append(req)
 
-    def _dispatch(self, now: float):
-        """Drain the frontend queue in EDF order, routing each request to
-        the policy-chosen replica. Routing is eager — engine-side backlogs
-        (and their paged backpressure) do the holding — so every policy
-        pays the same queueing machinery and differs ONLY in choice."""
+    def _dispatch_credit(self, now: float, reports=None) -> Optional[int]:
+        """Paced-dispatch budget for this tick (fair mode only): feed
+        each live replica's queue to a bounded depth (``dispatch_depth``,
+        default its slot count) and hold the rest at the frontend, where
+        DRR — not engine-side EDF — decides who goes next. None =
+        unlimited (the pre-fair eager dispatch)."""
+        if not self.fair:
+            return None
+        credit = 0
+        for inst in self.instances:
+            rep = (reports or {}).get(inst.name)
+            if rep is None:
+                rep = inst.engine.load_report()
+            depth = (self.dispatch_depth if self.dispatch_depth is not None
+                     else rep.slots)
+            credit += max(0, depth + rep.free_slots - rep.queued_requests)
+        return credit
+
+    def _shed(self, req: Request, now: float):
+        """Degradation-ladder shed: a lowest-tier request dropped under
+        overload, with the same retry-after contract as a rejection."""
+        req.retry_after_s = (self.overload.retry_after_s()
+                             if self.overload is not None else 0.0)
+        if req.trace is not None:
+            req.trace.event("shed", now, tier=req.tier,
+                            level=self.overload.level_name)
+        self.metrics.shed += 1
+        if req.tenant:
+            self.metrics.tenant(req.tenant).shed += 1
+        self._resolve(req, now, RequestState.TIMED_OUT,
+                      f"shed: overload ladder ({self.overload.level_name}) "
+                      f"dropped tier {req.tier}; retry after "
+                      f"{req.retry_after_s:.3f}s")
+
+    def _brownout(self, req: Request, now: float):
+        """Degradation-ladder brownout: trim a sub-protected request's
+        decode budget (recorded on the request + in metrics; the served
+        stream stays a bit-identical prefix of the unclamped one)."""
+        tc = self.tenants.get(req.tenant)
+        frac = tc.brownout_frac if tc is not None else 0.5
+        cap = max(1, int(req.max_new_tokens * frac))
+        if cap >= req.max_new_tokens:
+            return
+        trimmed = req.max_new_tokens - cap
+        req.max_new_tokens = cap
+        req.browned_out_tokens = trimmed
+        if req.trace is not None:
+            req.trace.event("brownout", now, tier=req.tier,
+                            trimmed=trimmed, budget=cap)
+
+    def _dispatch(self, now: float, reports=None):
+        """Drain the frontend queue in weighted-fair order (single-tenant:
+        plain EDF), routing each request to the policy-chosen replica.
+        Without tenants routing is eager — engine-side backlogs (and
+        their paged backpressure) do the holding — so every policy pays
+        the same queueing machinery and differs ONLY in choice. In fair
+        mode dispatch is paced by ``_dispatch_credit`` and the overload
+        ladder sheds/brownouts sub-protected work at the pop point."""
+        level = self.overload.level if self.overload is not None else NORMAL
+        credit = self._dispatch_credit(now, reports)
         held = []
-        while self._queue:
-            _, _, req = heapq.heappop(self._queue)
+        while self._queue and (credit is None or credit > 0):
+            req = self._queue.pop()
             doomed = req.overdue(now)
             if doomed is not None:
                 # cancelled / JCT-expired while still queued at the
@@ -350,6 +476,16 @@ class ClusterFrontend:
                     self._resolve(req, now, doomed,
                                   "deadline passed while queued at frontend")
                 continue
+            # degradation ladder at the pop point: shed the lowest tier
+            # outright, trim lower tiers' budgets under brownout. The
+            # protected (top) tier passes untouched at every level.
+            if (level >= SHED and req.tier <= self._low_tier
+                    and self._low_tier < self._top_tier):
+                self._shed(req, now)
+                continue
+            if (level >= BROWNOUT and req.tier < self._top_tier
+                    and not req.browned_out_tokens):
+                self._brownout(req, now)
             if not self.router.pools.get(req.model):
                 # pool emptied (every replica retired or failed) after
                 # this request was accepted: hold it at the frontend — it
@@ -357,8 +493,23 @@ class ClusterFrontend:
                 # rather than crashing the step and losing the request
                 held.append(req)
                 continue
+            eligible = None
+            if self.breaker is not None:
+                pool = self.router.pools.get(req.model, [])
+                eligible = {i.name for i in pool
+                            if self.breaker.allow(i.name, now)}
+                if not eligible:
+                    # every replica open/half-open at probe capacity:
+                    # hold — the breaker cooldown bounds the wait
+                    held.append(req)
+                    continue
+                if len(eligible) == len(pool):
+                    eligible = None  # all healthy: no filtering cost
             job = self._job_for(req, now)
-            inst = self.router.route(job)
+            inst = self.router.route(job, eligible=eligible)
+            if inst is None:
+                held.append(req)
+                continue
             # stash the closed-loop anchors on the request: the RAW
             # (uncorrected) predictions, so the residual is learned
             # against the cost model itself — observing the corrected
@@ -402,6 +553,10 @@ class ClusterFrontend:
                 # typed rejections return False and self-report through
                 # the engine's own finished stream)
                 self._outstanding.setdefault(inst.name, {})[req.rid] = req
+                if self.breaker is not None:
+                    self.breaker.note_dispatch(inst.name, now)
+                if credit is not None:
+                    credit -= 1
         for req in held:
             self._enqueue(req)
 
@@ -435,7 +590,24 @@ class ClusterFrontend:
         while self._held_retries and self._held_retries[0][0] <= now:
             _, _, req = heapq.heappop(self._held_retries)
             self._enqueue(req)
-        self._dispatch(now)
+        reports = None
+        if self.fair or self.overload is not None:
+            reports = {i.name: i.engine.load_report()
+                       for i in self.instances}
+            if self.overload is not None:
+                # frontend-queue drain estimate: queued token cost over
+                # the pool's aggregate per-tick token rate — under paced
+                # dispatch the burst waits HERE, invisible to engine-side
+                # backlog_s
+                ticks = [r.tick_est_s for r in reports.values()
+                         if r.tick_est_s > 0]
+                slots = sum(r.slots for r in reports.values())
+                fb = (self._queue.queued_cost
+                      * (sum(ticks) / len(ticks)) / max(1, slots)
+                      if ticks else 0.0)
+                self.overload.observe(now, reports.values(),
+                                      frontend_backlog_s=fb)
+        self._dispatch(now, reports)
         finished: List[Request] = []
         for inst in list(self.instances) + list(self.draining):
             eng = inst.engine
@@ -453,6 +625,9 @@ class ClusterFrontend:
             for req in out:
                 ledger.pop(req.rid, None)
                 self._observe(inst, req)
+                if (self.breaker is not None
+                        and req.state is RequestState.FINISHED):
+                    self.breaker.note_success(inst.name, now)
                 finished.append(req)
             if self._wedged(inst, now, busy):
                 self._fail_instance(inst, now)
@@ -503,9 +678,34 @@ class ClusterFrontend:
             self.draining.remove(inst)
         inst.failed = True
         self.failed.append(inst)
+        if self.breaker is not None:
+            self.breaker.trip(inst.name, now)
         for req in list(self._outstanding.pop(inst.name, {}).values()):
             self.metrics.failed_over += 1
             self._retry(req, now)
+
+    def revive(self, inst: EngineInstance, now: float = 0.0
+               ) -> EngineInstance:
+        """Re-register a previously failed replica whose host recovered
+        (chaos 'recover' + operator revive). The engine restarts EMPTY —
+        ``reset()`` drops whatever the dead process held; its ledgered
+        work was already replayed on survivors at failure time — and
+        keeps its jit caches warm. With a circuit breaker armed, the
+        replica re-enters HALF_OPEN after the cooldown: dispatch ramps
+        through bounded probes instead of re-flooding it (the breaker
+        keys on the instance NAME, which revive preserves)."""
+        if inst in self.failed:
+            self.failed.remove(inst)
+        inst.failed = False
+        inst._progress_sig = None
+        inst.last_progress_t = now
+        inst.engine.reset()
+        if self.edf:
+            inst.engine.edf_backlog = True
+        self.router.register(inst)
+        self.instances.append(inst)
+        inst.sync()
+        return inst
 
     def _retry(self, req: Request, now: float):
         """Re-submit a harvested request to the survivors, within its

@@ -110,6 +110,13 @@ class EngineConfig:
     # (host timestamps at existing sync points only; bit-identical
     # streams, bounded overhead — see serving/README.md "Observability")
     tracing: bool = False
+    # trace every Nth request (by rid modulus) instead of all of them —
+    # head-sampling for high-QPS fleets; 1 = trace everything. Span
+    # rollups (span_totals) then cover the sampled subset only.
+    trace_sample_n: int = 1
+    # retain the last N finished request traces on the Tracer for
+    # post-hoc inspection (0 = keep none; rollups are kept regardless)
+    trace_ring: int = 0
     # jax.profiler trace directory for ServingEngine.start_profile();
     # None leaves the profiler hook disarmed
     profile_dir: Optional[str] = None
@@ -124,6 +131,12 @@ class EngineConfig:
         if self.modeled_chips < 0:
             raise ValueError(f"modeled_chips must be >= 0, got "
                              f"{self.modeled_chips}")
+        if self.trace_sample_n < 1:
+            raise ValueError(f"trace_sample_n must be >= 1, got "
+                             f"{self.trace_sample_n}")
+        if self.trace_ring < 0:
+            raise ValueError(f"trace_ring must be >= 0, got "
+                             f"{self.trace_ring}")
 
     @property
     def n_chips(self) -> int:

@@ -681,7 +681,10 @@ class ServingEngine:
         # request's ``trace`` stays None and every stamp site is a single
         # attribute check.
         self._trace_on = bool(config.tracing)
-        self.tracer = Tracer(enabled=self._trace_on)
+        # head-sampling: trace rids where rid % trace_sample_n == 0 (1 =
+        # everything); the rollups then cover the sampled subset only
+        self._trace_every = max(1, config.trace_sample_n)
+        self.tracer = Tracer(enabled=self._trace_on, ring=config.trace_ring)
         self._win_t0 = 0.0  # serving-clock start of the open decode window
         self._last_now = 0.0  # most recent caller clock (compile events)
         # jit traces per trace-cache key proxy (shape-derived): the "flat
@@ -882,9 +885,11 @@ class ServingEngine:
     def _tr(self, req: Request) -> Optional[Trace]:
         """The trace to stamp for ``req``: its existing one (a tracing
         frontend may have created it), a fresh one when engine tracing is
-        on, or None (tracing fully off — no stamping)."""
+        on and the rid falls in the sample (``rid % trace_sample_n == 0``),
+        or None (tracing off / rid sampled out — no stamping)."""
         t = req.trace
-        if t is None and self._trace_on:
+        if (t is None and self._trace_on
+                and req.rid % self._trace_every == 0):
             t = req.trace = Trace(req.rid)
         return t
 
@@ -982,6 +987,8 @@ class ServingEngine:
         req.fail_reason = reason
         req.finish_time = now
         self.metrics.rejected += 1
+        if req.tenant:
+            self.metrics.tenant(req.tenant).rejected += 1
         self._tr_terminal(req, now, "rejected", reason=reason[:120])
         self._finished.append(req)
 
@@ -1457,6 +1464,18 @@ class ServingEngine:
         if req.prefill_done < 0:
             req.prefill_done = now
             self.metrics.ttfts.append(req.ttft)
+            # brownout is counted where the request SERVES (here), not at
+            # the frontend that trimmed it — merged cluster metrics must
+            # not double-count a request that crossed both layers
+            if req.browned_out_tokens:
+                self.metrics.browned_out += 1
+            if req.tenant:
+                tm = self.metrics.tenant(req.tenant)
+                tm.admitted += 1
+                tm.ttfts.append(req.ttft)
+                if req.browned_out_tokens:
+                    tm.browned_out += 1
+                    tm.brownout_trimmed_tokens += req.browned_out_tokens
         if req.state is RequestState.PREEMPTED:
             self.metrics.preempt_restores += 1
         t = req.trace
@@ -1596,6 +1615,8 @@ class ServingEngine:
                                f"{req.ttft_deadline:.4f} unreachable at "
                                f"{now:.4f} (overload)")
             self.metrics.shed += 1
+            if req.tenant:
+                self.metrics.tenant(req.tenant).shed += 1
         else:
             req.fail_reason = req.fail_reason or (
                 f"timed out: exceeded timeout_s={req.timeout_s:.4f} "
@@ -1683,6 +1704,10 @@ class ServingEngine:
         self.release_slot(slot)
         self.metrics.completed += 1
         self.metrics.total_tokens += len(req.output)
+        if req.tenant:
+            tm = self.metrics.tenant(req.tenant)
+            tm.completed += 1
+            tm.total_tokens += len(req.output)
         jct = now - req.arrival_time
         self.metrics.jcts.append(jct)
         self.metrics.latencies.append(jct)
@@ -1796,7 +1821,8 @@ class ServingEngine:
         self.metrics = ServeMetrics()
         # fresh span rollups + wall accounting; compile_events persist —
         # they mirror the jit caches, which reset() deliberately keeps warm
-        self.tracer = Tracer(enabled=self._trace_on)
+        self.tracer = Tracer(enabled=self._trace_on,
+                             ring=self.config.trace_ring)
         self._tick_wall = latency_histogram()
         self._win_t0 = 0.0
 
@@ -1884,7 +1910,9 @@ class ServingEngine:
             moe_drop_free_group=self._moe_gmax,
             histograms=self.metrics.histogram_wire(),
             span_totals=self.tracer.totals_wire(),
-            compile_events=tuple(sorted(self.compile_events.items())))
+            compile_events=tuple(sorted(self.compile_events.items())),
+            browned_out=self.metrics.browned_out,
+            tenant_stats=self.metrics.tenant_wire())
 
     @property
     def mesh_axes(self):

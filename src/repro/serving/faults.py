@@ -26,6 +26,13 @@ deterministically. This module provides the instruments:
 The proxy forwards every attribute read AND write to the wrapped engine
 (``ClusterFrontend.add_engine`` sets ``engine.edf_backlog``), so it can
 stand anywhere a ``ServingEngine`` does.
+
+A frontend built with a ``CircuitBreaker`` (serving/overload.py) layers
+recovery discipline over these faults: an ``EngineFailure`` trips the
+replica's breaker open (routing excludes it), ``revive()`` resets it,
+and a half-open replica takes only bounded probe traffic until it
+proves itself — so chaos-injected flapping can't turn the failover
+retry path into a retry storm.
 """
 from __future__ import annotations
 

@@ -183,6 +183,33 @@ class Histogram:
         self.vmax = max(self.vmax, other.vmax)
         return self
 
+    def delta(self, prev: "Histogram") -> "Histogram":
+        """Windowed view: the histogram of samples observed since ``prev``
+        (a past snapshot of this same series). Counts and sum subtract
+        exactly; min/max are NOT recoverable from cumulative state, so
+        the window's vmin/vmax are approximated by its populated bucket
+        bounds — quantiles stay within one bucket width, same guarantee
+        as everywhere else. Used by the overload detector to get a recent
+        p99 out of cumulative LoadReport histograms."""
+        if self.bounds != prev.bounds:
+            raise ValueError("delta requires identical bucket bounds")
+        h = Histogram(self.bounds, preset=self.preset)
+        for i, (a, b) in enumerate(zip(self.counts, prev.counts)):
+            if a < b:
+                raise ValueError(
+                    f"bucket {i} went backwards ({b} -> {a}); delta needs "
+                    f"snapshots of one monotonically growing histogram")
+            h.counts[i] = a - b
+        h.sum = self.sum - prev.sum
+        h.count = self.count - prev.count
+        if h.count:
+            nz = [i for i, c in enumerate(h.counts) if c]
+            lo = self.bounds[nz[0] - 1] if nz[0] > 0 else self.vmin
+            hi = (self.bounds[nz[-1]] if nz[-1] < len(self.bounds)
+                  else self.vmax)
+            h.vmin, h.vmax = min(lo, hi), max(lo, hi)
+        return h
+
     def copy(self) -> "Histogram":
         h = Histogram(self.bounds, preset=self.preset)
         h.counts = list(self.counts)

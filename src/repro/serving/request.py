@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -58,13 +58,26 @@ _TERMINAL = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
 
 
 class RequestRejected(ValueError):
-    """A request that can never be served as submitted (oversize prompt,
-    unknown model pool). ``ServingEngine.submit`` / ``ClusterFrontend.submit``
-    catch it and turn the request into a FAILED outcome with
-    ``fail_reason`` set (counted in ``ServeMetrics.rejected``) instead of
-    letting one poison request crash the serving loop; the low-level
-    ``try_admit`` path still raises it for direct callers. Subclasses
-    ``ValueError`` for backward compatibility."""
+    """A request that cannot be served as submitted (oversize prompt,
+    unknown model pool, tenant rate limit, overload rejection).
+    ``ServingEngine.submit`` / ``ClusterFrontend.submit`` catch it and
+    turn the request into a FAILED outcome with ``fail_reason`` set
+    (counted in ``ServeMetrics.rejected``) instead of letting one poison
+    request crash the serving loop; the low-level ``try_admit`` path
+    still raises it for direct callers. Subclasses ``ValueError`` for
+    backward compatibility.
+
+    ``retry_after_s`` is the rejection contract under overload (survey:
+    serverless inference makes typed retry-after the saturated-pool
+    protocol): cost-model-derived seconds after which a resubmission has
+    a real chance of admission. 0.0 means "permanent" — the request is
+    malformed and retrying will never help (oversize prompt); a finite
+    positive value means "come back later" (rate limit / load shedding).
+    """
+
+    def __init__(self, reason: str = "", retry_after_s: float = 0.0):
+        super().__init__(reason)
+        self.retry_after_s = float(retry_after_s)
 
 
 @dataclass(frozen=True)
@@ -100,6 +113,14 @@ class Request:
     priority: int = 0  # higher = more urgent
     sla_ms: float = 0.0  # legacy whole-request SLA; 0 = best-effort
     model: str = ""  # routing pool tag (cluster frontend); "" = default pool
+    # --- multi-tenant SLO classes (overload control; see serving/overload) ---
+    # tenant identity for weighted-fair admission; "" = untagged traffic
+    # (single-tenant path: no per-tenant accounting, no fair queueing)
+    tenant: str = ""
+    # SLO tier (higher = more protected). Stamped by the frontend from the
+    # registered TenantClass at submit; the degradation ladder sheds /
+    # brownouts / rejects strictly from the lowest tier upward.
+    tier: int = 0
     # --- per-request SLOs (survey §3.2.3; 0 = untracked) ---
     ttft_slo_s: float = 0.0  # time-to-first-token deadline after arrival
     tpot_slo_s: float = 0.0  # mean time-per-output-token bound
@@ -112,6 +133,15 @@ class Request:
     # token capacity (paged KV: prompt + output <= max_seq) — the stream
     # ends early by budget, not by eos.
     budget_capped: bool = False
+    # tokens the overload ladder's brownout trimmed off max_new_tokens at
+    # dispatch (per-tier budget trim under saturation); 0 = full budget.
+    # A browned-out stream is a bit-identical PREFIX of the unclamped one
+    # (greedy/seeded decode is position-keyed), so the degradation is
+    # "shorter answer", never "different answer".
+    browned_out_tokens: int = 0
+    # rejection contract: finite seconds after which a resubmission has a
+    # real chance (set with a "rejected:"/"shed:" fail_reason; 0 = n/a)
+    retry_after_s: float = 0.0
     # prompt tokens served from the shared-prefix KV cache (their prefill
     # was skipped: the pages were aliased from the PrefixIndex); 0 = cold
     prefix_hit_tokens: int = 0
@@ -245,6 +275,63 @@ class Request:
 
 
 @dataclass
+class TenantMetrics:
+    """Per-tenant serving counters + TTFT tail (overload control's
+    accounting unit). Exactly mergeable across replicas like everything
+    else in ``ServeMetrics``: counters add, the histogram merges bucket-
+    for-bucket — so cluster-wide per-tenant goodput needs no sample
+    shipping. Ships on the ``LoadReport`` v4 wire via ``to_wire``."""
+
+    admitted: int = 0  # requests that reached a slot (first token emitted)
+    completed: int = 0
+    total_tokens: int = 0
+    rejected: int = 0  # typed rejections (rate limit / ladder / unservable)
+    shed: int = 0  # dropped by the degradation ladder or deadline-doom
+    browned_out: int = 0  # served with a ladder-trimmed token budget
+    brownout_trimmed_tokens: int = 0  # tokens the trims removed in total
+    slo_tracked: int = 0
+    slo_met: int = 0
+    ttfts: Histogram = field(default_factory=latency_histogram)
+
+    @property
+    def goodput(self) -> float:
+        if not self.slo_tracked:
+            return 1.0
+        return self.slo_met / self.slo_tracked
+
+    def merge(self, other: "TenantMetrics") -> "TenantMetrics":
+        self.admitted += other.admitted
+        self.completed += other.completed
+        self.total_tokens += other.total_tokens
+        self.rejected += other.rejected
+        self.shed += other.shed
+        self.browned_out += other.browned_out
+        self.brownout_trimmed_tokens += other.brownout_trimmed_tokens
+        self.slo_tracked += other.slo_tracked
+        self.slo_met += other.slo_met
+        self.ttfts.merge(other.ttfts)
+        return self
+
+    _COUNTERS = ("admitted", "completed", "total_tokens", "rejected",
+                 "shed", "browned_out", "brownout_trimmed_tokens",
+                 "slo_tracked", "slo_met")
+
+    def to_wire(self) -> tuple:
+        """Hashable ((counter values...), ttft-histogram-wire-or-()) —
+        one ``LoadReport.tenant_stats`` row body."""
+        return (tuple(getattr(self, f) for f in self._COUNTERS),
+                self.ttfts.to_wire() if self.ttfts.count else ())
+
+    @classmethod
+    def from_wire(cls, w) -> "TenantMetrics":
+        counters, hist = w
+        tm = cls(**dict(zip(cls._COUNTERS, (int(c) for c in counters))))
+        if hist:
+            tm.ttfts = Histogram.from_wire(hist)
+        return tm
+
+
+@dataclass
 class ServeMetrics:
     """Aggregated server-side + client-side metrics (survey §3.2.3).
 
@@ -283,11 +370,22 @@ class ServeMetrics:
     cancelled: int = 0  # client cancel() honored
     timed_out: int = 0  # whole-request deadline aborts
     shed: int = 0  # SLO-doomed requests dropped under overload
+    browned_out: int = 0  # requests served with a ladder-trimmed budget
     failed: int = 0  # mid-stream failures (e.g. bypassed reservation)
     preempted: int = 0  # slot evictions (victim requeued for restore)
     preempt_restores: int = 0  # preempted requests re-admitted
     retried: int = 0  # failover re-submissions (cluster frontend)
     failed_over: int = 0  # requests harvested from a failed replica
+    # --- multi-tenant overload control (keyed by Request.tenant; untagged
+    # traffic stays out of this dict, so the single-tenant path is free) ---
+    tenants: Dict[str, TenantMetrics] = field(default_factory=dict)
+
+    def tenant(self, name: str) -> TenantMetrics:
+        """The named tenant's accumulator (created on first touch)."""
+        tm = self.tenants.get(name)
+        if tm is None:
+            tm = self.tenants[name] = TenantMetrics()
+        return tm
 
     @property
     def qps(self) -> float:
@@ -320,6 +418,11 @@ class ServeMetrics:
         self.slo_tracked += 1
         if verdict:
             self.slo_met += 1
+        if req.tenant:
+            tm = self.tenant(req.tenant)
+            tm.slo_tracked += 1
+            if verdict:
+                tm.slo_met += 1
         if req.ttft_slo_s > 0 and not (0 <= req.ttft <= req.ttft_slo_s):
             self.ttft_slo_misses += 1
         if req.tpot_slo_s > 0 and not (0 <= req.tpot <= req.tpot_slo_s):
@@ -357,11 +460,14 @@ class ServeMetrics:
         self.cancelled += other.cancelled
         self.timed_out += other.timed_out
         self.shed += other.shed
+        self.browned_out += other.browned_out
         self.failed += other.failed
         self.preempted += other.preempted
         self.preempt_restores += other.preempt_restores
         self.retried += other.retried
         self.failed_over += other.failed_over
+        for name, tm in other.tenants.items():
+            self.tenant(name).merge(tm)
 
     # -- observability -----------------------------------------------------
     _HISTOGRAMS = (("latency_s", "latencies"), ("jct_s", "jcts"),
@@ -374,6 +480,12 @@ class ServeMetrics:
                      for name, attr in self._HISTOGRAMS
                      if getattr(self, attr).count)
 
+    def tenant_wire(self) -> tuple:
+        """Per-tenant rollups in LoadReport v4 wire form:
+        ((tenant, (counters...), ttft-wire-or-()), ...), sorted by name."""
+        return tuple((name, *tm.to_wire())
+                     for name, tm in sorted(self.tenants.items()))
+
     def registry(self, prefix: str = "serving_") -> "MetricsRegistry":
         """Snapshot this struct as a MetricsRegistry for exposition.
         Histograms are registered by reference (zero copies); counters
@@ -384,13 +496,21 @@ class ServeMetrics:
             reg.register(f"{prefix}{name.rsplit('_', 1)[0]}_seconds",
                          getattr(self, attr))
         for f in ("completed", "total_tokens", "rejected", "cancelled",
-                  "timed_out", "shed", "failed", "preempted",
+                  "timed_out", "shed", "browned_out", "failed", "preempted",
                   "preempt_restores", "retried", "failed_over",
                   "decode_ticks", "host_syncs", "prefill_chunks",
                   "prefix_hits", "prefix_hit_tokens", "sampled_requests",
                   "slo_tracked", "slo_met", "ttft_slo_misses",
                   "tpot_slo_misses"):
             reg.set_counter(f"{prefix}{f}_total", getattr(self, f))
+        for name, tm in sorted(self.tenants.items()):
+            lbl = f'{{tenant="{name}"}}'
+            for f in TenantMetrics._COUNTERS:
+                reg.set_counter(f"{prefix}tenant_{f}_total{lbl}",
+                                getattr(tm, f))
+            reg.set_gauge(f"{prefix}tenant_goodput{lbl}", tm.goodput)
+            if tm.ttfts.count:
+                reg.register(f"{prefix}tenant_ttft_seconds{lbl}", tm.ttfts)
         reg.set_gauge(f"{prefix}goodput", self.goodput)
         reg.set_gauge(f"{prefix}qps", self.qps)
         reg.set_gauge(f"{prefix}throughput_tokens_per_s",

@@ -13,25 +13,34 @@ Schema history:
        (``mesh_axes``, ``axis_collective_s``, ``axis_util``) so the
        router understands an n-chip sharded replica; MoE capacity-policy
        fields.
-  v3 — this PR (observability): ``histograms`` — sparse latency
+  v3 — PR 8 (observability): ``histograms`` — sparse latency
        histograms (TTFT/TPOT/JCT) in repro.serving.metrics wire form, so
        the router's closed-loop correction and cluster-wide percentiles
        come from exactly-mergeable bounded state; ``span_totals`` —
        per-span-kind (count, seconds) rollups from request traces;
        ``compile_events`` — jit traces per trace-cache key.
+  v4 — this PR (overload control): ``browned_out`` — requests served
+       with a ladder-trimmed token budget; ``tenant_stats`` — per-tenant
+       rollups ((tenant, (admitted, completed, total_tokens, rejected,
+       shed, browned_out, brownout_trimmed_tokens, slo_tracked,
+       slo_met), ttft-histogram-wire-or-()), ...) in
+       ``TenantMetrics.to_wire`` form, exactly mergeable across replicas
+       — the overload detector's and per-tenant-goodput dashboards'
+       input.
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass, fields
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 #: tuple-of-tuples fields that serialize as lists (JSON has no tuples)
 _TUPLE_FIELDS = ("active_remaining", "queued_budgets", "mesh_axes",
                  "axis_collective_s", "axis_util")
 
-#: arbitrarily nested tuple fields (v3) — converted recursively
-_DEEP_FIELDS = ("histograms", "span_totals", "compile_events")
+#: arbitrarily nested tuple fields (v3+) — converted recursively
+_DEEP_FIELDS = ("histograms", "span_totals", "compile_events",
+                "tenant_stats")
 
 
 def _listify(x):
@@ -109,6 +118,14 @@ class LoadReport:
     # ((trace-cache key, count), ...): jit traces per shape-derived key —
     # the flat-compile-count invariant as queryable telemetry
     compile_events: tuple = ()
+    # --- v4: multi-tenant overload control ---
+    # cumulative requests this replica served with a brownout-trimmed
+    # token budget (mirrors ServeMetrics.browned_out)
+    browned_out: int = 0
+    # per-tenant counters + TTFT histograms in TenantMetrics.to_wire
+    # form: ((tenant, (counters...), ttft-wire-or-()), ...) — exactly
+    # mergeable across replicas like everything else on this wire
+    tenant_stats: tuple = ()
 
     @property
     def saturated(self) -> bool:

@@ -21,6 +21,12 @@ kind                stamped at
 ``dispatch``        instant event when the frontend routes to a replica
 ``failover_retry``  instant event when the frontend re-queues after a
                     replica failure
+``shed``            instant event when the overload ladder drops a
+                    low-tier request at dispatch (meta: level,
+                    retry_after_s)
+``brownout``        instant event when the ladder trims a request's
+                    token budget (meta: level, max_new_tokens before/
+                    after)
 ``rejected``/``abort``  instant terminal events for non-completion paths
 ``compile``         engine-level event per jit trace (meta: trace-cache key)
 ==================  ========================================================
@@ -39,6 +45,7 @@ not need to know which spans a previous owner opened.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -153,16 +160,19 @@ class Tracer:
     events) plus per-kind rollups folded in from terminal request traces.
 
     ``span_totals`` is what ``LoadReport`` v3 ships — bounded per-kind
-    aggregates, not the spans themselves.
+    aggregates, not the spans themselves.  ``ring`` > 0 additionally
+    retains the last N finished request traces (a bounded deque) for
+    post-hoc inspection without unbounded memory growth.
     """
 
-    __slots__ = ("enabled", "engine", "span_totals", "collected")
+    __slots__ = ("enabled", "engine", "span_totals", "collected", "ring")
 
-    def __init__(self, enabled: bool = False):
+    def __init__(self, enabled: bool = False, ring: int = 0):
         self.enabled = enabled
         self.engine = Trace(rid=-1)  # engine-scoped events (compile, profile)
         self.span_totals: Dict[str, Tuple[int, float]] = {}
         self.collected = 0
+        self.ring = deque(maxlen=ring) if ring > 0 else None
 
     def event(self, kind: str, t: float, **meta) -> None:
         self.engine.event(kind, t, **meta)
@@ -175,6 +185,8 @@ class Tracer:
         for kind, (c, s) in trace.totals().items():
             c0, s0 = self.span_totals.get(kind, (0, 0.0))
             self.span_totals[kind] = (c0 + c, s0 + s)
+        if self.ring is not None:
+            self.ring.append(trace)
 
     def totals_wire(self) -> tuple:
         """Hashable, JSON-safe ((kind, count, seconds), ...) for LoadReport."""
