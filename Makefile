@@ -5,8 +5,8 @@ PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 	bench-prefix bench-prefix-smoke bench-sampling bench-sampling-smoke \
 	bench-chaos bench-chaos-smoke bench-sharded bench-sharded-smoke \
 	bench-observability bench-observability-smoke trace-demo \
-	bench-overload bench-overload-smoke span-diff span-baseline \
-	serve-bench micro
+	bench-overload bench-overload-smoke bench-quant bench-quant-smoke \
+	span-diff span-baseline serve-bench micro
 
 # tier-1 verify (ROADMAP.md)
 test:
@@ -96,6 +96,18 @@ bench-overload:
 bench-overload-smoke:
 	$(PY) benchmarks/overload_bench.py --smoke \
 		--out BENCH_overload.json
+
+# quantized-serving A/B: int8 KV pages vs the f32 pool on one workload
+# (capacity, decode tok/s, stream divergence, kernel error-vs-bound)
+# -> BENCH_quant.json
+bench-quant:
+	$(PY) benchmarks/quant_bench.py
+
+# CI gate: fails on slots ratio < 1.8x at equal HBM, decode tok/s
+# < 0.9x f32, a diverged FIRST token (prefill must stay exact), an
+# unbounded stream rewrite, or kernel error past the closed-form bound
+bench-quant-smoke:
+	$(PY) benchmarks/quant_bench.py --smoke --out BENCH_quant_smoke.json
 
 # span-phase triage gate: per-kind span rollups of a fixed virtual-time
 # traced workload diffed against benchmarks/SPAN_BASELINE.json — fails

@@ -1,0 +1,357 @@
+"""Quantized-serving A/B benchmark: int8 KV-cache pages (fused-dequant
+paged decode) vs the lossless f32 pool on the SAME workload.
+
+    PYTHONPATH=src python benchmarks/quant_bench.py [--arch granite-8b]
+        [--requests 8] [--budget 16] [--rounds 3] [--out BENCH_quant.json]
+    PYTHONPATH=src python benchmarks/quant_bench.py --smoke   # CI gate
+
+What it measures / gates (--smoke fails CI on these):
+
+  * decode throughput: tok/s over full continuous-batching decode, A/B
+    interleaved across rounds — the int8 path (inline VMEM dequant next
+    to the scalar-prefetched page table) must hold >= 0.9x of f32;
+  * capacity: ``plan_admission`` slots at an EQUAL KV HBM budget — int8
+    pages (1 byte/elem + one fp32 scale per vector) must buy >= 1.8x
+    the concurrent slots of the f32 pool;
+  * stream divergence under greedy AND seeded-sampled decode: token
+    edit distance + first-divergence position per request vs the f32
+    engine. Prefill attends over exact pre-quantization K/V, so token 1
+    is ALWAYS bit-identical (gated); later tokens may drift (reported);
+  * kernel error-vs-bound: the fused-dequant kernel's deviation from
+    exact f32 attention stays inside the sort-free closed-form bound
+    from kernels/ref.py, including an exact-score-tie case.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+from bench_noise import noise_report, pin_host_threads
+
+pin_host_threads()  # must precede the first jax import
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.costmodel import kv_bytes_per_token
+from repro.core.misd.batching import plan_admission
+from repro.kernels import ops, ref
+from repro.models import init_params
+from repro.models.blocks import dequantize_kv, quantize_kv
+from repro.serving import (
+    EngineConfig,
+    PrecisionConfig,
+    Request,
+    SamplingParams,
+    ServingEngine,
+)
+
+RID = iter(range(10 ** 9))
+
+
+# ---------------------------------------------------------------------------
+# stream divergence stats
+# ---------------------------------------------------------------------------
+
+
+def edit_distance(a, b) -> int:
+    """Plain Levenshtein over token ids (streams are short)."""
+    prev = list(range(len(b) + 1))
+    for i, x in enumerate(a, 1):
+        cur = [i]
+        for j, y in enumerate(b, 1):
+            cur.append(min(prev[j] + 1, cur[j - 1] + 1,
+                           prev[j - 1] + (x != y)))
+        prev = cur
+    return prev[-1]
+
+
+def first_divergence(a, b) -> int:
+    """Index of the first differing token; -1 if the streams agree."""
+    for i, (x, y) in enumerate(zip(a, b)):
+        if x != y:
+            return i
+    return -1 if len(a) == len(b) else min(len(a), len(b))
+
+
+def divergence_stats(f32_streams, i8_streams, budget: int) -> dict:
+    eds = [edit_distance(a, b) for a, b in zip(f32_streams, i8_streams)]
+    fds = [first_divergence(a, b) for a, b in zip(f32_streams, i8_streams)]
+    diverged = [f for f in fds if f >= 0]
+    return {
+        "requests": len(eds),
+        "identical_streams": sum(f < 0 for f in fds),
+        "edit_distance_mean": float(np.mean(eds)),
+        "edit_distance_max": int(max(eds)),
+        "edit_distance_budget_frac": float(np.mean(eds)) / budget,
+        # -1 entries (bit-identical) excluded from the position stats
+        "first_divergence_min": int(min(diverged)) if diverged else -1,
+        "first_divergence_mean": float(np.mean(diverged)) if diverged
+        else -1.0,
+    }
+
+
+# ---------------------------------------------------------------------------
+# engine A/B
+# ---------------------------------------------------------------------------
+
+
+def _mk_engine(cfg, params, *, int8: bool, slots: int, window: int):
+    pr = PrecisionConfig(kv_cache_dtype="int8" if int8 else "")
+    return ServingEngine(cfg, params, EngineConfig(
+        slots=slots, window=window, max_seq=window, paged=True,
+        chunk_prefill=0, sync_every=4, precision=pr))
+
+
+def serve_all(eng, prompts, budget: int, sampled: bool):
+    """Continuous-batching run to completion. Returns (streams,
+    decode-wall-seconds): the clock starts after every admission's
+    prefill has retired, so it prices the decode ticks the int8 kernel
+    actually changes."""
+    reqs = []
+    for p in prompts:
+        samp = (SamplingParams(temperature=0.7, top_k=20, top_p=0.95,
+                               seed=1000 + len(reqs)) if sampled
+                else SamplingParams())
+        reqs.append(Request(next(RID), p.copy(), max_new_tokens=budget,
+                            sampling=samp))
+    pending = list(reqs)
+    t = 0.0
+    while pending and eng.try_admit(pending[0], t):
+        pending.pop(0)
+    jax.block_until_ready(eng.cache)
+    t0 = time.perf_counter()
+    while not all(r.done for r in reqs):
+        while pending and eng.try_admit(pending[0], t):
+            pending.pop(0)
+        t += 1.0
+        eng.step(t)
+    jax.block_until_ready(eng.cache)
+    wall = time.perf_counter() - t0
+    eng.drain(t)
+    return [list(r.output) for r in reqs], wall
+
+
+# ---------------------------------------------------------------------------
+# kernel error-vs-bound probe
+# ---------------------------------------------------------------------------
+
+
+def kernel_bound_probe(seeds=(1, 7, 23), d=64) -> dict:
+    """Max observed output error / closed-form bound across random draws
+    (must stay <= 1), plus the exact-tie case (identical keys -> the
+    kernel must agree with the sort-free oracle to f32 tolerance)."""
+    b, h, kv, ps, n_pages = 2, 4, 2, 8, 4
+    w = ps * n_pages
+    worst = 0.0
+    for seed in seeds:
+        key = jax.random.key(seed)
+        kq_, kk_, kv_ = jax.random.split(key, 3)
+        q = jax.random.normal(kq_, (b, 1, h, d), jnp.float32)
+        kc = jax.random.normal(kk_, (b, w, kv, d), jnp.float32)
+        vc = jax.random.normal(kv_, (b, w, kv, d), jnp.float32)
+        k_pool = kc.reshape(b * n_pages, ps, kv, d)
+        v_pool = vc.reshape(b * n_pages, ps, kv, d)
+        table = jnp.arange(b * n_pages, dtype=jnp.int32).reshape(b, n_pages)
+        pos = jnp.asarray([w // 3, w], jnp.int32)
+        kq, ks = quantize_kv(k_pool, ps)
+        vq, vs = quantize_kv(v_pool, ps)
+        exact = ref.ref_paged_decode_attention(q, k_pool, v_pool, table,
+                                               pos)
+        quant = ref.ref_paged_decode_attention_int8(q, kq, vq, ks, vs,
+                                                    table, pos)
+        err = float(jnp.max(jnp.abs(quant - exact)))
+        bound = float(ref.int8_attention_output_bound(
+            q, ks, vs, dequantize_kv(vq, vs, jnp.float32)))
+        worst = max(worst, err / bound)
+    # exact-tie case: all keys identical -> uniform weights either way
+    q = jax.random.normal(jax.random.key(99), (1, 1, h, d), jnp.float32)
+    kq, ks = quantize_kv(jnp.full((6, ps, kv, d), 0.5, jnp.float32))
+    vq, vs = quantize_kv(
+        jax.random.normal(jax.random.key(98), (6, ps, kv, d), jnp.float32))
+    table = jnp.asarray([[3, 5]], jnp.int32)
+    pos = jnp.asarray([ps + 3], jnp.int32)
+    out = ops.paged_decode_attention_int8(q, kq, vq, ks, vs, table, pos)
+    want = ref.ref_paged_decode_attention_int8(q, kq, vq, ks, vs, table,
+                                               pos)
+    tie_err = float(jnp.max(jnp.abs(out - want)))
+    return {"max_err_over_bound": worst, "within_bound": worst <= 1.0,
+            "tie_kernel_vs_oracle_abs": tie_err,
+            "tie_ok": tie_err <= 2e-5}
+
+
+# ---------------------------------------------------------------------------
+# bench body
+# ---------------------------------------------------------------------------
+
+
+def run(report, *, arch: str = "granite-8b", requests: int = 8,
+        budget: int = 16, prompt_len: int = 48, window: int = 256,
+        slots: int = 4, rounds: int = 3, seed: int = 0, out: str = ""):
+    cfg = get_config(arch).reduced()
+    params = init_params(cfg, jax.random.key(seed))
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, cfg.vocab_size, prompt_len).astype(np.int32)
+               for _ in range(requests)]
+
+    # -- capacity: identical HBM budget, per-pool dtype priced in
+    per_tok_f32 = kv_bytes_per_token(cfg)
+    per_tok_i8 = kv_bytes_per_token(cfg, "int8")
+    budget_bytes = per_tok_f32 * window * 8  # 8 f32 slots' worth
+    kw = dict(context=window, sla_s=1e9, max_slots=4096,
+              kv_hbm_budget_bytes=budget_bytes)
+    slots_f32 = plan_admission(cfg, **kw).slots
+    slots_i8 = plan_admission(cfg, **kw, kv_cache_dtype="int8").slots
+    slots_ratio = slots_i8 / slots_f32
+
+    # -- decode throughput + divergence, A/B interleaved per round
+    f32_tp, i8_tp = [], []
+    streams = {}
+    for mode, sampled in (("greedy", False), ("sampled", True)):
+        for variant, int8 in (("f32", False), ("int8", True)):
+            eng = _mk_engine(cfg, params, int8=int8, slots=slots,
+                             window=window)
+            serve_all(eng, prompts[:2], budget, sampled)  # warm jit
+            walls = []
+            for _ in range(rounds):
+                outs, wall = serve_all(eng, prompts, budget, sampled)
+                walls.append(wall)
+            streams[(mode, variant)] = outs
+            tokens = requests * budget
+            (f32_tp if not int8 else i8_tp).append(
+                tokens / float(np.median(walls)))
+    tp_f32 = float(np.mean(f32_tp))
+    tp_i8 = float(np.mean(i8_tp))
+    tp_ratio = tp_i8 / tp_f32
+
+    div = {mode: divergence_stats(streams[(mode, "f32")],
+                                  streams[(mode, "int8")], budget)
+           for mode in ("greedy", "sampled")}
+    bounds = kernel_bound_probe()
+
+    results = {
+        "arch": arch, "requests": requests, "budget": budget,
+        "prompt_len": prompt_len, "window": window, "slots": slots,
+        "rounds": rounds, "seed": seed,
+        **noise_report(),
+        "capacity": {
+            "kv_bytes_per_token_f32": per_tok_f32,
+            "kv_bytes_per_token_int8": per_tok_i8,
+            "bytes_ratio": per_tok_f32 / per_tok_i8,
+            "kv_hbm_budget_bytes": budget_bytes,
+            "slots_f32": slots_f32, "slots_int8": slots_i8,
+            "slots_ratio": slots_ratio,
+        },
+        "throughput": {"decode_tok_s_f32": tp_f32,
+                       "decode_tok_s_int8": tp_i8,
+                       "ratio_int8_over_f32": tp_ratio},
+        "divergence": div,
+        "kernel_bounds": bounds,
+    }
+    report("quant_slots_ratio", round(slots_ratio, 2),
+           f"{slots_i8} int8 vs {slots_f32} f32 slots, equal HBM budget")
+    report("quant_decode_tok_s_ratio", round(tp_ratio, 3),
+           f"{tp_i8:.1f} vs {tp_f32:.1f} tok/s")
+    for mode in ("greedy", "sampled"):
+        report(f"quant_divergence_{mode}",
+               round(div[mode]["edit_distance_budget_frac"], 3),
+               f"mean edit distance / budget; first divergence >= "
+               f"{div[mode]['first_divergence_min']}")
+    report("quant_kernel_err_over_bound",
+           round(bounds["max_err_over_bound"], 4),
+           "must stay <= 1 (sort-free closed-form bound)")
+    if out:
+        with open(out, "w") as f:
+            json.dump(results, f, indent=2)
+        report("quant_bench_json", out, "full results")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# CI smoke gate
+# ---------------------------------------------------------------------------
+
+
+def smoke(*, arch: str = "granite-8b", out: str = "") -> int:
+    res = run(lambda *a: None, arch=arch, requests=4, budget=8,
+              prompt_len=32, window=128, slots=2, rounds=2, out=out)
+    failures = []
+
+    def check(name, ok, got):
+        print(f"smoke:{name}: {'ok' if ok else 'FAIL'} ({got})")
+        if not ok:
+            failures.append(name)
+
+    cap, tp, div = res["capacity"], res["throughput"], res["divergence"]
+    check("slots_1p8x", cap["slots_ratio"] >= 1.8,
+          f"{cap['slots_ratio']:.2f}x ({cap['slots_int8']} vs "
+          f"{cap['slots_f32']} slots)")
+    check("decode_tok_s_0p9x", tp["ratio_int8_over_f32"] >= 0.9,
+          f"{tp['ratio_int8_over_f32']:.3f}x "
+          f"({tp['decode_tok_s_int8']:.1f} vs "
+          f"{tp['decode_tok_s_f32']:.1f} tok/s)")
+    for mode in ("greedy", "sampled"):
+        d = div[mode]
+        # exact prefill => token 1 can never diverge; drift afterwards
+        # must stay bounded (not a full-stream rewrite)
+        check(f"first_token_exact_{mode}",
+              d["first_divergence_min"] != 0, d["first_divergence_min"])
+        check(f"divergence_bounded_{mode}",
+              d["edit_distance_budget_frac"] <= 0.9,
+              f"{d['edit_distance_budget_frac']:.3f} of budget")
+    check("kernel_within_bound", res["kernel_bounds"]["within_bound"],
+          res["kernel_bounds"]["max_err_over_bound"])
+    check("kernel_tie_exact", res["kernel_bounds"]["tie_ok"],
+          res["kernel_bounds"]["tie_kernel_vs_oracle_abs"])
+    if failures:
+        print(f"smoke: FAILED ({', '.join(failures)})")
+        return 1
+    print("smoke: quantized capacity + throughput + divergence + "
+          "bound probes green")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--budget", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--window", type=int, default=256)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: fail on quantized-serving "
+                         "regressions")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_quant.json"))
+    args = ap.parse_args()
+    if args.smoke:
+        raise SystemExit(smoke(arch=args.arch, out=args.out))
+
+    def report(name, value, derived=""):
+        print(f"{name},{value},{derived}")
+
+    print("name,value,derived")
+    res = run(report, arch=args.arch, requests=args.requests,
+              budget=args.budget, prompt_len=args.prompt_len,
+              window=args.window, slots=args.slots, rounds=args.rounds,
+              seed=args.seed, out=args.out)
+    tp = res["throughput"]["ratio_int8_over_f32"]
+    print(f"# int8 pages: {res['capacity']['slots_ratio']:.1f}x slots at "
+          f"equal HBM, {tp:.2f}x decode tok/s, greedy divergence "
+          f"{res['divergence']['greedy']['edit_distance_budget_frac']:.2f} "
+          f"of budget")
+
+
+if __name__ == "__main__":
+    main()

@@ -93,14 +93,27 @@ def _n_attn_layers(cfg) -> int:
     return cfg.num_layers * sum(b == "local_attn" for b in pat) // len(pat)
 
 
-def kv_bytes_per_token(cfg) -> float:
+def kv_bytes_per_token(cfg, kv_cache_dtype: str = "") -> float:
     """HBM bytes one cached token costs across every attention layer (the
     unit of the paged-KV capacity plan: a rolling cache pays this for a
-    full window per slot; a paged cache only for resident tokens)."""
+    full window per slot; a paged cache only for resident tokens).
+
+    ``kv_cache_dtype`` is the POOL storage dtype ("" = model dtype;
+    "int8" = quantized serving pools: 1 byte per element plus one fp32
+    scale per (token, kv-head) vector). The loud assert is deliberate —
+    a silently-wrong per-token estimate over-admits the whole pool."""
     if not cfg.has_attention:
         return 0.0
-    return (2.0 * _n_attn_layers(cfg) * cfg.num_kv_heads
-            * cfg.resolved_head_dim * _dtype_bytes(cfg))
+    hd = cfg.resolved_head_dim
+    if kv_cache_dtype == "":
+        per_vec = hd * _dtype_bytes(cfg)
+    elif kv_cache_dtype == "int8":
+        per_vec = hd * 1 + 4.0  # int8 values + one fp32 scale per vector
+    else:
+        raise AssertionError(
+            f"kv_bytes_per_token: unknown kv_cache_dtype "
+            f"{kv_cache_dtype!r} — capacity planning would over-admit")
+    return 2.0 * _n_attn_layers(cfg) * cfg.num_kv_heads * per_vec
 
 
 def _attn_flops(cfg, batch: int, s_q: int, s_kv: int) -> float:

@@ -54,7 +54,8 @@ class AdmissionPlan:
 def plan_admission(cfg, *, context: int, sla_s: float, n_chips: int = 1,
                    max_slots: int = 256,
                    kv_hbm_budget_bytes: Optional[float] = None,
-                   mean_context: Optional[int] = None) -> AdmissionPlan:
+                   mean_context: Optional[int] = None,
+                   kv_cache_dtype: str = "") -> AdmissionPlan:
     """Derive (slot count, admission flush deadline) from the cost model:
     slots = largest decode batch meeting the per-step SLA budget; deadline =
     SLA headroom left after one decode step (floored at 10% of the SLA so a
@@ -64,12 +65,17 @@ def plan_admission(cfg, *, context: int, sla_s: float, n_chips: int = 1,
     each slot reserves ``mean_context`` cached tokens (a paged cache's
     *expected* resident length; a rolling cache pays the full ``context``
     window, so pass mean_context=context for it). Defaults to ``context``
-    when unset — the conservative rolling-cache bound."""
+    when unset — the conservative rolling-cache bound.
+
+    ``kv_cache_dtype`` is the dtype THIS pool actually stores ("" = model
+    dtype, "int8" = quantized pages) — the per-token byte cost is a
+    per-pool property, not a global constant, and a mismatched estimate
+    over-admits (``kv_bytes_per_token`` asserts on unknown dtypes)."""
     slots, lat = adaptive_batch_size(
         cfg, context=context, sla_s=sla_s, kind="decode", n_chips=n_chips,
         max_batch=max_slots)
     if kv_hbm_budget_bytes:
-        per_tok = kv_bytes_per_token(cfg)
+        per_tok = kv_bytes_per_token(cfg, kv_cache_dtype)
         resident = max(1, mean_context or context)
         if per_tok > 0:
             slots = min(slots, max(1, int(kv_hbm_budget_bytes

@@ -272,7 +272,9 @@ def cache_pspecs(cfg, cache_tree, pol: ShardingPolicy, mesh: Mesh):
             elif pol.kv_shard == "hd" and _div(core[3], m):
                 spec[off + 3] = "model"
         elif name in ("k_scale", "v_scale"):
-            # (B, W, kv): scales follow the W-dim layout of the int8 cache
+            # (B, W, kv, 1): per-vector scales of the int8 cache follow
+            # the value leaves' W/kv layout (the trailing singleton is
+            # never sharded)
             if pol.kv_shard == "seq" and _div(core[1], m):
                 spec[off + 1] = "model"
             elif pol.kv_shard == "kv_head" and _div(core[2], m):
@@ -314,6 +316,12 @@ def paged_cache_pspecs(cfg, cache_tree, pol: ShardingPolicy, mesh: Mesh):
                 spec[off + 2] = "model"
             elif _div(core[3], m):
                 spec[off + 3] = "model"
+        elif name in ("k_scale", "v_scale") and len(core) == 4:
+            # (P, ps, kv, 1): int8 pools' per-vector scale pages shard
+            # the kv-head dim with the value pools; under an hd-sharded
+            # value layout the (hd-less) scales replicate
+            if pol.kv_shard != "hd" and _div(core[2], m):
+                spec[off + 2] = "model"
         return P(*spec)
 
     flat, tdef = jax.tree_util.tree_flatten_with_path(cache_tree)

@@ -112,6 +112,58 @@ def _paged_decode_kernel(table_ref, nvalid_ref, q_ref, k_ref, v_ref, o_ref,
         o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel_int8(table_ref, nvalid_ref, q_ref, k_ref, v_ref,
+                              ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr,
+                              *, page_size: int, s_q: int, scale: float):
+    """Fused-dequant variant of ``_paged_decode_kernel``: K/V pages arrive
+    in VMEM as int8 plus one fp32 scale per (slot, kv-head) vector —
+    gathered through the SAME scalar-prefetched page-table index map — and
+    dequantize inline right before the dots, so HBM traffic per resident
+    token is the int8 payload + one fp32 scalar instead of the full-width
+    vector (the memory-bound decode step's win)."""
+    bi = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    rows = q_ref.shape[2]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    nv = nvalid_ref[bi]
+
+    @pl.when(ki * page_size < nv)
+    def _compute():
+        q = q_ref[0, 0].astype(F32)  # (rows, d)
+        # inline dequant in VMEM: int8 page values * per-slot fp32 scale
+        k = k_ref[0, 0].astype(F32) * ks_ref[0, 0][:, None]  # (ps, d)
+        v = v_ref[0, 0].astype(F32) * vs_ref[0, 0][:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * scale
+        slot = (ki * page_size
+                + jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 1))
+        row = jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0)
+        limit = nv - (s_q - 1) + jax.lax.rem(row, s_q)
+        s = jnp.where(slot < limit, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=F32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
 def paged_decode_attention(q, k_pool, v_pool, table_flat, n_valid, *,
                            s_q: int, interpret: bool = False):
     """Block-sparse decode attention through a paged KV cache.
@@ -159,6 +211,54 @@ def paged_decode_attention(q, k_pool, v_pool, table_flat, n_valid, *,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(table_flat, n_valid, q, k_pool, v_pool)
+
+
+def paged_decode_attention_int8(q, k_pool, v_pool, k_scale, v_scale,
+                                table_flat, n_valid, *, s_q: int,
+                                interpret: bool = False):
+    """Quantized-pool paged decode attention with fused inline dequant.
+
+    Same layout contract as ``paged_decode_attention`` except the pools
+    are int8 and each carries a scale pool: k/v_scale (KVH, P, ps) fp32 —
+    one symmetric scale per (slot, kv-head) vector, living in pages
+    addressed by the SAME page ids, so the scalar-prefetched table
+    resolves both the value page and its scale page in the BlockSpec
+    index maps. Dequantization happens in VMEM right before the QK/PV
+    dots (``kernels/ref.ref_paged_decode_attention_int8`` is the oracle;
+    ``ref.int8_attention_error_bound`` bounds the logit error)."""
+    b, hkv, rows, d = q.shape
+    _, _, ps, _ = k_pool.shape
+    n_pages = table_flat.shape[0] // b
+    scale = d ** -0.5
+    kernel = functools.partial(_paged_decode_kernel_int8, page_size=ps,
+                               s_q=s_q, scale=scale)
+    page_map = lambda bi, hi, ji, t, nv: (hi, t[bi * n_pages + ji], 0, 0)
+    scale_map = lambda bi, hi, ji, t, nv: (hi, t[bi * n_pages + ji], 0)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda bi, hi, ji, t, nv: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, 1, ps, d), page_map),
+            pl.BlockSpec((1, 1, ps, d), page_map),
+            pl.BlockSpec((1, 1, ps), scale_map),
+            pl.BlockSpec((1, 1, ps), scale_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d),
+                               lambda bi, hi, ji, t, nv: (bi, hi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows,), F32),
+            pltpu.VMEM((rows,), F32),
+            pltpu.VMEM((rows, d), F32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(table_flat, n_valid, q, k_pool, v_pool, k_scale, v_scale)
 
 
 def decode_attention(q, k, v, n_valid, *, block_kv: int = 256,

@@ -89,6 +89,34 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_int8(q, k_pool, v_pool, k_scale, v_scale,
+                                page_table, pos, *, interpret: bool = None):
+    """Quantized-pool twin of ``paged_decode_attention``: pools are int8
+    (P, ps, Hkv, D) with per-vector fp32 scales (P, ps, Hkv, 1) addressed
+    by the same page ids; dequantization is fused into the kernel (inline
+    in VMEM, right before the dots). Model-layout twin:
+    ``repro.models.layers.paged_decode_attention_int8``."""
+    if interpret is None:
+        interpret = _default_interpret()
+    b, sq, h, d = q.shape
+    ps, hkv = k_pool.shape[1], k_pool.shape[2]
+    g = h // hkv
+    n_pages = page_table.shape[1]
+    qf = (q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4)
+          .reshape(b, hkv, g * sq, d))
+    kf = k_pool.transpose(2, 0, 1, 3)  # (KVH, P, ps, D)
+    vf = v_pool.transpose(2, 0, 1, 3)
+    ksf = k_scale[..., 0].transpose(2, 0, 1)  # (KVH, P, ps)
+    vsf = v_scale[..., 0].transpose(2, 0, 1)
+    nv = jnp.minimum(pos, n_pages * ps).astype(jnp.int32)
+    o = _da.paged_decode_attention_int8(
+        qf, kf, vf, ksf, vsf, page_table.reshape(-1).astype(jnp.int32), nv,
+        s_q=sq, interpret=interpret)
+    return (o.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4)
+            .reshape(b, sq, h, d))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
 def topk_sample(logits, k, temperature, uniform, *, interpret: bool = None):
     """Fused top-k + softmax sampling: one categorical draw per row from
     the temperature-scaled softmax restricted to the ``k`` largest logits

@@ -53,6 +53,46 @@ def ref_paged_decode_attention(q, k_pool, v_pool, page_table, n_valid):
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
 
 
+def ref_paged_decode_attention_int8(q, k_pool, v_pool, k_scale, v_scale,
+                                    page_table, n_valid):
+    """Oracle for the fused-dequant int8 paged kernel: dequantize the
+    pools in fp32, then run the exact f32 paged oracle. k/v_pool int8
+    (P, ps, Hkv, D); k/v_scale fp32 (P, ps, Hkv, 1)."""
+    kd = (k_pool.astype(F32) * k_scale.astype(F32)).astype(q.dtype)
+    vd = (v_pool.astype(F32) * v_scale.astype(F32)).astype(q.dtype)
+    return ref_paged_decode_attention(q, kd, vd, page_table, n_valid)
+
+
+def int8_attention_score_bound(q, k_scale):
+    """Sort-free bound on the max absolute SCALED-LOGIT error of int8-KV
+    attention vs exact-K attention. Symmetric rounding gives per-element
+    K error <= scale/2, so for query row x the score error is
+    |x . dK| * d^-1/2 <= (max_scale / 2) * ||x||_1 * d^-1/2. The max is
+    over every scale in the pool and every query row — no sorting, no
+    per-pair matching, valid for ANY page table/mask (masked scores are
+    identical -inf on both sides). Returns a scalar (eps)."""
+    d = q.shape[-1]
+    q1 = jnp.sum(jnp.abs(q.astype(F32)), axis=-1)  # row-wise ||q||_1
+    return (0.5 * jnp.max(k_scale.astype(F32)) * jnp.max(q1)
+            * (float(d) ** -0.5))
+
+
+def int8_attention_output_bound(q, k_scale, v_scale, v_deq):
+    """Sort-free bound on the max absolute OUTPUT error of int8-KV/V
+    attention vs exact attention, composed from the score bound: a
+    uniform score perturbation |ds| <= eps moves each softmax weight by a
+    factor in [e^-2eps, e^2eps], so ||dp||_1 <= e^{2 eps} - 1 and the
+    convex combination of values moves by at most (e^{2 eps} - 1) * vmax;
+    V's own quantization adds at most max(v_scale)/2 per element.
+    ``v_deq`` is the dequantized V the quantized path actually attends
+    over (vmax = its max |value|). Conservative (worst-case alignment of
+    both effects) but cheap and mask-agnostic."""
+    eps = int8_attention_score_bound(q, k_scale)
+    vmax = jnp.max(jnp.abs(v_deq.astype(F32)))
+    return ((jnp.exp(2.0 * eps) - 1.0) * vmax
+            + 0.5 * jnp.max(v_scale.astype(F32)))
+
+
 def ref_rglru_scan(a, x, h0):
     """h_t = a_t h_{t-1} + x_t via associative scan. a/x: (B,S,L)."""
     af, xf = a.astype(F32), x.astype(F32)

@@ -63,6 +63,7 @@ from repro.serving import (
     DeviceTopology,
     EngineConfig,
     OverloadDetector,
+    PrecisionConfig,
     Request,
     SamplingParams,
     ServingEngine,
@@ -100,6 +101,9 @@ def _engine_config(args) -> EngineConfig:
                         preemption=args.preemption,
                         topology=DeviceTopology(dp=args.dp, tp=args.tp),
                         moe_capacity_policy=args.moe_capacity or None,
+                        precision=PrecisionConfig(
+                            kv_cache_dtype=args.kv_dtype,
+                            weight_dtype=args.weight_dtype),
                         tracing=bool(args.trace_out),
                         trace_sample_n=args.trace_sample_n,
                         profile_dir=args.profile_dir or None)
@@ -137,6 +141,13 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="shared KV pool size in pages; 0 = full headroom, "
                          "less oversubscribes (admission backpressure)")
+    ap.add_argument("--kv-dtype", default="", choices=["", "int8"],
+                    help="KV-cache page dtype: int8 stores pages as int8 "
+                         "values + per-vector fp32 scales (paged only; "
+                         "plan_admission converts the saving into slots)")
+    ap.add_argument("--weight-dtype", default="", choices=["", "int8"],
+                    help="weight-only int8 for the attention/MLP matmuls "
+                         "(per-output-channel fp32 scales, f32 accumulation)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="shared-prefix KV cache: keep finished prompts' "
                          "pages in a radix index; later requests alias "
@@ -229,6 +240,11 @@ def main():
         print(f"paged KV: page_size={eng.page_size} max_seq={eng.max_seq} "
               f"pool={eng.pool_pages} pages "
               f"({eng.allocator.capacity} usable + trash)")
+    if eng.kv_dtype or args.weight_dtype:
+        rep = eng.load_report()
+        print(f"quantized: kv_cache_dtype={rep.kv_cache_dtype or 'f32'} "
+              f"weight_dtype={rep.weight_dtype or 'f32'} "
+              f"kv_bytes/token={rep.kv_bytes_per_token:.0f}")
     if eng.topology.sharded:
         rep = eng.load_report()
         print(f"sharded replica: mesh {dict(eng.topology.mesh_axes)} "

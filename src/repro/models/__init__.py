@@ -10,6 +10,7 @@ from repro.models.model import (
     paged_ok,
     param_count_tree,
     param_specs,
+    quantize_weights,
 )
 
 __all__ = [
@@ -24,5 +25,6 @@ __all__ = [
     "param_count_tree",
     "param_specs",
     "process_logits",
+    "quantize_weights",
     "sample_tokens",
 ]

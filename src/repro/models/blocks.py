@@ -38,6 +38,37 @@ PAGED_BLOCKS = ("dense", "moe")
 
 
 # ---------------------------------------------------------------------------
+# KV quantization (int8 values + per-vector fp32 scales)
+# ---------------------------------------------------------------------------
+
+
+def quantize_kv(t, group: int = 0):
+    """Symmetric int8 quantization of a (..., S, kv, hd) K/V tensor: one
+    fp32 scale per (token, kv-head) vector, shaped (..., S, kv, 1) so
+    scale leaves ride the same rank-4 tree transforms (page scatter /
+    gather) as the value leaves. ``group`` > 0 coarsens to one scale per
+    ``group`` consecutive tokens (the "page" scale granularity — every
+    token of a page shares one dequant multiplier) when the token axis
+    divides evenly; otherwise falls back to per-token scales, which only
+    tightens the error bound."""
+    a = jnp.max(jnp.abs(t.astype(F32)), axis=-1, keepdims=True)
+    s = t.shape[-3]
+    if group and group > 1 and s % group == 0:
+        shp = a.shape
+        g = a.reshape(shp[:-3] + (s // group, group) + shp[-2:])
+        g = jnp.max(g, axis=-3, keepdims=True)
+        a = jnp.broadcast_to(
+            g, shp[:-3] + (s // group, group) + shp[-2:]).reshape(shp)
+    scale = jnp.maximum(a / 127.0, 1e-8)
+    q8 = jnp.clip(jnp.round(t.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q8, scale
+
+
+def dequantize_kv(q8, scale, dtype):
+    return (q8.astype(F32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
 
@@ -99,12 +130,14 @@ def init_block_cache(cfg, btype: str, batch: int, window: int, dtype,
     if btype in KV_CACHE_BLOCKS:
         w = min(window, cfg.local_window) if btype == "local_attn" else window
         if kv_dtype == "int8":
-            # quantized serving cache: per-(token, kv-head) symmetric scale
+            # quantized serving cache: per-(token, kv-head) symmetric scale;
+            # the trailing singleton keeps scale leaves rank-4 so every
+            # page scatter/gather treats them exactly like value leaves
             return {
                 "k": jnp.zeros((batch, w, kv, hd), jnp.int8),
                 "v": jnp.zeros((batch, w, kv, hd), jnp.int8),
-                "k_scale": jnp.zeros((batch, w, kv), jnp.float32),
-                "v_scale": jnp.zeros((batch, w, kv), jnp.float32),
+                "k_scale": jnp.zeros((batch, w, kv, 1), jnp.float32),
+                "v_scale": jnp.zeros((batch, w, kv, 1), jnp.float32),
             }
         return {
             "k": jnp.zeros((batch, w, kv, hd), dtype),
@@ -123,15 +156,24 @@ def init_block_cache(cfg, btype: str, batch: int, window: int, dtype,
 
 
 def init_paged_block_cache(cfg, btype: str, n_pages: int, page_size: int,
-                           dtype):
+                           dtype, kv_dtype: str = ""):
     """Paged serving cache for one attention block: a page POOL shared by
     every decode slot (no batch axis — slots own disjoint page sets via the
     model-level page table). Only KV blocks are pageable; recurrent mixers
     keep their per-slot state and the engine falls back to rolling windows
-    for archs that contain them."""
+    for archs that contain them. ``kv_dtype`` "int8" stores int8 values
+    plus per-vector fp32 scale pages addressed by the SAME page ids (the
+    host-side allocator and page tables are unchanged)."""
     if btype not in KV_CACHE_BLOCKS:
         raise ValueError(f"{btype} blocks have no pageable KV cache")
     hd, kv = cfg.resolved_head_dim, cfg.num_kv_heads
+    if kv_dtype == "int8":
+        return {
+            "k": jnp.zeros((n_pages, page_size, kv, hd), jnp.int8),
+            "v": jnp.zeros((n_pages, page_size, kv, hd), jnp.int8),
+            "k_scale": jnp.zeros((n_pages, page_size, kv, 1), jnp.float32),
+            "v_scale": jnp.zeros((n_pages, page_size, kv, 1), jnp.float32),
+        }
     return {
         "k": jnp.zeros((n_pages, page_size, kv, hd), dtype),
         "v": jnp.zeros((n_pages, page_size, kv, hd), dtype),
@@ -153,6 +195,22 @@ def _paged_attn_decode(cfg, q, k, v, cache, pages, pos):
     t = pos_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B, S)
     phys = jnp.take_along_axis(pages, t // ps, axis=1)  # (B, S)
     off = t % ps
+    if cache["k"].dtype == jnp.int8:
+        # quantized pools: scatter int8 values AND their per-token scales
+        # at the same (page, offset) addresses — decode-time appends are
+        # always per-token regardless of the prefill scale granularity
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_cache = {
+            "k": cache["k"].at[phys, off].set(kq),
+            "v": cache["v"].at[phys, off].set(vq),
+            "k_scale": cache["k_scale"].at[phys, off].set(ks),
+            "v_scale": cache["v_scale"].at[phys, off].set(vs),
+        }
+        out = L.paged_decode_attention_int8(
+            q, new_cache["k"], new_cache["v"], new_cache["k_scale"],
+            new_cache["v_scale"], pages, pos_b + s)
+        return out, new_cache
     kc = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype))
     vc = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype))
     out = L.paged_decode_attention(q, kc, vc, pages, pos_b + s)
@@ -164,27 +222,16 @@ def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
     b, s, d = x.shape
     hd = cfg.resolved_head_dim
     h, kv = cfg.num_heads, cfg.num_kv_heads
-    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, h, hd)
-    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, kv, hd)
-    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, kv, hd)
+    q = L.linear(x, p["wq"], "bsd,de->bse").reshape(b, s, h, hd)
+    k = L.linear(x, p["wk"], "bsd,de->bse").reshape(b, s, kv, hd)
+    v = L.linear(x, p["wv"], "bsd,de->bse").reshape(b, s, kv, hd)
     q = L.apply_rope(cfg, q, rope_pos)
     k = L.apply_rope(cfg, k, rope_pos)
 
     quantized = cache is not None and cache["k"].dtype == jnp.int8
 
-    def _quant(t):  # (..., hd) -> int8 values + per-vector scale
-        scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
-        scale = jnp.maximum(scale, 1e-8)
-        q8 = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
-                      -127, 127).astype(jnp.int8)
-        return q8, scale
-
-    def _dequant(q8, scale, dtype):
-        return (q8.astype(jnp.float32) * scale[..., None]).astype(dtype)
-
     new_cache = cache
     if mode == "decode" and pages is not None:
-        assert not quantized, "paged KV pools are not quantized"
         out, new_cache = _paged_attn_decode(cfg, q, k, v, cache, pages, pos)
     elif mode == "decode":
         # s == 1: one decode step. s > 1: one chunked-prefill chunk — the
@@ -199,16 +246,16 @@ def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
             pos_b[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :], w)
         rows = jnp.arange(b)[:, None]
         if quantized:
-            kq, ks = _quant(k)
-            vq, vs = _quant(v)
+            kq, ks = quantize_kv(k)
+            vq, vs = quantize_kv(v)
             new_cache = {
                 "k": cache["k"].at[rows, slots].set(kq),
                 "v": cache["v"].at[rows, slots].set(vq),
                 "k_scale": cache["k_scale"].at[rows, slots].set(ks),
                 "v_scale": cache["v_scale"].at[rows, slots].set(vs),
             }
-            kc = _dequant(new_cache["k"], new_cache["k_scale"], k.dtype)
-            vc = _dequant(new_cache["v"], new_cache["v_scale"], v.dtype)
+            kc = dequantize_kv(new_cache["k"], new_cache["k_scale"], k.dtype)
+            vc = dequantize_kv(new_cache["v"], new_cache["v_scale"], v.dtype)
         else:
             kc = cache["k"].at[rows, slots].set(k)
             vc = cache["v"].at[rows, slots].set(v)
@@ -220,8 +267,17 @@ def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
             w = cache["k"].shape[1]
             k_w, v_w = (k[:, -w:], v[:, -w:]) if s >= w else (k, v)
             if quantized:
-                kq, ks = _quant(k_w)
-                vq, vs = _quant(v_w)
+                from repro.util import hint_val
+
+                # single-shot prefill is the one write whose token
+                # positions are guaranteed page-aligned from 0, so the
+                # "page" scale granularity groups here (hint_val is 0 =
+                # per-token otherwise); a truncated window (s > w) starts
+                # mid-page and keeps per-token scales, which only
+                # tightens the error bound
+                group = hint_val("kv_scale_page") if s <= w else 0
+                kq, ks = quantize_kv(k_w, group=group)
+                vq, vs = quantize_kv(v_w, group=group)
                 writes = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
             else:
                 writes = {"k": k_w, "v": v_w}
@@ -236,7 +292,7 @@ def _attn_apply(cfg, p, x, rope_pos, *, mode: str, cache, pos, window: int,
     out = out.reshape(b, s, h * hd)
     if not project:
         return out, new_cache
-    return L._ar_barrier(jnp.einsum("bse,ed->bsd", out, p["wo"])), new_cache
+    return L._ar_barrier(L.linear(out, p["wo"], "bse,ed->bsd")), new_cache
 
 
 def apply_block(cfg, btype: str, p, x, rope_pos, *, mode: str, cache=None,
@@ -249,7 +305,11 @@ def apply_block(cfg, btype: str, p, x, rope_pos, *, mode: str, cache=None,
     if btype in KV_CACHE_BLOCKS:
         causal = cfg.causal and btype != "encoder"
         window = cfg.local_window if btype == "local_attn" else 0
-        if hint_opt("parallel_block") and btype != "moe":
+        if (hint_opt("parallel_block") and btype != "moe"
+                and not isinstance(p["attn"]["wo"], dict)):
+            # (int8 weight leaves are {"w_q", "scale"} dicts — the fused
+            # wo/w_down concat below needs plain matrices, so quantized
+            # weights take the unfused path)
             # PaLM-style parallel attention+MLP with FUSED output
             # projection: concat the attention context and the MLP hidden
             # along the (model-sharded) contraction dim and project with

@@ -144,15 +144,29 @@ def _ar_barrier(y):
     return y
 
 
+def linear(x, w, eq: str):
+    """Matmul that dispatches on the weight leaf: a plain array runs the
+    ORIGINAL einsum untouched (byte-identical numerics to the pre-quant
+    path); a ``{"w_q": int8, "scale": fp32}`` dict (see
+    ``model.quantize_weights``) runs weight-only int8 with fp32
+    accumulation and applies the per-output-channel scale AFTER the dot —
+    the ``kernels/int8_matmul.py`` contract (matmul-then-scale is exact
+    for per-column scales since each output column touches one scale)."""
+    if isinstance(w, dict):
+        y = jnp.einsum(eq, x.astype(F32), w["w_q"].astype(F32))
+        return (y * w["scale"]).astype(x.dtype)
+    return jnp.einsum(eq, x, w)
+
+
 def apply_mlp(cfg, p, x):
     if cfg.mlp_variant in ("swiglu", "geglu"):
         act = jax.nn.silu if cfg.mlp_variant == "swiglu" else jax.nn.gelu
-        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
-        u = jnp.einsum("...d,df->...f", x, p["w_up"])
+        g = linear(x, p["w_gate"], "...d,df->...f")
+        u = linear(x, p["w_up"], "...d,df->...f")
         h = act(g) * u
     else:
-        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["w_up"]))
-    return _ar_barrier(jnp.einsum("...f,fd->...d", h, p["w_down"]))
+        h = jax.nn.gelu(linear(x, p["w_up"], "...d,df->...f"))
+    return _ar_barrier(linear(h, p["w_down"], "...f,fd->...d"))
 
 
 # ---------------------------------------------------------------------------
@@ -368,6 +382,30 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, pos):
     k = jnp.take(k_pool, page_table, axis=0).reshape(b, n_pages * ps, hkv, d)
     v = jnp.take(v_pool, page_table, axis=0).reshape(b, n_pages * ps, hkv, d)
     return decode_attention(q, k, v, pos)
+
+
+def paged_decode_attention_int8(q, k_pool, v_pool, k_scale, v_scale,
+                                page_table, pos):
+    """Quantized-pool twin of ``paged_decode_attention``: pools hold int8
+    values and per-(token, kv-head) fp32 scales (P, ps, Hkv, 1) addressed
+    by the SAME page ids. Gathers values and scales through the page
+    table, dequantizes to the compute dtype and runs the identical masked
+    softmax — the jnp oracle twin of the fused-dequant Pallas kernel in
+    ``repro.kernels.decode_attention.paged_decode_attention_int8`` (both
+    dequantize-then-attend, so their numerics agree up to dot-order).
+    Trash-page garbage is hidden by the same per-query validity mask."""
+    b = q.shape[0]
+    _, ps, hkv, d = k_pool.shape
+    n_pages = page_table.shape[1]
+
+    def gather(pool, scale):
+        vals = jnp.take(pool, page_table, axis=0)
+        sc = jnp.take(scale, page_table, axis=0)
+        deq = (vals.astype(F32) * sc).astype(q.dtype)
+        return deq.reshape(b, n_pages * ps, hkv, d)
+
+    return decode_attention(q, gather(k_pool, k_scale),
+                            gather(v_pool, v_scale), pos)
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0):

@@ -141,28 +141,71 @@ def paged_ok(cfg) -> bool:
 
 
 def init_paged_cache(cfg, batch: int, n_pages: int, page_size: int,
-                     max_pages_per_slot: int):
+                     max_pages_per_slot: int, kv_dtype: str = ""):
     """Paged decode cache: one page POOL per attention block (shared by all
     slots, stacked over ``n_repeat`` for the scanned body) + one page-table
     row and position per slot. Table entries start at 0 — the reserved
     trash page — so uninitialized slots can never write into a live page.
+    ``kv_dtype`` "int8" quantizes the pools (int8 values + fp32 scale
+    pages addressed by the same page ids).
     """
     assert paged_ok(cfg), f"{cfg.name}: arch has non-pageable blocks"
     dtype = _dtype(cfg)
     pattern, n_repeat, tail = block_program(cfg)
 
     def stacked_pool(btype):
-        c = init_paged_block_cache(cfg, btype, n_pages, page_size, dtype)
+        c = init_paged_block_cache(cfg, btype, n_pages, page_size, dtype,
+                                   kv_dtype)
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_repeat,) + x.shape), c)
 
     return {
         "body": [stacked_pool(bt) for bt in pattern],
-        "tail": [init_paged_block_cache(cfg, bt, n_pages, page_size, dtype)
+        "tail": [init_paged_block_cache(cfg, bt, n_pages, page_size, dtype,
+                                        kv_dtype)
                  for bt in tail],
         "pos": jnp.zeros((batch,), jnp.int32),
         "page_table": jnp.zeros((batch, max_pages_per_slot), jnp.int32),
     }
+
+
+# ---------------------------------------------------------------------------
+# weight-only int8 quantization
+# ---------------------------------------------------------------------------
+
+#: attention/MLP matmul weights eligible for weight-only int8. Embeddings,
+#: lm_head and norms stay in the model dtype (quality-critical, tiny).
+QUANT_WEIGHT_KEYS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def quantize_weights(cfg, params):
+    """Weight-only int8: replace each attention/MLP matmul weight with a
+    ``{"w_q": int8, "scale": fp32}`` leaf pair — symmetric per-OUTPUT-
+    channel scales (``kernels/int8_matmul.py`` semantics: int8 values,
+    fp32 accumulation, scale applied per output column after the dot).
+    ``layers.linear`` dispatches on the dict. The scale reduction is over
+    the contraction dim (axis=-2, keepdims), so stacked body weights
+    (leading layer axis) quantize layer-by-layer and still slice
+    correctly under the scan."""
+
+    def _q_leaf(w):
+        a = jnp.max(jnp.abs(w.astype(F32)), axis=-2, keepdims=True)
+        scale = jnp.maximum(a / 127.0, 1e-12)
+        q8 = jnp.clip(jnp.round(w.astype(F32) / scale), -127, 127)
+        return {"w_q": q8.astype(jnp.int8), "scale": scale}
+
+    def _q_block(p):
+        p = dict(p)
+        for sub in ("attn", "mlp"):
+            if sub in p:
+                p[sub] = {k: (_q_leaf(v) if k in QUANT_WEIGHT_KEYS else v)
+                          for k, v in p[sub].items()}
+        return p
+
+    out = dict(params)
+    out["body"] = [_q_block(b) for b in params["body"]]
+    out["tail"] = [_q_block(b) for b in params["tail"]]
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -4,18 +4,21 @@
 carried a dozen positional-ish knobs. ``EngineConfig`` collapses that
 sprawl into one frozen, hashable value object — the thing a cluster
 frontend can log, diff across replicas, and ship to a spawner. The
-``topology`` field is the new capability: a replica that spans an
-N-chip mesh (tensor/expert-parallel sharded serving) instead of one
-device. The 1-chip default is bit-identical to the pre-config engine.
+``topology`` field covers a replica that spans an N-chip mesh
+(tensor/expert-parallel sharded serving) instead of one device; the
+``precision`` field (``PrecisionConfig``) covers the quantized serving
+path (int8 KV-cache pages + int8 weights). The all-default config is
+bit-identical to the pre-config engine.
 
-Legacy keyword construction (``ServingEngine(cfg, params, slots=4, ...)``)
-still works for one PR via ``EngineConfig.from_legacy_kwargs`` and emits a
-``DeprecationWarning``; construct with ``config=EngineConfig(...)``.
+Construction goes through ``EngineConfig`` only: the one-PR
+``from_legacy_kwargs`` shim (PR 7) is gone, and legacy keyword
+construction (``ServingEngine(cfg, params, slots=4, ...)``) raises
+``TypeError`` with the migration recipe.
 """
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, fields
+from dataclasses import dataclass
 from typing import Optional
 
 #: MoE capacity-overflow handling for the serving traces (moe archs only):
@@ -31,6 +34,72 @@ from typing import Optional
 #:   drop         — GShard serving default: overflow tokens silently pass
 #:                  through the residual (the pre-config engine behavior).
 MOE_CAPACITY_POLICIES = ("strict", "backpressure", "drop")
+
+#: KV-cache storage dtypes the quantized serving path accepts ("" = the
+#: model compute dtype, the lossless default).
+KV_CACHE_DTYPES = ("", "int8")
+
+#: Weight storage dtypes ("" = model dtype). int8 is weight-only
+#: quantization: per-output-channel fp32 scales, fp32 accumulation.
+WEIGHT_DTYPES = ("", "int8")
+
+#: Scale granularity for the quantized KV cache. Storage is identical
+#: (one fp32 scale per (token, kv-head) vector); "page" additionally
+#: COARSENS prefill writes to one scale per (page, kv-head) so a whole
+#: page shares one dequant multiplier (the fused kernel's fast path),
+#: while decode-time single-token appends always get their own scale.
+#: "token" keeps per-token scales everywhere (tighter error bound).
+KV_SCALE_GRANULARITIES = ("page", "token")
+
+#: Block types whose attention/MLP matmul weights may quantize to int8.
+#: MoE is excluded (expert-stacked weight layout + router sensitivity),
+#: recurrent mixers (rglru/ssd) carry state-update matmuls whose error
+#: compounds across steps.
+WEIGHT_QUANT_BLOCKS = ("dense", "encoder", "local_attn")
+
+
+@dataclass(frozen=True)
+class PrecisionConfig:
+    """Serving-path numeric precision, as one frozen hashable sub-config.
+
+    ``kv_cache_dtype``: "" (model dtype) or "int8" — int8 stores KV-cache
+    pages as int8 values + per-vector fp32 scales, halving (hd >> 4:
+    nearly quartering vs f32) HBM per resident token; ``plan_admission``
+    converts that into extra concurrent slots. Quantized KV requires the
+    PAGED cache: rolling/recurrent caches are rejected by ``validate()``.
+    ``weight_dtype``: "" or "int8" — weight-only int8 for the
+    attention/MLP matmuls (per-output-channel fp32 scales, fp32
+    accumulation via ``kernels/int8_matmul.py`` semantics). Only
+    ``WEIGHT_QUANT_BLOCKS`` archs qualify; embed/lm_head stay f32.
+    ``kv_scale_granularity``: see ``KV_SCALE_GRANULARITIES``.
+    """
+
+    kv_cache_dtype: str = ""
+    weight_dtype: str = ""
+    kv_scale_granularity: str = "page"
+
+    def __post_init__(self):
+        if self.kv_cache_dtype not in KV_CACHE_DTYPES:
+            raise ValueError(
+                f"unknown kv_cache_dtype {self.kv_cache_dtype!r} "
+                f"(want one of {KV_CACHE_DTYPES})")
+        if self.weight_dtype not in WEIGHT_DTYPES:
+            raise ValueError(
+                f"unknown weight_dtype {self.weight_dtype!r} "
+                f"(want one of {WEIGHT_DTYPES})")
+        if self.kv_scale_granularity not in KV_SCALE_GRANULARITIES:
+            raise ValueError(
+                f"unknown kv_scale_granularity "
+                f"{self.kv_scale_granularity!r} (want one of "
+                f"{KV_SCALE_GRANULARITIES})")
+
+    @property
+    def quantized_kv(self) -> bool:
+        return self.kv_cache_dtype != ""
+
+    @property
+    def quantized_weights(self) -> bool:
+        return self.weight_dtype != ""
 
 
 @dataclass(frozen=True)
@@ -105,6 +174,9 @@ class EngineConfig:
     topology: DeviceTopology = DeviceTopology()
     modeled_chips: int = 0
     moe_capacity_policy: Optional[str] = None
+    # serving-path precision (quantized KV pages / int8 weights); the
+    # all-default PrecisionConfig is the lossless model-dtype path
+    precision: PrecisionConfig = PrecisionConfig()
     # --- observability ---
     # span tracing: stamp a Trace on every request at phase boundaries
     # (host timestamps at existing sync points only; bit-identical
@@ -143,10 +215,13 @@ class EngineConfig:
         """Chips the cost model bills this replica for."""
         return self.modeled_chips or self.topology.n_chips
 
-    def validate(self) -> "EngineConfig":
+    def validate(self, cfg=None) -> "EngineConfig":
         """Fail fast — BEFORE any trace — when the requested topology
-        cannot be realized on this host, with the fix in the message
-        (an opaque XLA shape/device error at first trace otherwise)."""
+        cannot be realized on this host, or the requested precision
+        cannot serve ``cfg``'s architecture, with the fix in the message
+        (an opaque XLA shape/device error at first trace otherwise).
+        ``cfg`` (the model config) arms the precision checks; without it
+        only host-level checks run."""
         need = self.topology.n_chips
         if need > 1:
             import jax
@@ -160,6 +235,40 @@ class EngineConfig:
                     f"XLA_FLAGS=--xla_force_host_platform_device_count="
                     f"{need} in the environment before jax initializes, "
                     f"or shrink the topology")
+        pr = self.precision
+        if cfg is not None and pr.quantized_kv:
+            from repro.models import paged_ok
+
+            if self.paged is False:
+                raise ValueError(
+                    f"precision.kv_cache_dtype={pr.kv_cache_dtype!r} "
+                    f"quantizes KV-cache PAGES; the rolling cache "
+                    f"(paged=False) has no paged pools — drop paged=False "
+                    f"or clear kv_cache_dtype")
+            if not paged_ok(cfg):
+                raise ValueError(
+                    f"precision.kv_cache_dtype={pr.kv_cache_dtype!r} "
+                    f"needs every block pageable, but {cfg.name} has "
+                    f"rolling/recurrent-cache blocks (local_attn/rglru/"
+                    f"ssd) that cannot serve from quantized pages — clear "
+                    f"kv_cache_dtype for this arch")
+        if cfg is not None and pr.quantized_weights:
+            from repro.models import block_program
+
+            pattern, _, tail = block_program(cfg)
+            bad = sorted({bt for bt in pattern + tail
+                          if bt not in WEIGHT_QUANT_BLOCKS})
+            if bad:
+                raise ValueError(
+                    f"precision.weight_dtype={pr.weight_dtype!r} supports "
+                    f"blocks {WEIGHT_QUANT_BLOCKS} only, but {cfg.name} "
+                    f"contains {bad} — clear weight_dtype for this arch")
+            if self.topology.sharded:
+                raise ValueError(
+                    f"precision.weight_dtype={pr.weight_dtype!r} is not "
+                    f"supported on sharded replicas yet (int8 weight "
+                    f"leaves have no GSPMD profile) — serve quantized "
+                    f"weights on 1-chip replicas or clear weight_dtype")
         return self
 
     def resolved_moe_policy(self, cfg) -> str:
@@ -170,21 +279,6 @@ class EngineConfig:
         if cfg.arch_type == "moe" and self.topology.sharded:
             return "strict"
         return "drop"
-
-    @classmethod
-    def from_legacy_kwargs(cls, **kw) -> "EngineConfig":
-        """Map the pre-config ``ServingEngine`` keywords onto a config.
-        ``n_chips`` (a cost-model fiction for heterogeneous simulated
-        replicas) becomes ``modeled_chips``."""
-        if "n_chips" in kw:
-            kw["modeled_chips"] = kw.pop("n_chips")
-        known = {f.name for f in fields(cls)}
-        unknown = set(kw) - known
-        if unknown:
-            raise TypeError(
-                f"unknown ServingEngine/EngineConfig argument(s): "
-                f"{sorted(unknown)}")
-        return cls(**kw)
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)

@@ -40,7 +40,6 @@ from __future__ import annotations
 import contextlib
 import math
 import time
-import warnings
 from collections import deque
 from dataclasses import dataclass
 from functools import partial
@@ -55,6 +54,7 @@ from repro.core.costmodel import (
     estimate_backlog_s,
     estimate_decode,
     estimate_prefill,
+    kv_bytes_per_token,
 )
 from repro.core.misd.batching import BatchAccumulator, plan_admission
 from repro.core.misd.scheduler import ChunkedPrefillPolicy
@@ -72,6 +72,7 @@ from repro.models import (
     init_cache,
     init_paged_cache,
     paged_ok,
+    quantize_weights,
 )
 from repro.models.blocks import KV_CACHE_BLOCKS
 from repro.models.layers import sample_tokens
@@ -107,16 +108,17 @@ __all__ = [  # noqa: F822 — LoadReport/DeviceTopology re-exported for callers
 # ---------------------------------------------------------------------------
 
 
-def prefill_step(cfg, params, batch, *, window: int):
+def prefill_step(cfg, params, batch, *, window: int, kv_dtype: str = ""):
     """Full-prompt forward filling a fresh cache. Returns (last_token_logits,
     cache)."""
     b = (batch["frames"] if cfg.modality == "audio" else batch["tokens"]).shape[0]
-    cache = init_cache(cfg, b, window)
+    cache = init_cache(cfg, b, window, kv_dtype)
     logits, _, cache = forward(cfg, params, batch, mode="prefill", cache=cache)
     return logits[:, -1], cache
 
 
-def bucketed_prefill_step(cfg, params, batch, true_len, *, window: int):
+def bucketed_prefill_step(cfg, params, batch, true_len, *, window: int,
+                          kv_dtype: str = ""):
     """Prefill a prompt padded (at the end) to a bucket length. ``true_len``
     is a traced int32 scalar, so every prompt length inside one bucket
     shares a single trace. Causality keeps the pad garbage out of the real
@@ -125,7 +127,7 @@ def bucketed_prefill_step(cfg, params, batch, true_len, *, window: int):
     write index overwrites them. Returns (first_token (B,), last_true_token
     logits (B, V), cache)."""
     b = batch["tokens"].shape[0]
-    cache = init_cache(cfg, b, window)
+    cache = init_cache(cfg, b, window, kv_dtype)
     logits, _, cache = forward(cfg, params, batch, mode="prefill", cache=cache)
     true_len = jnp.asarray(true_len, jnp.int32)
     last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
@@ -156,14 +158,15 @@ def prefill_chunk_step(cfg, params, cache, tokens, true_len):
     return tok, last, new_cache
 
 
-def paged_prefill_step(cfg, params, batch, true_len):
+def paged_prefill_step(cfg, params, batch, true_len, kv_dtype: str = ""):
     """Prefill for the paged engine: the B=1 cache window IS the padded
     prompt length (a LINEAR buffer — no rolling wrap), so every key of the
     padded prompt survives for the page scatter. ``true_len`` is traced;
     one trace serves every prompt inside a bucket. Returns (first_token
     (B,), last-true-token logits (B, V), linear cache with pos=true_len)."""
     padded = batch["tokens"].shape[1]
-    return bucketed_prefill_step(cfg, params, batch, true_len, window=padded)
+    return bucketed_prefill_step(cfg, params, batch, true_len, window=padded,
+                                 kv_dtype=kv_dtype)
 
 
 def pages_insert(paged_cache, linear_cache, pages, slot, true_len):
@@ -569,19 +572,20 @@ class ServingEngine:
     def __init__(self, cfg, params,
                  config: Optional[EngineConfig] = None, **legacy):
         if legacy:
-            if config is not None:
-                raise TypeError(
-                    "pass either config=EngineConfig(...) or legacy keyword "
-                    "arguments, not both")
-            warnings.warn(
+            # the one-PR from_legacy_kwargs shim (PR 7) is gone: keyword
+            # construction fails loudly with the migration recipe
+            raise TypeError(
                 "ServingEngine(cfg, params, slots=..., ...) keyword "
-                "construction is deprecated; build an EngineConfig and pass "
-                "ServingEngine(cfg, params, EngineConfig(...))",
-                DeprecationWarning, stacklevel=2)
-            config = EngineConfig.from_legacy_kwargs(**legacy)
-        elif config is None:
+                "construction was removed — build an EngineConfig and pass "
+                "ServingEngine(cfg, params, EngineConfig(slots=..., ...)). "
+                "Field names match the former keywords one-for-one except "
+                "n_chips -> modeled_chips; serving-path precision (int8 "
+                "KV pages / weights) is EngineConfig(precision="
+                "PrecisionConfig(...)). Unknown keywords: "
+                f"{sorted(legacy)}")
+        if config is None:
             config = EngineConfig()
-        config.validate()
+        config.validate(cfg)
         self.config = config
         self.topology = config.topology
         # locals mirror the former keywords: the executor body predates the
@@ -601,6 +605,12 @@ class ServingEngine:
 
         self.cfg = cfg
         self.n_chips = n_chips
+        if config.precision.quantized_weights:
+            # weight-only int8 at load time: attention/MLP matmul leaves
+            # become {"w_q": int8, "scale": fp32} (layers.linear
+            # dispatches); validate() already rejected sharded replicas
+            # and non-quantizable block types
+            params = quantize_weights(cfg, params)
         # --- sharded replica: mesh + bit-exact GSPMD profile ---
         # serving_policy shards only concat-dim weights (output dims, the
         # vocab axis, MoE expert axis) and the KV pools' kv-head axis;
@@ -633,6 +643,10 @@ class ServingEngine:
                 f"local-attention); pass paged=None to auto-fall back to "
                 f"rolling windows")
         self.paged = paged_ok(cfg) if paged is None else bool(paged)
+        # quantized KV pages: validate(cfg) guaranteed the paged cache is
+        # available whenever a kv_cache_dtype is set (paged=None resolves
+        # to paged=True here because the arch is fully pageable)
+        self.kv_dtype = config.precision.kv_cache_dtype
         assert page_size > 0 and page_size & (page_size - 1) == 0, page_size
         self.page_size = page_size
         self.max_seq = _padded_len(int(max_seq or window), page_size)
@@ -640,20 +654,31 @@ class ServingEngine:
         self.plan = plan_admission(
             cfg, context=window, sla_s=sla_s, n_chips=n_chips,
             kv_hbm_budget_bytes=kv_hbm_budget,
-            mean_context=(expected_len or None) if self.paged else window)
+            mean_context=(expected_len or None) if self.paged else window,
+            kv_cache_dtype=self.kv_dtype)
         if not slots:
             slots = self.plan.slots
         # --- MoE capacity policy (overflow as typed backpressure) ---
         self.moe_capacity_policy = (config.resolved_moe_policy(cfg)
                                     if cfg.arch_type == "moe" else "")
         self._moe_gmax = 0  # drop-free group bound (backpressure only)
-        self._trace_ctx = contextlib.nullcontext
+        # every model-forward trace runs under self._trace_ctx; it carries
+        # the scalar hints the model reads at trace time: the strict-MoE
+        # full-capacity opt and/or the quantized cache's prefill scale
+        # granularity ("page" granularity coarsens single-shot prefill
+        # scale writes to one per page — see blocks.quantize_kv)
+        hint_kw = {}
+        if self.kv_dtype and config.precision.kv_scale_granularity == "page":
+            hint_kw["kv_scale_page"] = page_size
+        self._trace_ctx = (partial(sharding_hints, **hint_kw) if hint_kw
+                           else contextlib.nullcontext)
         if self.moe_capacity_policy == "strict":
             # every serving trace runs under the full-capacity hint: the
             # (N, g, E, C) combine buffer covers the whole group, so no
             # routing pattern can drop a token (see models.moe._capacity)
             self._trace_ctx = partial(sharding_hints,
-                                      opts=frozenset({"moe_full_cap"}))
+                                      opts=frozenset({"moe_full_cap"}),
+                                      **hint_kw)
         elif self.moe_capacity_policy == "backpressure":
             self._moe_gmax = drop_free_group(cfg)
             # the decode group IS the slot count (garbage lanes route too):
@@ -732,7 +757,8 @@ class ServingEngine:
             self.prefix_index = (PrefixIndex(self.allocator, page_size)
                                  if prefix_cache else None)
             self.cache = init_paged_cache(cfg, slots, self.pool_pages,
-                                          page_size, self.max_pages)
+                                          page_size, self.max_pages,
+                                          kv_dtype=self.kv_dtype)
             self._pos_h: List[int] = [0] * slots  # host mirror of cache pos
             # pages of the slot's reservation already written into its
             # device page-table row (the decode tail is appended lazily)
@@ -816,7 +842,8 @@ class ServingEngine:
             self.prefill_traces += 1
             self._note_compile(f"prefill/paged{_batch_len(batch)}")
             with self._trace_ctx():
-                return paged_prefill_step(cfg, params, batch, true_len)
+                return paged_prefill_step(cfg, params, batch, true_len,
+                                          kv_dtype=self.kv_dtype)
 
         def _probed_suffix(params, cache, tokens, true_len):
             # suffix-offset prefill over a seeded linear cache: retraces
@@ -1343,7 +1370,8 @@ class ServingEngine:
         buf = self.max_seq if self.paged else self.window
         self._jobs.append(_PrefillJob(
             req=req, slot=slot,
-            cache=self._put_linear(init_cache(self.cfg, 1, buf)),
+            cache=self._put_linear(init_cache(self.cfg, 1, buf,
+                                              self.kv_dtype)),
             tokens=jnp.asarray(padded),
             true_len=np.int32(req.prompt_len)))
         req.state = RequestState.PREFILL
@@ -1912,7 +1940,10 @@ class ServingEngine:
             span_totals=self.tracer.totals_wire(),
             compile_events=tuple(sorted(self.compile_events.items())),
             browned_out=self.metrics.browned_out,
-            tenant_stats=self.metrics.tenant_wire())
+            tenant_stats=self.metrics.tenant_wire(),
+            kv_bytes_per_token=kv_bytes_per_token(self.cfg, self.kv_dtype),
+            kv_cache_dtype=self.kv_dtype,
+            weight_dtype=self.config.precision.weight_dtype)
 
     @property
     def mesh_axes(self):

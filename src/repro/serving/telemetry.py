@@ -19,7 +19,7 @@ Schema history:
        come from exactly-mergeable bounded state; ``span_totals`` —
        per-span-kind (count, seconds) rollups from request traces;
        ``compile_events`` — jit traces per trace-cache key.
-  v4 — this PR (overload control): ``browned_out`` — requests served
+  v4 — PR 9 (overload control): ``browned_out`` — requests served
        with a ladder-trimmed token budget; ``tenant_stats`` — per-tenant
        rollups ((tenant, (admitted, completed, total_tokens, rejected,
        shed, browned_out, brownout_trimmed_tokens, slo_tracked,
@@ -27,12 +27,22 @@ Schema history:
        ``TenantMetrics.to_wire`` form, exactly mergeable across replicas
        — the overload detector's and per-tenant-goodput dashboards'
        input.
+  v5 — this PR (quantized serving): ``kv_bytes_per_token`` — the
+       replica's actual per-resident-token KV cost (pool dtype included)
+       so routers/cost models price heterogeneous pools correctly;
+       ``kv_cache_dtype``/``weight_dtype`` — the replica's
+       ``PrecisionConfig`` storage dtypes ("" = model dtype).
+
+Readers upgrade old wire dicts through ``_UPGRADES``: one table-driven
+step per historical version (v_n -> v_{n+1}), walked in order — adding a
+schema version means appending ONE entry, not threading a new ad-hoc
+branch through ``from_dict``.
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass, fields
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 #: tuple-of-tuples fields that serialize as lists (JSON has no tuples)
 _TUPLE_FIELDS = ("active_remaining", "queued_budgets", "mesh_axes",
@@ -126,6 +136,15 @@ class LoadReport:
     # form: ((tenant, (counters...), ttft-wire-or-()), ...) — exactly
     # mergeable across replicas like everything else on this wire
     tenant_stats: tuple = ()
+    # --- v5: serving-path precision (quantized replicas) ---
+    # HBM bytes one resident cached token costs on THIS replica (pool
+    # dtype included) — the router/cost model's capacity unit for
+    # heterogeneous pools; 0.0 from pre-v5 reports means "unknown, assume
+    # model dtype"
+    kv_bytes_per_token: float = 0.0
+    # the replica's PrecisionConfig storage dtypes ("" = model dtype)
+    kv_cache_dtype: str = ""
+    weight_dtype: str = ""
 
     @property
     def saturated(self) -> bool:
@@ -151,14 +170,18 @@ class LoadReport:
 
     @classmethod
     def from_dict(cls, d: dict) -> "LoadReport":
-        """Inverse of ``to_dict``. Accepts schema v1 (no version field) and
-        v2 (missing newer fields default); rejects reports from a FUTURE
-        schema instead of silently mis-reading them."""
+        """Inverse of ``to_dict``. Historical versions (v1: no version
+        field; v2-v4: missing newer fields) upgrade through the
+        ``_UPGRADES`` table one step at a time; FUTURE schemas are
+        rejected instead of silently mis-read."""
         version = int(d.get("schema_version", 1))
         if version > SCHEMA_VERSION:
             raise ValueError(
                 f"LoadReport schema v{version} is newer than this "
                 f"reader (v{SCHEMA_VERSION}); upgrade the consumer")
+        d = dict(d)
+        for v in range(version, SCHEMA_VERSION):
+            d = _UPGRADES[v](d)
         known = {f.name for f in fields(cls)}
         kw = {k: v for k, v in d.items() if k in known}
         for k in _TUPLE_FIELDS:
@@ -170,3 +193,24 @@ class LoadReport:
                 kw[k] = _tuplify(kw[k])
         kw["schema_version"] = SCHEMA_VERSION
         return cls(**kw)
+
+
+# -- table-driven wire upgrades (v_n dict -> v_{n+1} dict) ------------------
+# Every historical bump so far only ADDED fields whose dataclass defaults
+# are the correct backfill, so each step is the identity on the payload;
+# a future bump that renames/reshapes a field writes its migration here
+# (and ONLY here) instead of branching inside from_dict.
+
+
+def _add_fields_step(d: dict) -> dict:
+    return d
+
+
+_UPGRADES = {
+    1: _add_fields_step,  # v1 -> v2: + mesh/axis + MoE capacity fields
+    2: _add_fields_step,  # v2 -> v3: + histograms/span_totals/compiles
+    3: _add_fields_step,  # v3 -> v4: + browned_out/tenant_stats
+    4: _add_fields_step,  # v4 -> v5: + kv_bytes_per_token/precision dtypes
+}
+assert sorted(_UPGRADES) == list(range(1, SCHEMA_VERSION)), (
+    "every historical schema version needs exactly one upgrade step")

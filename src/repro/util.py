@@ -115,7 +115,8 @@ def sharding_hints(*, batch_axes=("data",), model_axis="model",
     """
     tok = _HINTS.set({"batch_axes": tuple(batch_axes),
                       "model_axis": model_axis, "opts": frozenset(opts),
-                      "batch_div": int(kwargs.get("batch_div", 1))})
+                      "batch_div": int(kwargs.get("batch_div", 1)),
+                      "kv_scale_page": int(kwargs.get("kv_scale_page", 0))})
     try:
         yield
     finally:
@@ -129,6 +130,13 @@ def hints():
 def hint_opt(name: str) -> bool:
     h = _HINTS.get()
     return bool(h) and name in h["opts"]
+
+
+def hint_val(name: str, default: int = 0) -> int:
+    """Scalar hint lookup (e.g. "kv_scale_page": the page size the
+    quantized KV cache groups prefill scales by; 0 = per-token)."""
+    h = _HINTS.get()
+    return h.get(name, default) if h else default
 
 
 def wsc(x, *spec):

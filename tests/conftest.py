@@ -22,6 +22,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 ENGINE_CACHE = os.environ.get("REPRO_ENGINE_CACHE", "")  # ""|paged|rolling|prefix_cache
 ENGINE_SAMPLING = os.environ.get("REPRO_ENGINE_SAMPLING", "")  # ""|greedy|sampled
 ENGINE_TOPOLOGY = os.environ.get("REPRO_ENGINE_TOPOLOGY", "")  # ""|tp8
+# ""|int8 — run every (pageable-arch) make_engine engine with int8 KV-cache
+# pages (ISSUE 10). Only injected when the test pins neither cache layout
+# nor precision: quantized KV requires the paged cache, and tests that A/B
+# paged-vs-rolling or assert engine-vs-f32-oracle exactness pin their
+# config explicitly and stay lossless.
+ENGINE_PRECISION = os.environ.get("REPRO_ENGINE_PRECISION", "")
 
 if ENGINE_TOPOLOGY == "tp8":
     os.environ["XLA_FLAGS"] = (
@@ -75,13 +81,16 @@ def matrix_sampling(rid: int = 0):
 
 def make_engine(cfg, params, **kw):
     """ServingEngine honoring the matrix cell; explicit kwargs win. Built
-    through ``EngineConfig`` (the post-redesign construction path), so the
-    whole suite exercises it."""
-    from repro.serving import EngineConfig, ServingEngine
+    through ``EngineConfig`` (the only construction path since the legacy
+    shim was removed), so the whole suite exercises it."""
+    from repro.models import paged_ok
+    from repro.serving import EngineConfig, PrecisionConfig, ServingEngine
 
     merged = {**engine_overrides(cfg), **kw}
-    return ServingEngine(cfg, params,
-                         EngineConfig.from_legacy_kwargs(**merged))
+    if (ENGINE_PRECISION == "int8" and paged_ok(cfg)
+            and not {"paged", "prefix_cache", "precision"} & merged.keys()):
+        merged["precision"] = PrecisionConfig(kv_cache_dtype="int8")
+    return ServingEngine(cfg, params, EngineConfig(**merged))
 
 
 def make_request(rid, prompt, max_new_tokens, **kw):

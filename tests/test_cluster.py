@@ -12,6 +12,7 @@ from repro.core.misd.interference import InterferencePredictor
 from repro.models import init_params
 from repro.serving import (
     ClusterFrontend,
+    EngineConfig,
     RequestState,
     ServeMetrics,
     ServingEngine,
@@ -36,8 +37,8 @@ def pair(granite):
     """Two live replicas shared (and reset) across tests so their jit
     caches stay warm."""
     cfg, params = granite
-    engines = [ServingEngine(cfg, params, slots=2, window=64, max_seq=128,
-                             sync_every=4) for _ in range(2)]
+    engines = [ServingEngine(cfg, params, EngineConfig(slots=2, window=64, max_seq=128,
+                             sync_every=4)) for _ in range(2)]
     return cfg, params, engines
 
 
@@ -139,7 +140,7 @@ def test_engine_records_slo_attainment(granite):
     """The engine folds each finished request's SLO verdict into its
     metrics; a generous TTFT SLO passes, an impossible one misses."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, chunk_prefill=0))
     good = Request(0, _prompt(8), max_new_tokens=3, arrival_time=0.0,
                    ttft_slo_s=100.0)
     bad = Request(1, _prompt(8, seed=1), max_new_tokens=3, arrival_time=-50.0,
@@ -162,8 +163,8 @@ def test_engine_edf_backlog_ordering(granite):
     cfg, params = granite
 
     def run(edf):
-        eng = ServingEngine(cfg, params, slots=1, window=64,
-                            chunk_prefill=0, edf_backlog=edf)
+        eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64,
+                            chunk_prefill=0, edf_backlog=edf))
         blocker = Request(9, _prompt(8, seed=9), max_new_tokens=2)
         eng.submit(blocker, 0.0)  # occupies the only slot
         loose = Request(0, _prompt(8, seed=1), max_new_tokens=2,
@@ -428,8 +429,8 @@ def test_heterogeneous_pool_routes_more_to_bigger_replica(granite):
     is cheaper, so it should absorb clearly more of the traffic than its
     1-chip sibling (and the pool still drains correctly)."""
     cfg, params = granite
-    engines = [ServingEngine(cfg, params, slots=2, window=64, max_seq=128,
-                             sync_every=4, n_chips=c) for c in (1, 4)]
+    engines = [ServingEngine(cfg, params, EngineConfig(slots=2, window=64, max_seq=128,
+                             sync_every=4, modeled_chips=c)) for c in (1, 4)]
     fe = ClusterFrontend(engines, policy="predicted", seed=0)
     small, big = fe.instances
     assert small.device.speed == 1.0 and big.device.speed == 4.0
@@ -455,8 +456,8 @@ def test_prefix_affinity_routes_template_to_warm_replica(granite):
     routing includes the affinity term — requests sharing a template land
     on the replica that already holds its pages (and actually hit)."""
     cfg, params = granite
-    engines = [ServingEngine(cfg, params, slots=2, window=64, max_seq=128,
-                             sync_every=4, prefix_cache=True)
+    engines = [ServingEngine(cfg, params, EngineConfig(slots=2, window=64, max_seq=128,
+                             sync_every=4, prefix_cache=True))
                for _ in range(2)]
     fe = ClusterFrontend(engines, policy="predicted", seed=0)
     tpl = _prompt(48, seed=40)

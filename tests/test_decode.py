@@ -7,6 +7,7 @@ import pytest
 
 from conftest import make_batch
 from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.serving import EngineConfig
 from repro.models import decode_step, forward, init_cache, init_params
 
 DECODERS = [a for a in ASSIGNED_ARCHS if get_config(a).supports_decode]
@@ -66,13 +67,13 @@ def test_slot_isolation():
     params = init_params(cfg, jax.random.key(0))
     prompt = np.arange(12, dtype=np.int32)
 
-    eng1 = ServingEngine(cfg, params, slots=1, window=64)
+    eng1 = ServingEngine(cfg, params, EngineConfig(slots=1, window=64))
     r1 = Request(0, prompt, max_new_tokens=6)
     eng1.try_admit(r1, 0.0)
     while not r1.done:
         eng1.step(0.0)
 
-    eng2 = ServingEngine(cfg, params, slots=3, window=64)
+    eng2 = ServingEngine(cfg, params, EngineConfig(slots=3, window=64))
     r2 = Request(0, prompt.copy(), max_new_tokens=6)
     other = Request(1, np.arange(5, dtype=np.int32) + 7, max_new_tokens=9)
     eng2.try_admit(r2, 0.0)

@@ -61,12 +61,10 @@ def test_engine_config_rejects_bad_policy():
         EngineConfig(moe_capacity_policy="bogus")
 
 
-def test_from_legacy_kwargs_maps_n_chips_and_rejects_unknown():
-    c = EngineConfig.from_legacy_kwargs(slots=2, n_chips=4)
-    assert c.modeled_chips == 4 and c.n_chips == 4
-    assert c.topology == DeviceTopology()  # modeled chips are a fiction
-    with pytest.raises(TypeError, match="n_slots"):
-        EngineConfig.from_legacy_kwargs(n_slots=2)
+def test_legacy_shim_is_gone():
+    """The one-PR from_legacy_kwargs shim (PR 7) is fully removed — all
+    construction goes through EngineConfig directly."""
+    assert not hasattr(EngineConfig, "from_legacy_kwargs")
 
 
 def test_validate_names_xla_flags_fix():
@@ -82,16 +80,23 @@ def test_validate_names_xla_flags_fix():
     assert c.validate() is c
 
 
-def test_legacy_kwargs_shim_deprecation(granite):
-    """ServingEngine(cfg, params, slots=...) still works for one PR but
-    warns; mixing it with config= is an error."""
+def test_legacy_kwargs_raise_with_migration_recipe(granite):
+    """ServingEngine(cfg, params, slots=...) keyword construction raises
+    TypeError naming the EngineConfig migration and the offending
+    keywords — even alongside an explicit config."""
     cfg, params = granite
-    with pytest.warns(DeprecationWarning, match="EngineConfig"):
-        eng = ServingEngine(cfg, params, slots=2, window=64)
-    assert eng.slots == 2 and eng.window == 64
-    with pytest.raises(TypeError, match="not both"):
+    with pytest.raises(TypeError, match="EngineConfig") as ei:
+        ServingEngine(cfg, params, slots=2, window=64)
+    assert "slots" in str(ei.value) and "modeled_chips" in str(ei.value)
+    with pytest.raises(TypeError, match="EngineConfig"):
         ServingEngine(cfg, params, EngineConfig(slots=2, window=64),
                       slots=2)
+    # no DeprecationWarning remains anywhere on the construction path
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=64))
+    assert eng.slots == 2 and eng.window == 64
 
 
 def test_resolved_moe_policy_defaults():

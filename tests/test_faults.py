@@ -8,6 +8,7 @@ from repro.configs import get_config
 from repro.models import init_params
 from repro.serving import (
     ClusterFrontend,
+    EngineConfig,
     EngineFailure,
     FaultInjector,
     FaultyEngine,
@@ -42,8 +43,8 @@ def _workload(n, budget=5):
 
 
 def _engines(cfg, params, n):
-    return [ServingEngine(cfg, params, slots=2, window=64, max_seq=128,
-                          sync_every=1) for _ in range(n)]
+    return [ServingEngine(cfg, params, EngineConfig(slots=2, window=64, max_seq=128,
+                          sync_every=1)) for _ in range(n)]
 
 
 def _drive(fe, reqs, *, fault_at=None, max_steps=500):

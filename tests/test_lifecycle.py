@@ -7,6 +7,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serving import (
+    EngineConfig,
     PREEMPT_POLICIES,
     RequestRejected,
     RequestState,
@@ -49,8 +50,8 @@ def test_state_machine_progression(granite):
     """QUEUED -> PREFILL -> DECODE -> FINISHED, observable at each stage
     (chunked prefill makes the PREFILL stage span multiple ticks)."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
-                        chunk_prefill=8)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, sync_every=1,
+                        chunk_prefill=8))
     req = Request(0, _prompt(32), max_new_tokens=3)
     assert req.state is RequestState.QUEUED and not req.state.terminal
     assert eng.submit(req, 0.0)
@@ -71,8 +72,8 @@ def test_state_machine_progression(granite):
 
 def test_cancel_frees_slot_and_pages(granite):
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
-                        chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, sync_every=1,
+                        chunk_prefill=0))
     req = Request(0, _prompt(12), max_new_tokens=40)
     other = Request(1, _prompt(10, seed=1), max_new_tokens=4)
     assert eng.try_admit(req, 0.0)
@@ -93,8 +94,8 @@ def test_cancel_frees_slot_and_pages(granite):
 
 def test_timeout_aborts_mid_decode(granite):
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
-                        chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, sync_every=1,
+                        chunk_prefill=0))
     req = Request(0, _prompt(12), max_new_tokens=200, timeout_s=3.0)
     assert eng.try_admit(req, 0.0)
     for t in (1.0, 2.0, 3.0):  # within deadline: keeps decoding
@@ -113,8 +114,8 @@ def test_shed_overdue_queued_request_under_overload(granite):
     passed is dropped before burning prefill budget; the occupant is
     untouched. Off by default (late requests still finish)."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
-                        chunk_prefill=0, shed_overdue=True)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, sync_every=1,
+                        chunk_prefill=0, shed_overdue=True))
     hog = Request(0, _prompt(12), max_new_tokens=30)
     late = Request(1, _prompt(10, seed=1), max_new_tokens=4, ttft_slo_s=2.0)
     assert eng.try_admit(hog, 0.0)
@@ -143,10 +144,10 @@ def test_typed_rejection_is_a_valueerror_subclass():
 def test_preemption_requires_paged(granite):
     cfg, params = granite
     with pytest.raises(ValueError, match="preemption requires"):
-        ServingEngine(cfg, params, slots=1, paged=False, preemption=True)
+        ServingEngine(cfg, params, EngineConfig(slots=1, paged=False, preemption=True))
     with pytest.raises(ValueError, match="preempt_policy"):
-        ServingEngine(cfg, params, slots=1, preemption=True,
-                      preempt_policy="coin-flip")
+        ServingEngine(cfg, params, EngineConfig(slots=1, preemption=True,
+                      preempt_policy="coin-flip"))
     assert set(PREEMPT_POLICIES) == {"latest-deadline", "most-remaining"}
 
 
@@ -162,13 +163,13 @@ def test_preempt_restore_bit_identical(granite, prefix_cache):
     kw = dict(slots=1, window=64, max_seq=64, sync_every=1, chunk_prefill=0)
     samp = SamplingParams(temperature=0.7, top_k=20, top_p=0.95, seed=77)
 
-    ref_eng = ServingEngine(cfg, params, **kw)
+    ref_eng = ServingEngine(cfg, params, EngineConfig(**kw))
     ref = Request(0, _prompt(20), max_new_tokens=10, sampling=samp)
     assert ref_eng.try_admit(ref, 0.0)
     _drive(ref_eng, [ref])
 
-    eng = ServingEngine(cfg, params, **kw, preemption=True,
-                        prefix_cache=prefix_cache)
+    eng = ServingEngine(cfg, params, EngineConfig(**kw, preemption=True,
+                        prefix_cache=prefix_cache))
     victim = Request(0, _prompt(20), max_new_tokens=10, sampling=samp,
                      ttft_slo_s=100.0)
     assert eng.try_admit(victim, 0.0)
@@ -203,8 +204,8 @@ def test_preemption_never_evicts_equal_urgency(granite):
     evict a running request (no thrash: two equal requests would
     otherwise trade the slot forever)."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, sync_every=1,
-                        chunk_prefill=0, preemption=True)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, sync_every=1,
+                        chunk_prefill=0, preemption=True))
     a = Request(0, _prompt(12), max_new_tokens=20, ttft_slo_s=5.0)
     b = Request(1, _prompt(12, seed=1), max_new_tokens=20, ttft_slo_s=5.0)
     assert eng.try_admit(a, 0.0)

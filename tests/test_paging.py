@@ -9,6 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import forward, init_params
 from repro.serving import (
+    EngineConfig,
     PageAllocator,
     RequestState,
     SamplingParams,
@@ -35,7 +36,7 @@ def _prompt(n, seed=0):
 
 
 def _run(cfg, params, reqs, **kw):
-    eng = ServingEngine(cfg, params, **kw)
+    eng = ServingEngine(cfg, params, EngineConfig(**kw))
     for r in reqs:
         assert eng.try_admit(r, 0.0)
     t = 0.0
@@ -203,8 +204,8 @@ def test_explicit_paged_on_nonpageable_arch_raises():
     cfg = get_config("recurrentgemma-9b").reduced()
     params = init_params(cfg, jax.random.key(0))
     with pytest.raises(ValueError, match="non-pageable"):
-        ServingEngine(cfg, params, slots=1, paged=True)
-    eng = ServingEngine(cfg, params, slots=1)  # auto-fallback stays fine
+        ServingEngine(cfg, params, EngineConfig(slots=1, paged=True))
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1))  # auto-fallback stays fine
     assert not eng.paged
 
 
@@ -215,7 +216,7 @@ def test_paged_rejects_prompt_beyond_max_seq(granite):
     direct callers; ``submit`` converts it to a FAILED outcome so one bad
     request cannot crash a serving loop."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=32, max_seq=64)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=32, max_seq=64))
     with pytest.raises(ValueError, match="max_seq"):
         eng.try_admit(Request(0, _prompt(65), max_new_tokens=2), 0.0)
     # saturate the slot, then submit the poison request: it must resolve
@@ -241,7 +242,7 @@ def test_budget_cap_is_surfaced(granite):
     """When the page table truncates a request's token budget, the request
     says so instead of silently ending early."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, chunk_prefill=0))
     req = Request(0, _prompt(20), max_new_tokens=1000)  # 64-token cap
     assert eng.try_admit(req, 0.0)
     assert req.budget_capped and req.max_new_tokens == 64 - 20
@@ -265,8 +266,8 @@ def test_paged_single_trace_probes(granite):
     """Acceptance: the paged engine keeps one decode trace per step shape
     (tick + fused scan) and one prefill trace per bucket."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=4, window=128, chunk_prefill=0,
-                        sync_every=4)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=4, window=128, chunk_prefill=0,
+                        sync_every=4))
     assert eng.paged
     reqs = [Request(i, _prompt(p, seed=i), max_new_tokens=12)
             for i, p in enumerate((9, 12, 15, 16))]
@@ -293,8 +294,8 @@ def test_out_of_pages_backpressure(granite):
     cfg, params = granite
     # 5 usable pages of 16 tokens; each 33-token prompt buckets to 64
     # tokens = 4 pages, so the second admission cannot be covered.
-    eng = ServingEngine(cfg, params, slots=2, window=64, pool_pages=6,
-                        sync_every=1, chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=64, pool_pages=6,
+                        sync_every=1, chunk_prefill=0))
     assert eng.paged
     a = Request(0, _prompt(33, seed=1), max_new_tokens=4)
     b = Request(1, _prompt(33, seed=2), max_new_tokens=4)
@@ -316,8 +317,8 @@ def test_token_budget_reserved_at_admission(granite):
     cfg, params = granite
     # 2 usable pages: the 32-token bucket fits (2 pages) but the 20-token
     # decode tail needs a 3rd -> admission must refuse, not crash later.
-    eng = ServingEngine(cfg, params, slots=1, window=64, pool_pages=3,
-                        sync_every=1, chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, pool_pages=3,
+                        sync_every=1, chunk_prefill=0))
     assert not eng.try_admit(Request(0, _prompt(30), max_new_tokens=20), 0.0)
     assert eng.allocator.pages_in_use == 0
     # a request whose budget fits the reservation serves to completion
@@ -337,8 +338,8 @@ def test_out_of_pages_mid_decode_fails_only_that_request(granite):
     knobs) but is contained: it fails THAT request, frees its slot and
     pages, and the engine keeps serving everyone else."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=2, window=64, pool_pages=6,
-                        sync_every=1, chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=64, pool_pages=6,
+                        sync_every=1, chunk_prefill=0))
     bad = Request(0, _prompt(30), max_new_tokens=2)  # reserves 2 pages
     ok = Request(1, _prompt(30, seed=1), max_new_tokens=8)
     assert eng.try_admit(bad, 0.0)
@@ -383,7 +384,7 @@ def test_done_at_activation_releases_slot(granite):
     or a prompt filling max_seq) must finalize at activation — not zombie
     in its slot holding pages forever."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, chunk_prefill=0))
     req = Request(0, _prompt(10), max_new_tokens=1)
     assert eng.try_admit(req, 0.0)
     assert req.done and req.finish_time >= 0
@@ -399,8 +400,8 @@ def test_chunked_jobs_share_one_chunk_trace(granite):
     chunk step (the shared max_seq-wide job buffer), not retrace the full
     model per prompt length."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=2, window=64, max_seq=256,
-                        chunk_prefill=16)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=64, max_seq=256,
+                        chunk_prefill=16))
     t = 0.0
     for i, plen in enumerate((40, 72)):  # different padded lengths
         req = Request(i, _prompt(plen, seed=i), max_new_tokens=3)
@@ -415,8 +416,8 @@ def test_page_reuse_under_engine_churn(granite):
     """Sequential waves of requests through a bounded pool: every wave's
     pages are reclaimed, so the pool never monotonically fills."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=2, window=64, sync_every=2,
-                        chunk_prefill=0)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=64, sync_every=2,
+                        chunk_prefill=0))
     t = 0.0
     for wave in range(3):
         reqs = [Request(10 * wave + i, _prompt(20 + i, seed=wave * 7 + i),

@@ -8,6 +8,11 @@ laws after every step:
   * ``free_pages + pages_in_use == capacity`` (no page vanishes);
   * ``total_refs == slot-held refs + index-held refs`` (no refcount
     drift — this is the probe the chaos bench asserts hits zero);
+  * the scale-page ledger stays in lockstep with page ownership: a
+    quantized (int8) pool stores its fp32 dequant scales at the SAME
+    page ids as the KV values, so every alloc/share/free that touches a
+    KV page touches exactly that scale page — scale pages are never
+    allocated, aliased, or freed independently;
   * draining every slot and clearing the index returns the pool to
     exactly empty.
 
@@ -57,6 +62,12 @@ class _Churn:
         self.alloc = PageAllocator(POOL, PS)
         self.idx = PrefixIndex(self.alloc, PS)
         self.slots = {}  # slot -> prompt (unique token streams per slot)
+        # Mirrored int8 scale-page ledger: quantized pools address their
+        # fp32 scale pages by the SAME ids as the KV pages (one pool
+        # array per leaf, no separate allocation), so the host-side
+        # conservation rule is lockstep — a slot's scale pages are
+        # exactly its owned KV pages at every step.
+        self.scale_pages = {}  # slot -> page ids whose scales it holds
         self.uid = 0
 
     def admit(self, n_pages):
@@ -71,6 +82,7 @@ class _Churn:
         assert PageAllocator.TRASH_PAGE not in pages
         assert all(self.alloc.refcount(p) == 1 for p in pages)
         self.slots[slot] = prompt
+        self.scale_pages[slot] = list(pages)  # scales ride the same ids
 
     def share(self, src):
         """A second holder aliases src's pages (the COW admit path)."""
@@ -82,6 +94,8 @@ class _Churn:
         after = [self.alloc.refcount(p) for p in pages]
         assert after == [r + 1 for r in before]
         self.slots[slot] = self.slots[src]  # same stream, same keys
+        # COW aliasing shares values AND scales under one refcount
+        self.scale_pages[slot] = list(pages)
 
     def register(self, slot):
         prompt = self.slots[slot]
@@ -98,8 +112,11 @@ class _Churn:
                 assert self.alloc.refcount(p) >= 1
 
     def free(self, slot):
+        owned = self.scale_pages.pop(slot)
         freed = self.alloc.free_slot(slot)
         assert all(self.alloc.refcount(p) == 0 for p in freed)
+        # a freed KV page frees exactly its scale page, never another's
+        assert set(freed) <= set(owned)
         del self.slots[slot]
 
     def evict(self, n):
@@ -112,6 +129,11 @@ class _Churn:
 
     def check(self):
         _check_universe(self.alloc, self.idx, self.slots)
+        # scale-page conservation: per slot, scale ids == owned KV ids
+        assert sorted(self.scale_pages) == sorted(self.slots)
+        for s, pages in self.scale_pages.items():
+            assert sorted(pages) == sorted(self.alloc.owned(s))
+            assert PageAllocator.TRASH_PAGE not in pages
 
 
 def test_seeded_churn_conserves_pages_and_refs():

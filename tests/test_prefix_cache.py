@@ -9,6 +9,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import init_params
 from repro.serving import (
+    EngineConfig,
     PageAllocator,
     PrefixIndex,
     ServingEngine,
@@ -205,8 +206,8 @@ def test_prefix_hit_streams_identical_sync_suffix(granite):
     prompts = [tpl] + [np.concatenate([tpl, _prompt(n, seed=10 + n)])
                        for n in (5, 9, 17)]
     kw = dict(slots=1, window=64, max_seq=128, chunk_prefill=0, sync_every=2)
-    cold = ServingEngine(cfg, params, **kw)
-    warm = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    cold = ServingEngine(cfg, params, EngineConfig(**kw))
+    warm = ServingEngine(cfg, params, EngineConfig(prefix_cache=True, **kw))
     rc = _serve_each(cold, prompts)
     rw = _serve_each(warm, prompts)
     assert [r.output for r in rw] == [r.output for r in rc]
@@ -222,8 +223,8 @@ def test_prefix_hit_streams_identical_chunked_suffix(granite):
     tpl = _prompt(64, seed=4)
     long = np.concatenate([tpl, _prompt(40, seed=5)])
     kw = dict(slots=2, window=64, max_seq=256, chunk_prefill=16)
-    cold = ServingEngine(cfg, params, **kw)
-    warm = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    cold = ServingEngine(cfg, params, EngineConfig(**kw))
+    warm = ServingEngine(cfg, params, EngineConfig(prefix_cache=True, **kw))
     rc = _serve_each(cold, [tpl, long])
     rw = _serve_each(warm, [tpl, long])
     assert [r.output for r in rw] == [r.output for r in rc]
@@ -239,11 +240,11 @@ def test_cow_tail_page_shared_three_ways(granite):
     cfg, params = granite
     p = _prompt(32, seed=6)  # exactly 2 pages: duplicates share a COW tail
     kw = dict(slots=3, window=64, chunk_prefill=0, sync_every=2)
-    cold = ServingEngine(cfg, params, **kw)
+    cold = ServingEngine(cfg, params, EngineConfig(**kw))
     ref = [Request(i, p.copy(), max_new_tokens=6) for i in range(3)]
     _drive(cold, ref)
 
-    warm = ServingEngine(cfg, params, prefix_cache=True, **kw)
+    warm = ServingEngine(cfg, params, EngineConfig(prefix_cache=True, **kw))
     primer = Request(9, p.copy(), max_new_tokens=1)
     assert warm.try_admit(primer, 0.0)  # registers both pages, releases
     tail = warm.prefix_index.lookup(p).tail_page
@@ -279,8 +280,8 @@ def test_suffix_prefill_reuses_bucket_traces(granite):
     SUFFIX bucket — different hit lengths and suffix lengths inside one
     bucket must not retrace (prefill_traces stays flat)."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, max_seq=128,
-                        chunk_prefill=0, prefix_cache=True)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, max_seq=128,
+                        chunk_prefill=0, prefix_cache=True))
     base = _prompt(48, seed=7)
     _serve_each(eng, [base], budget=2)
     _serve_each(eng, [np.concatenate([base, _prompt(3, seed=70)])], budget=2)
@@ -297,8 +298,8 @@ def test_eviction_under_pool_pressure_admits(granite):
     to admit fresh work rather than backpressure forever."""
     cfg, params = granite
     # 1 slot x 4 pages working set + tiny cache headroom
-    eng = ServingEngine(cfg, params, slots=1, window=64, pool_pages=7,
-                        chunk_prefill=0, prefix_cache=True)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, pool_pages=7,
+                        chunk_prefill=0, prefix_cache=True))
     a = _prompt(30, seed=8)
     _serve_each(eng, [a], budget=2)
     assert eng.prefix_index.cached_pages == 1  # 30 tokens -> 1 full page
@@ -319,9 +320,9 @@ def test_zero_leaks_after_churned_workload(granite):
     exactly — after drain the pool holds only the index's pages, and a
     cache clear returns every refcount to zero."""
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=2, window=64, max_seq=64,
+    eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=64, max_seq=64,
                         pool_pages=17, chunk_prefill=0, sync_every=2,
-                        prefix_cache=True)
+                        prefix_cache=True))
     tpls = [_prompt(32, seed=s) for s in (20, 21)]
     rng = np.random.default_rng(0)
     t = 0.0
@@ -355,13 +356,13 @@ def test_prefix_cache_requires_paged():
     cfg = get_config("recurrentgemma-9b").reduced()
     params = init_params(cfg, jax.random.key(0))
     with pytest.raises(ValueError, match="prefix_cache"):
-        ServingEngine(cfg, params, slots=1, prefix_cache=True)
+        ServingEngine(cfg, params, EngineConfig(slots=1, prefix_cache=True))
 
 
 def test_load_report_and_reset_prefix_stats(granite):
     cfg, params = granite
-    eng = ServingEngine(cfg, params, slots=1, window=64, chunk_prefill=0,
-                        prefix_cache=True)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=1, window=64, chunk_prefill=0,
+                        prefix_cache=True))
     p = _prompt(32, seed=11)
     _serve_each(eng, [p, p], budget=2)
     rep = eng.load_report()

@@ -1,0 +1,452 @@
+"""Quantized serving path: int8 KV-cache pages + fused-dequant paged
+decode + weight-only int8, behind the frozen ``PrecisionConfig`` API.
+
+Coverage: config validation fails BEFORE any trace; the fused-dequant
+kernel matches the sort-free ref.py oracle (including exact score ties);
+the dequant-attention error is bounded by the closed-form sort-free
+bounds across page counts / head dims / scale granularities (hypothesis
+when available, seeded sweep always); the engine contracts (determinism,
+exact first token, prefix-cache hits and preempt/restore without page
+leaks) hold over quantized pools; and the capacity math (per-pool
+``kv_bytes_per_token`` -> ~2x admission slots) that motivates all of it.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import kv_bytes_per_token
+from repro.core.misd.batching import plan_admission
+from repro.kernels import ops, ref
+from repro.models import init_params, layers as L, quantize_weights
+from repro.models.blocks import dequantize_kv, quantize_kv
+from repro.serving import (
+    DeviceTopology,
+    EngineConfig,
+    LoadReport,
+    PrecisionConfig,
+    Request,
+    SamplingParams,
+    ServingEngine,
+)
+
+INT8_KV = PrecisionConfig(kv_cache_dtype="int8")
+F32 = jnp.float32
+
+
+@pytest.fixture(scope="module")
+def granite():
+    cfg = get_config("granite-8b").reduced()
+    return cfg, init_params(cfg, jax.random.key(0))
+
+
+def _prompt(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 500, n).astype(np.int32)
+
+
+def _mk(key, shape, dtype=F32):
+    return jax.random.normal(jax.random.key(key), shape, F32).astype(dtype)
+
+
+def _drive(eng, reqs, t0=0.0):
+    t = t0
+    while not all(r.done for r in reqs):
+        t += 1.0
+        eng.step(t)
+    eng.drain(t)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# PrecisionConfig: frozen value object, validation before any trace
+# ---------------------------------------------------------------------------
+
+
+def test_precision_config_frozen_validated_hashable():
+    p = PrecisionConfig(kv_cache_dtype="int8", weight_dtype="int8")
+    assert p.quantized_kv and p.quantized_weights
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.kv_cache_dtype = ""
+    with pytest.raises(ValueError, match="kv_cache_dtype"):
+        PrecisionConfig(kv_cache_dtype="fp4")
+    with pytest.raises(ValueError, match="weight_dtype"):
+        PrecisionConfig(weight_dtype="int4")
+    with pytest.raises(ValueError, match="kv_scale_granularity"):
+        PrecisionConfig(kv_scale_granularity="tensor")
+    # precision participates in EngineConfig value semantics
+    a, b = EngineConfig(precision=INT8_KV), EngineConfig(precision=INT8_KV)
+    assert a == b and hash(a) == hash(b)
+    assert a != EngineConfig()
+
+
+def test_validate_rejects_unservable_precision_before_trace():
+    """Every unsupported (precision, arch, layout) combination fails at
+    validate()/construction time with the fix in the message — never as
+    an XLA dtype error mid-trace."""
+    dense = get_config("granite-8b").reduced()
+    # quantized KV needs paged pools: rolling cache is out...
+    with pytest.raises(ValueError, match="paged"):
+        EngineConfig(paged=False, precision=INT8_KV).validate(dense)
+    # ...and so is every arch with rolling/recurrent-cache blocks
+    for arch in ("recurrentgemma_9b", "mamba2_1_3b", "hubert_xlarge"):
+        with pytest.raises(ValueError, match="pageable"):
+            EngineConfig(precision=INT8_KV).validate(
+                get_config(arch).reduced())
+    # weight-only int8 serves WEIGHT_QUANT_BLOCKS archs only
+    int8_w = PrecisionConfig(weight_dtype="int8")
+    for arch, bad in (("grok-1-314b", "moe"), ("mamba2_1_3b", "ssd")):
+        with pytest.raises(ValueError, match=bad):
+            EngineConfig(precision=int8_w).validate(
+                get_config(arch).reduced())
+    if jax.local_device_count() >= 8:  # topology check fires first
+        with pytest.raises(ValueError, match="sharded"):
+            EngineConfig(topology=DeviceTopology(tp=8),
+                         precision=int8_w).validate(dense)
+    # the supported combinations validate chainably
+    c = EngineConfig(precision=PrecisionConfig(kv_cache_dtype="int8",
+                                               weight_dtype="int8"))
+    assert c.validate(dense) is c
+
+
+def test_engine_construction_rejects_rolling_plus_int8(granite):
+    cfg, params = granite
+    with pytest.raises(ValueError, match="paged"):
+        ServingEngine(cfg, params,
+                      EngineConfig(paged=False, precision=INT8_KV))
+
+
+# ---------------------------------------------------------------------------
+# capacity math: per-pool byte cost -> admission slots
+# ---------------------------------------------------------------------------
+
+
+def test_kv_bytes_per_token_is_a_per_pool_property():
+    cfg = get_config("granite-8b").reduced()
+    full = kv_bytes_per_token(cfg)
+    quant = kv_bytes_per_token(cfg, "int8")
+    # int8 values + one fp32 scale per (token, kv-head) vector: at least
+    # the >= 1.8x capacity headline, approaching 4x as hd grows
+    assert full / quant >= 1.8
+    with pytest.raises(AssertionError, match="over-admit"):
+        kv_bytes_per_token(cfg, "fp8")
+
+
+def test_plan_admission_int8_roughly_doubles_memory_bound_slots():
+    """With the KV HBM budget binding (huge SLA, huge max_slots), int8
+    pages must buy >= 1.8x the concurrent slots of the f32 pool — the
+    regression probe for the old fixed bytes-per-token assumption."""
+    cfg = get_config("granite-8b").reduced()
+    budget = kv_bytes_per_token(cfg) * 512 * 8  # 8 f32 slots' worth
+    kw = dict(context=512, sla_s=1e9, max_slots=4096,
+              kv_hbm_budget_bytes=budget)
+    f32_plan = plan_admission(cfg, **kw)
+    i8_plan = plan_admission(cfg, **kw, kv_cache_dtype="int8")
+    assert f32_plan.slots == 8
+    assert i8_plan.slots / f32_plan.slots >= 1.8
+
+
+# ---------------------------------------------------------------------------
+# fused-dequant kernel vs the sort-free oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sq", [1, 4])
+@pytest.mark.parametrize("d", [32, 64])
+def test_paged_decode_int8_kernel_matches_oracle(sq, d):
+    """Scattered/permuted page tables, one partial slot, one fully
+    resident slot — the int8 kernel must match dequantize-then-exact."""
+    b, h, kv = 2, 4, 2
+    ps, pool_p = 16, 12
+    q = _mk(30, (b, sq, h, d))
+    kq, ks = quantize_kv(_mk(31, (pool_p, ps, kv, d)))
+    vq, vs = quantize_kv(_mk(32, (pool_p, ps, kv, d)))
+    table = jnp.asarray([[7, 3, 11, 0], [2, 9, 4, 6]], jnp.int32)
+    pos = jnp.asarray([ps * 2 + 5, ps * 4], jnp.int32)
+    out = ops.paged_decode_attention_int8(q, kq, vq, ks, vs, table, pos,
+                                          interpret=True)
+    want = ref.ref_paged_decode_attention_int8(q, kq, vq, ks, vs, table,
+                                               pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_decode_int8_kernel_value_ties():
+    """Exactly tied scores (duplicate key vectors across pages) must not
+    depend on visit order: every valid token gets the same softmax
+    weight, so the output is the mean of the dequantized values — and
+    the kernel, the sort-free oracle, and that closed form all agree."""
+    b, h, kv, d, ps = 1, 4, 2, 32, 8
+    pool_p, n_valid = 6, 12  # pages 3 and 5, second one partial
+    q = _mk(33, (b, 1, h, d))
+    k = jnp.ones((pool_p, ps, kv, d), F32) * 0.5  # all keys identical
+    kq, ks = quantize_kv(k)
+    assert int(jnp.max(jnp.abs(dequantize_kv(kq, ks, F32) - k))) == 0
+    vq, vs = quantize_kv(_mk(34, (pool_p, ps, kv, d)))
+    table = jnp.asarray([[3, 5]], jnp.int32)
+    pos = jnp.asarray([n_valid], jnp.int32)
+    out = ops.paged_decode_attention_int8(q, kq, vq, ks, vs, table, pos,
+                                          interpret=True)
+    want = ref.ref_paged_decode_attention_int8(q, kq, vq, ks, vs, table,
+                                               pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+    vd = dequantize_kv(vq, vs, F32)
+    rows = jnp.take(vd, table[0], axis=0).reshape(-1, kv, d)[:n_valid]
+    mean = jnp.mean(rows, axis=0)  # (kv, d): uniform tied weights
+    for hh in range(h):
+        np.testing.assert_allclose(np.asarray(out[0, 0, hh]),
+                                   np.asarray(mean[hh // (h // kv)]),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# error-vs-bound property: dequant attention stays inside the sort-free
+# closed-form bounds across page counts / head dims / scale granularity
+# ---------------------------------------------------------------------------
+
+
+def _bound_case(seed, n_pages, d, per_page_scales):
+    """One draw: exact f32 paged attention vs the int8 path, errors
+    checked against the score and output bounds from kernels/ref.py."""
+    b, h, kv, ps = 2, 4, 2, 8
+    w = ps * n_pages
+    rng = np.random.default_rng(seed)
+    scale_mag = float(rng.uniform(0.2, 4.0))  # vary dynamic range
+    q = _mk(seed * 3 + 1, (b, 1, h, d)) * scale_mag
+    kc = _mk(seed * 3 + 2, (b, w, kv, d)) * scale_mag
+    vc = _mk(seed * 3 + 3, (b, w, kv, d)) * scale_mag
+    k_pool = kc.reshape(b * n_pages, ps, kv, d)
+    v_pool = vc.reshape(b * n_pages, ps, kv, d)
+    table = jnp.arange(b * n_pages, dtype=jnp.int32).reshape(b, n_pages)
+    pos = jnp.asarray([int(rng.integers(1, w + 1)), w], jnp.int32)
+    group = ps if per_page_scales else 0
+    kq, ks = quantize_kv(k_pool, group)
+    vq, vs = quantize_kv(v_pool, group)
+
+    # score bound: mask-agnostic, so check it over EVERY (q, k) pair
+    g = h // kv
+    k_deq = dequantize_kv(kq, ks, F32).reshape(b, w, kv, d)
+    sc = lambda kk: jnp.einsum(
+        "bqhd,bwhd->bhqw", q, jnp.repeat(kk, g, axis=2)) * d ** -0.5
+    score_err = float(jnp.max(jnp.abs(sc(k_deq) - sc(kc))))
+    eps = float(ref.int8_attention_score_bound(q, ks))
+    assert score_err <= eps + 1e-6, (score_err, eps)
+
+    # output bound: quantized-path output vs the exact f32 oracle
+    exact = ref.ref_paged_decode_attention(q, k_pool, v_pool, table, pos)
+    quant = ref.ref_paged_decode_attention_int8(q, kq, vq, ks, vs, table,
+                                                pos)
+    out_err = float(jnp.max(jnp.abs(quant - exact)))
+    v_deq = dequantize_kv(vq, vs, F32)
+    bound = float(ref.int8_attention_output_bound(q, ks, vs, v_deq))
+    assert out_err <= bound + 1e-6, (out_err, bound)
+    assert out_err < bound  # conservative: never tight to the last ulp
+
+
+@pytest.mark.parametrize("n_pages", [1, 2, 4])
+@pytest.mark.parametrize("d", [32, 64])
+@pytest.mark.parametrize("per_page_scales", [False, True],
+                         ids=["token-scales", "page-scales"])
+def test_int8_attention_error_within_bound_seeded(n_pages, d,
+                                                  per_page_scales):
+    """Deterministic sweep (runs everywhere) of the hypothesis property
+    below: page counts x head dims x scale granularity x seeds."""
+    for seed in (1, 7, 23):
+        _bound_case(seed, n_pages, d, per_page_scales)
+
+
+def test_int8_attention_error_within_bound_property():
+    """hypothesis: for random shapes/magnitudes the dequant-attention
+    error never exceeds the closed-form sort-free bounds."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(0, 10 ** 6), st.sampled_from([1, 2, 4]),
+           st.sampled_from([32, 64]), st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def prop(seed, n_pages, d, per_page_scales):
+        _bound_case(seed, n_pages, d, per_page_scales)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# weight-only int8: kernels/int8_matmul.py semantics through layers
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_weights_matches_int8_matmul_semantics(granite):
+    cfg, params = granite
+    qp = quantize_weights(cfg, params)
+    stacked = qp["body"][0]["attn"]["wq"]  # scanned body: (layers, d, e)
+    assert stacked["w_q"].dtype == jnp.int8
+    # per-OUTPUT-channel scales, keepdims so scan slicing still works
+    assert stacked["scale"].dtype == F32 and stacked["scale"].shape[-2] == 1
+    w = params["body"][0]["attn"]["wq"][0]  # one scanned layer, (d, e)
+    leaf = {"w_q": stacked["w_q"][0], "scale": stacked["scale"][0]}
+    d, e = w.shape
+    x = _mk(40, (2, 3, d))
+    got = L.linear(x, leaf, "bsd,de->bse")
+    # same math as the int8_matmul reference (matmul-then-scale, f32 acc)
+    want = ref.ref_int8_matmul(x.reshape(-1, d), leaf["w_q"],
+                               leaf["scale"][0])
+    np.testing.assert_allclose(np.asarray(got.reshape(-1, e)),
+                               np.asarray(want), atol=1e-4, rtol=1e-4)
+    # and close to the f32 layer: per-output-channel scales keep the
+    # relative error at int8 rounding level
+    exact = L.linear(x, w, "bsd,de->bse")
+    rel = float(jnp.max(jnp.abs(got - exact)) / jnp.max(jnp.abs(exact)))
+    assert rel < 0.02, rel
+    # non-matmul leaves are untouched (embed/lm_head/norms stay f32)
+    assert qp["embed"] is params["embed"]
+    assert qp["body"][0]["norm1"] is params["body"][0]["norm1"]
+
+
+# ---------------------------------------------------------------------------
+# engine contracts over quantized pools
+# ---------------------------------------------------------------------------
+
+
+def _run_stream(cfg, params, ec, *, n=24, budget=8, sampling=None):
+    eng = ServingEngine(cfg, params, ec)
+    req = Request(0, _prompt(n), max_new_tokens=budget,
+                  sampling=sampling or SamplingParams())
+    assert eng.try_admit(req, 0.0)
+    _drive(eng, [req])
+    return list(req.output), eng
+
+
+@pytest.mark.parametrize("sampling", [None,
+                         SamplingParams(temperature=0.7, top_k=20,
+                                        top_p=0.95, seed=11)],
+                         ids=["greedy", "sampled"])
+def test_engine_int8_deterministic_exact_first_token(granite, sampling):
+    """Prefill attends over EXACT pre-quantization K/V (only the cache
+    writes quantize), so token 1 matches the f32 engine bit-exactly;
+    the int8 stream itself is bit-identical across runs."""
+    cfg, params = granite
+    kw = dict(slots=2, window=64, chunk_prefill=0)
+    f32_out, _ = _run_stream(cfg, params, EngineConfig(paged=True, **kw),
+                             sampling=sampling)
+    i8_out, eng = _run_stream(
+        cfg, params, EngineConfig(paged=True, precision=INT8_KV, **kw),
+        sampling=sampling)
+    again, _ = _run_stream(
+        cfg, params, EngineConfig(paged=True, precision=INT8_KV, **kw),
+        sampling=sampling)
+    assert i8_out[0] == f32_out[0]
+    assert i8_out == again
+    assert eng.kv_dtype == "int8"
+    assert eng.cache["body"][0]["k"].dtype == jnp.int8
+    assert eng.cache["body"][0]["k_scale"].dtype == jnp.float32
+
+
+def test_engine_int8_prefix_cache_hits_and_no_leaks(granite):
+    """Prefix sharing over quantized pools: aliased int8 pages (values +
+    scales travel together under the same page ids) still hit, and the
+    drain + clear returns the pool to exactly empty."""
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, window=64, prefix_cache=True, precision=INT8_KV,
+        chunk_prefill=0))
+    tpl = _prompt(40, seed=3)
+    a = Request(0, tpl.copy(), max_new_tokens=4)
+    assert eng.try_admit(a, 0.0)
+    _drive(eng, [a])
+    b = Request(1, np.concatenate([tpl, _prompt(6, seed=4)]),
+                max_new_tokens=4)
+    assert eng.try_admit(b, 0.0)
+    _drive(eng, [b])
+    assert eng.metrics.prefix_hits >= 1
+    assert b.prefix_hit_tokens > 0
+    rep = eng.load_report()
+    assert rep.kv_cache_dtype == "int8"
+    assert eng.allocator.pages_in_use == eng.prefix_index.cached_pages
+    eng.clear_prefix_cache()
+    assert eng.allocator.pages_in_use == 0
+    assert eng.allocator.total_refs == 0
+
+
+def test_engine_int8_preempt_restore_leak_free_and_deterministic(granite):
+    """Preemption over quantized pools. Unlike the lossless engine
+    (bit-identical restore, asserted in test_lifecycle.py), int8 restore
+    is NOT bit-identical to the undisturbed stream by construction: the
+    recompute's hidden states attend over exact pre-quantization K/V
+    where the original decode saw dequantized pages. The int8 contract
+    is therefore: tokens generated BEFORE the preemption are kept
+    verbatim, the whole disturbed run is deterministic (identical on
+    rerun), and no page or refcount survives the churn."""
+    cfg, params = granite
+    kw = dict(slots=1, window=64, max_seq=64, sync_every=1,
+              chunk_prefill=0, precision=INT8_KV)
+    samp = SamplingParams(temperature=0.7, top_k=20, top_p=0.95, seed=77)
+    ref_out, _ = _run_stream(cfg, params, EngineConfig(**kw), n=20,
+                             budget=10, sampling=samp)
+
+    def disturbed():
+        eng = ServingEngine(cfg, params, EngineConfig(
+            **kw, preemption=True, prefix_cache=True))
+        victim = Request(0, _prompt(20), max_new_tokens=10, sampling=samp,
+                         ttft_slo_s=100.0)
+        assert eng.try_admit(victim, 0.0)
+        for t in (1.0, 2.0, 3.0):
+            eng.step(t)
+        pre = len(victim.output)
+        assert pre >= 2  # mid-decode when the preemptor lands
+        hot = Request(1, _prompt(10, seed=9), max_new_tokens=3,
+                      priority=1, ttft_slo_s=1.0,
+                      sampling=SamplingParams(temperature=0.7, top_k=20,
+                                              top_p=0.95, seed=78))
+        eng.submit(hot, 3.0)
+        t = 3.0
+        while not (victim.done and hot.done):
+            t += 1.0
+            eng.step(t)
+        eng.drain(t)
+        assert victim.preemptions >= 1
+        # pre-preemption tokens are preserved, not regenerated
+        assert list(victim.output[:pre]) == ref_out[:pre]
+        assert len(victim.output) == 10
+        eng.clear_prefix_cache()
+        assert eng.allocator.pages_in_use == 0
+        assert eng.allocator.total_refs == 0
+        return list(victim.output)
+
+    assert disturbed() == disturbed()  # quantized restore is deterministic
+
+
+# ---------------------------------------------------------------------------
+# LoadReport v5: precision on the wire
+# ---------------------------------------------------------------------------
+
+
+def test_load_report_v5_precision_fields(granite):
+    import json
+
+    cfg, params = granite
+    eng = ServingEngine(cfg, params, EngineConfig(
+        slots=2, window=64, paged=True, precision=INT8_KV))
+    rep = eng.load_report()
+    assert rep.kv_cache_dtype == "int8" and rep.weight_dtype == ""
+    assert rep.kv_bytes_per_token == kv_bytes_per_token(cfg, "int8")
+    assert LoadReport.from_dict(json.loads(json.dumps(rep.to_dict()))) \
+        == rep
+
+
+def test_load_report_v4_upgrade_defaults_precision_fields():
+    """A v4 (overload-control era) wire dict upgrades through the table:
+    the v5 fields backfill to 'unknown, assume model dtype'."""
+    v4 = {"slots": 4, "free_slots": 4, "queued_requests": 0,
+          "queued_prefill_tokens": 0, "decode_tokens_remaining": 0,
+          "free_pages": -1, "total_pages": 0, "backlog_s": 0.0,
+          "tick_est_s": 0.01, "queued_prefill_s": 0.0,
+          "schema_version": 4, "browned_out": 3,
+          "tenant_stats": [["t0", [1, 1, 8, 0, 0, 0, 0, 0, 0], []]]}
+    rep = LoadReport.from_dict(v4)
+    assert rep.kv_bytes_per_token == 0.0
+    assert rep.kv_cache_dtype == "" and rep.weight_dtype == ""
+    assert rep.browned_out == 3  # v4 payload rides through untouched

@@ -12,7 +12,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import init_params, process_logits
-from repro.serving import Request, SamplingParams, ServingEngine
+from repro.serving import EngineConfig, Request, SamplingParams, ServingEngine
 
 SP = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, seed=7)
 
@@ -43,7 +43,7 @@ def _serve(eng, reqs, *, t0=0.0):
 def _streams(cfg, params, rids, *, sampling=None, engine=None, **kw):
     """Serve one request per rid (prompt/seed keyed by rid); returns
     {rid: output}. ``sampling`` may be a callable rid -> SamplingParams."""
-    eng = engine or ServingEngine(cfg, params, **kw)
+    eng = engine or ServingEngine(cfg, params, EngineConfig(**kw))
     if engine is not None:
         eng.reset()
     reqs = []
@@ -148,8 +148,8 @@ def test_sampled_stream_survives_every_admission_path(granite):
     prompt = _prompt(40, seed=9)
 
     def run(**kw):
-        eng = ServingEngine(cfg, params, slots=2, window=128, sync_every=4,
-                            **kw)
+        eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=128, sync_every=4,
+                            **kw))
         r = Request(rid=0, prompt=prompt, max_new_tokens=8, sampling=SP)
         assert eng.try_admit(r, 0.0)
         t = 0.0
@@ -163,8 +163,8 @@ def test_sampled_stream_survives_every_admission_path(granite):
     chunked, _ = run(chunk_prefill=16)
     assert chunked == single
 
-    eng = ServingEngine(cfg, params, slots=2, window=128, sync_every=4,
-                        prefix_cache=True)
+    eng = ServingEngine(cfg, params, EngineConfig(slots=2, window=128, sync_every=4,
+                        prefix_cache=True))
     cold = Request(rid=0, prompt=prompt, max_new_tokens=8, sampling=SP)
     assert eng.try_admit(cold, 0.0)
     t = 0.0

@@ -12,7 +12,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.models import init_params
-from repro.serving import SamplingParams, ServingEngine
+from repro.serving import EngineConfig, SamplingParams, ServingEngine
 from test_sampling import _streams
 
 
@@ -57,10 +57,10 @@ def cache_pair(granite):
     reference streams."""
     cfg, params = granite
     engines = {
-        "paged": ServingEngine(cfg, params, slots=2, window=64,
-                               sync_every=4, paged=True),
-        "rolling": ServingEngine(cfg, params, slots=2, window=64,
-                                 sync_every=4, paged=False),
+        "paged": ServingEngine(cfg, params, EngineConfig(slots=2, window=64,
+                               sync_every=4, paged=True)),
+        "rolling": ServingEngine(cfg, params, EngineConfig(slots=2, window=64,
+                                 sync_every=4, paged=False)),
     }
     greedy = {}
     for name, eng in engines.items():
